@@ -1,0 +1,72 @@
+"""Shared benchmark plumbing: cached policy training + suite evaluation."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (CollectConfig, EnvConfig, MTMCPipeline,
+                        MacroPolicy, PPOConfig, PPOTrainer, PolicyConfig,
+                        collect_suite, evaluate_suite)
+from repro.core import tasks as T
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+POLICY_PATH = os.path.join(RESULTS, "macro_policy.pkl")
+
+
+def train_policy(iters: int = 24, episodes: int = 8, seed: int = 0,
+                 pcfg: PolicyConfig = PolicyConfig()) -> MacroPolicy:
+    trees = collect_suite(
+        T.train_tasks(),
+        CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed))
+    trainer = PPOTrainer(
+        trees, pcfg=pcfg,
+        cfg=PPOConfig(iters=iters, episodes_per_iter=episodes, seed=seed,
+                      max_candidates=32, lr=1e-3, entropy_coef=0.02))
+    policy = trainer.train()
+    policy.train_log = trainer.log
+    return policy
+
+
+def cached_policy(retrain: bool = False, **kw) -> MacroPolicy:
+    os.makedirs(RESULTS, exist_ok=True)
+    if not retrain and os.path.exists(POLICY_PATH):
+        with open(POLICY_PATH, "rb") as f:
+            blob = pickle.load(f)
+        pol = MacroPolicy(blob["cfg"], params=jax.tree.map(
+            jax.numpy.asarray, blob["params"]))
+        pol.train_log = blob.get("log", [])
+        return pol
+    pol = train_policy(**kw)
+    with open(POLICY_PATH, "wb") as f:
+        pickle.dump({"cfg": pol.cfg,
+                     "params": jax.tree.map(np.asarray, pol.params),
+                     "log": getattr(pol, "train_log", [])}, f)
+    return pol
+
+
+def eval_mode(suite, mode: str, policy=None, curated: bool = True,
+              seed: int = 0, max_steps: int = 8) -> dict:
+    pipe = MTMCPipeline(policy, mode=mode, curated=curated, seed=seed,
+                        max_steps=max_steps)
+    t0 = time.time()
+    out = evaluate_suite(suite, pipe)
+    out["wall_s"] = time.time() - t0
+    return out
+
+
+def fmt_row(table: str, name: str, metrics: dict) -> str:
+    """CSV: name,us_per_call,derived (spec format)."""
+    times = [1e6 * _prog_time(r.program) for r in metrics["results"]]
+    return (f"{table}/{name},{np.mean(times):.1f},"
+            f"acc={metrics['accuracy']:.2f};"
+            f"fast1={metrics['fast1']:.2f};fast2={metrics['fast2']:.2f};"
+            f"speedup={metrics['mean_speedup']:.2f}")
+
+
+def _prog_time(prog) -> float:
+    from repro.core import program_cost
+    return program_cost(prog).total_s

@@ -1,0 +1,68 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modeled kernel times come
+from the v5e roofline cost model (this container has no TPU); accuracy is
+real (every optimized program is executed and checked against the task
+oracle on CPU).
+
+  python -m benchmarks.run [--tables 3,4,5,6,7] [--retrain] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import RESULTS, cached_policy  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="3,4,5,6,7")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer PPO iters (CI smoke)")
+    args = ap.parse_args()
+    tables = set(args.tables.split(","))
+
+    kw = dict(iters=4, episodes=4) if args.fast else {}
+    policy = cached_policy(retrain=args.retrain, **kw)
+    rows: list[str] = []
+    print("name,us_per_call,derived")
+
+    def emit(new_rows):
+        for r in new_rows:
+            print(r, flush=True)
+        rows.extend(new_rows)
+
+    if "3" in tables:
+        from benchmarks import table3_kernelbench
+        emit(table3_kernelbench.run(policy))
+    if "4" in tables:
+        from benchmarks import table4_tritonbench
+        emit(table4_tritonbench.run(policy))
+    if "5" in tables:
+        from benchmarks import table5_target
+        emit(table5_target.run(policy))
+    if "6" in tables:
+        from benchmarks import table6_hier
+        emit(table6_hier.run(policy))
+    if "7" in tables:
+        from benchmarks import table7_policy
+        emit(table7_policy.run(policy))
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "benchmarks.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n" + "\n".join(rows) + "\n")
+    if getattr(policy, "train_log", None):
+        with open(os.path.join(RESULTS, "policy_training.json"),
+                  "w") as f:
+            json.dump(policy.train_log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

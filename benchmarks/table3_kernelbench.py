@@ -1,0 +1,24 @@
+"""Paper Table 3 — KernelBench-like: accuracy / fast_p / mean speedup by
+level, MTMC (trained policy) vs baselines (untrained-LM proxy for
+general-purpose LLMs, random policy)."""
+from __future__ import annotations
+
+from benchmarks.common import eval_mode, fmt_row
+from repro.core import tasks as T
+
+
+def run(policy) -> list[str]:
+    rows = []
+    for level, suite_fn in [("L1", T.kb_level1), ("L2", T.kb_level2),
+                            ("L3", T.kb_level3)]:
+        suite = suite_fn()
+        for mode, pol in [("ours", policy), ("untrained", None),
+                          ("random", None)]:
+            from repro.core import MacroPolicy
+            p = pol if mode == "ours" else (
+                MacroPolicy() if mode == "untrained" else None)
+            m = eval_mode(suite, "policy" if mode == "ours" else
+                          ("untrained" if mode == "untrained" else
+                           "random"), p)
+            rows.append(fmt_row("table3", f"{level}/{mode}", m))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Table 4 — TritonBench-like (TB-T common ops / TB-G real-world):
+call+execute accuracy and speedups, MTMC vs baselines."""
+from __future__ import annotations
+
+from benchmarks.common import eval_mode, fmt_row
+from repro.core import MacroPolicy
+from repro.core import tasks as T
+
+
+def run(policy) -> list[str]:
+    rows = []
+    for name, suite_fn in [("T", T.tb_t), ("G", T.tb_g)]:
+        suite = suite_fn()
+        for mode, p in [("ours", policy), ("untrained", MacroPolicy()),
+                        ("random", None)]:
+            m = eval_mode(suite, "policy" if mode == "ours" else
+                          ("untrained" if mode == "untrained" else
+                           "random"), p if mode != "random" else None)
+            rows.append(fmt_row("table4", f"TB-{name}/{mode}", m))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Table 5 — target-language ablation.
+
+The paper compares Triton vs CUDA generation targets on matmul-family
+tasks.  Our analogue: the full Pallas schedule space (tiling + fusion +
+pipeline + reorder) vs an XLA-fusion-only target (fusion actions only —
+schedules stay at defaults), measuring modeled execution time per task.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MTMCPipeline, program_cost
+from repro.core import tasks as T
+
+
+class _FusionOnlyPipeline(MTMCPipeline):
+    def _select(self, prog, cands, key, rng):
+        cands = [c for c in cands
+                 if c.kind in ("fusion", "stop")] or cands
+        return super()._select(prog, cands, key, rng)
+
+
+def run(policy) -> list[str]:
+    suite = [t for t in T.kb_level1() + T.kb_level2()
+             if "matmul" in t.name or "gemm" in t.name
+             or "mlp" in t.name]
+    rows = []
+    for name, pipe in [
+            ("pallas_full", MTMCPipeline(mode="greedy_cost",
+                                         max_steps=8)),
+            ("xla_fusion_only", _FusionOnlyPipeline(mode="greedy_cost",
+                                                    max_steps=8))]:
+        times = []
+        for t in suite:
+            r = pipe.optimize(t)
+            times.append(program_cost(r.program).total_s * 1e6)
+        rows.append(f"table5/{name},{np.mean(times):.1f},"
+                    f"per_task_us={';'.join(f'{x:.1f}' for x in times)}")
+    return rows

@@ -1,0 +1,18 @@
+"""Paper Table 6 — hierarchical stepwise vs single-pass ("w/o Hier"):
+feeding the whole optimization plan at once degrades accuracy/speedup."""
+from __future__ import annotations
+
+from benchmarks.common import eval_mode, fmt_row
+from repro.core import tasks as T
+
+
+def run(policy) -> list[str]:
+    rows = []
+    for level, suite_fn in [("L1", T.kb_level1), ("L2", T.kb_level2),
+                            ("L3", T.kb_level3)]:
+        suite = suite_fn()
+        m = eval_mode(suite, "policy", policy)
+        rows.append(fmt_row("table6", f"{level}/ours_stepwise", m))
+        m = eval_mode(suite, "single_pass", None)
+        rows.append(fmt_row("table6", f"{level}/single_pass_w/o_hier", m))
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Table 7 — Macro Thinking ablation grid:
+  w/ policy + AS      : trained policy (x2 backbone sizes)
+  w/o policy + AS     : random / untrained-LM over the curated space
+  w/o policy + w/o AS : untrained-LM over unrestricted proposals
+on a 10%-style subset of the benchmark tasks (paper's protocol)."""
+from __future__ import annotations
+
+from benchmarks.common import eval_mode, fmt_row
+from repro.core import MacroPolicy, PolicyConfig
+from repro.core import tasks as T
+
+
+def _subset():
+    return [T.kb_level1()[0], T.kb_level1()[5], T.kb_level2()[0],
+            T.kb_level2()[3], T.kb_level3()[0]]
+
+
+def run(policy, small_policy=None) -> list[str]:
+    suite = _subset()
+    rows = []
+    rows.append(fmt_row("table7", "w_policy_AS/ds-coder-proxy",
+                        eval_mode(suite, "policy", policy)))
+    if small_policy is not None:
+        rows.append(fmt_row("table7", "w_policy_AS/llama-proxy-small",
+                            eval_mode(suite, "policy", small_policy)))
+    rows.append(fmt_row("table7", "wo_policy_AS/random",
+                        eval_mode(suite, "random", None)))
+    rows.append(fmt_row("table7", "wo_policy_AS/untrained-lm",
+                        eval_mode(suite, "untrained", MacroPolicy())))
+    rows.append(fmt_row("table7", "wo_policy_woAS/untrained-lm",
+                        eval_mode(suite, "untrained", MacroPolicy(),
+                                  curated=False)))
+    return rows

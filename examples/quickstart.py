@@ -1,0 +1,35 @@
+"""Quickstart: optimize one kernel with MTMC and inspect the trace.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Takes the naive (unfused, default-tiled) attention program — the
+"PyTorch Eager"-style baseline — and runs the Macro-Thinking /
+Micro-Coding loop.  Watch it discover the flash-attention fusion, then
+tile it, with every step validated against the oracle.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import MTMCPipeline, program_cost  # noqa: E402
+from repro.core import tasks  # noqa: E402
+
+task = tasks._attn_program("quickstart_attention", B=2, S=1024, H=8,
+                           hd=64)
+print(f"task: {task.name}")
+print(f"  naive kernels: {[n.op for n in task.nodes]}")
+c0 = program_cost(task)
+print(f"  naive modeled time: {c0.total_s * 1e6:.1f} us "
+      f"(bottleneck: {c0.bottleneck})")
+
+pipe = MTMCPipeline(mode="greedy_cost", max_steps=8)
+result = pipe.optimize(task)
+
+print("\noptimization trace:")
+for i, step in enumerate(result.trace):
+    print(f"  {i + 1}. {step}")
+c1 = program_cost(result.program)
+print(f"\nfinal kernels: {[n.op for n in result.program.nodes]}")
+print(f"final modeled time: {c1.total_s * 1e6:.1f} us")
+print(f"speedup: {result.speedup:.2f}x   "
+      f"correct: {result.correct} (validated vs oracle)")

@@ -1,0 +1,198 @@
+"""Model/run configuration system.
+
+One ``ModelConfig`` describes any architecture in the zoo (dense / moe /
+rwkv / hybrid / encdec / vlm).  Exact assigned configs live in
+``src/repro/configs/<id>.py``; each exposes ``CONFIG``.
+
+``normalize_for_mesh`` applies the TP padding policy (q-heads and vocab are
+padded up to multiples of the model-axis size; zero-padded rows/cols keep
+the math exact — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+Family = Literal["dense", "moe", "rwkv", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    # dense-family options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm / rwkv
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    # hybrid (hymba): sliding-window layers + a few global layers
+    swa_window: int = 0
+    global_layers: tuple[int, ...] = ()
+    # vlm / audio: length of precomputed frontend embeddings (stub)
+    prefix_len: int = 0
+    # encdec
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    enc_len: int = 1536                    # encoder sequence for serve shapes
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    # book-keeping for padding (set by normalize_for_mesh)
+    true_n_heads: int = 0
+    true_vocab_size: int = 0
+    # which shapes this arch supports (see configs/shapes.py)
+    supports_long_context: bool = False    # sub-quadratic path exists
+    has_decoder: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.true_n_heads == 0:
+            object.__setattr__(self, "true_n_heads", self.n_heads)
+        if self.true_vocab_size == 0:
+            object.__setattr__(self, "true_vocab_size", self.vocab_size)
+
+    # ----- derived quantities -------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // math.gcd(self.n_heads, self.n_kv_heads) \
+            if self.n_kv_heads else 0
+
+    def n_params(self, active_only: bool = False) -> int:
+        """Parameter count (true, unpadded).  MoE: total or active."""
+        d, ff, v = self.d_model, self.d_ff, self.true_vocab_size
+        hd = self.head_dim
+        attn = d * self.true_n_heads * hd * 2 + d * self.kv_dim * 2
+        if self.qkv_bias:
+            attn += self.true_n_heads * hd + 2 * self.kv_dim
+        mlp = 3 * d * ff
+        if self.family == "moe":
+            n_e = self.top_k if active_only else self.n_experts
+            mlp = 3 * d * ff * n_e + d * self.n_experts  # + router
+        if self.family == "rwkv":
+            # time-mix projections r,k,v,g,o + decay lora + channel-mix
+            attn = 5 * d * d + 2 * d * 64
+            mlp = 2 * d * ff
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            attn += 2 * d * d_in + d_in * d + d_in * (2 * self.ssm_state + 1)
+        norms = 2 * d
+        per_layer = attn + mlp + norms
+        n_l = self.n_layers + self.encoder_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = per_layer * n_l + emb + d
+        if self.cross_attention:
+            total += self.n_layers * (attn + d)
+        return int(total)
+
+
+def normalize_for_mesh(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad q-heads and vocab to multiples of the tensor-parallel degree.
+
+    Zero-padded q-heads attend uniformly but their W_o rows are zero, so
+    the output is exact; padded vocab logits are masked at the loss.
+
+    GQA: the padded q-head count must stay a multiple of n_kv_heads
+    (grouping correctness) — if it can't (hymba: 25 q / 5 kv with tp=16),
+    heads are left unpadded and the attention projections replicate
+    across the model axis instead (divisibility-aware ShardingRules);
+    the MLP/embedding still shard.  MHA-style families (n_kv == n_heads,
+    incl. rwkv) pad q and kv together.
+    """
+    n_heads = -(-cfg.n_heads // tp) * tp
+    n_kv = cfg.n_kv_heads
+    if n_kv and n_kv == cfg.n_heads:
+        n_kv = n_heads                       # MHA / rwkv: pad together
+    elif n_kv and n_heads % n_kv != 0:
+        n_heads = cfg.n_heads                # GQA unsatisfiable: no pad
+    vocab = -(-cfg.vocab_size // tp) * tp
+    return dataclasses.replace(
+        cfg, n_heads=n_heads, n_kv_heads=n_kv, vocab_size=vocab,
+        true_n_heads=cfg.true_n_heads, true_vocab_size=cfg.true_vocab_size)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: training or serving geometry."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(applicable?, reason-if-not). Encodes the skip policy of the spec."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention only; 500k KV cache is "
+                       "out of scope per spec (sub-quadratic archs only)")
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only architecture has no decode step"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Training/serving hyper-parameters attached to a model+shape."""
+    microbatch_bytes_budget: float = 2.5e9   # per-device activation budget
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    fsdp: bool = True
+    remat: bool = True
+    accum_steps: int = 0   # 0 = auto from memory budget
+    # §Perf: all-gather FSDP params ONCE per step (outside the microbatch
+    # loop) instead of per microbatch; grads reduce-scatter once at the
+    # end.  Trades a held bf16 param copy for ~accum x less ICI traffic.
+    gather_once: bool = False
+
+
+def auto_accum_steps(cfg: ModelConfig, shape: ShapeConfig, dp: int,
+                     budget_bytes: float = 2.5e9) -> int:
+    """Pick grad-accumulation so per-device live activations fit budget.
+
+    Live set under scan+remat = one residual stream per layer
+    (B_local, S, d) bf16 + logits for the live microbatch.
+    """
+    if shape.kind != "train":
+        return 1
+    b_local = max(1, shape.global_batch // dp)
+    n_l = cfg.n_layers + cfg.encoder_layers
+    per_batch_row = shape.seq_len * cfg.d_model * 2 * n_l
+    accum = 1
+    while b_local // accum > 1 and (b_local // accum) * per_batch_row > budget_bytes:
+        accum *= 2
+    return accum

@@ -1,0 +1,22 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in every layer,
+sliding-window attention except 3 global layers, ssm_state=16.
+[arXiv:2411.13676]  SSM path carries O(1) state => long-context OK.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_expand=2,
+    swa_window=1024,
+    global_layers=(0, 16, 31),
+    supports_long_context=True,
+)

@@ -1,0 +1,19 @@
+"""paligemma-3b [vlm] — SigLIP frontend (STUB embeddings per spec) + Gemma
+backbone, MQA (kv=1), head_dim=256. [arXiv:2407.07726]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    prefix_len=256,      # SigLIP 224px/14 -> 256 patch embeddings (stub)
+)

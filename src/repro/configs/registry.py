@@ -1,0 +1,70 @@
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+Exact assigned configs (see DESIGN.md §4).  Reduced configs of the same
+family for CPU smoke tests are produced by ``reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = [
+    "qwen2_5_3b",
+    "yi_34b",
+    "qwen3_14b",
+    "qwen2_5_32b",
+    "rwkv6_3b",
+    "paligemma_3b",
+    "phi3_5_moe_42b",
+    "dbrx_132b",
+    "hymba_1_5b",
+    "seamless_m4t_medium",
+]
+
+# accept the hyphenated spec spelling too
+ALIASES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "yi-34b": "yi_34b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "rwkv6-3b": "rwkv6_3b",
+    "paligemma-3b": "paligemma_3b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "dbrx-132b": "dbrx_132b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        swa_window=min(cfg.swa_window, 16) if cfg.swa_window else 0,
+        global_layers=(0,) if cfg.global_layers else (),
+        prefix_len=8 if cfg.prefix_len else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        enc_len=16,
+        true_n_heads=4,
+        true_vocab_size=256,
+    )

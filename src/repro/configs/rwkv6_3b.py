@@ -1,0 +1,17 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay, attention-free.
+[arXiv:2404.05892]  head_dim=64 -> 40 heads; O(1) state => long-context OK.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="rwkv",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,          # rwkv6 heads: d_model / 64
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    supports_long_context=True,
+)

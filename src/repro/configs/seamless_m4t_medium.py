@@ -1,0 +1,21 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal; speech frontend is a
+STUB (input_specs() provides precomputed frame embeddings per spec).
+[arXiv:2308.11596]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,           # decoder layers
+    encoder_layers=12,
+    cross_attention=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    enc_len=1536,          # audio frames after frontend stub
+    rope_theta=1e4,
+)

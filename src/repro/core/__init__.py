@@ -1,0 +1,16 @@
+"""MTMC — Macro Thinking Micro Coding (the paper's contribution).
+
+Macro Thinking: RL-trained lightweight LM policy proposing semantic
+optimization actions (Tiling / Fusion / Pipeline / Reordering x region).
+Micro Coding: stepwise structured rewrites of the kernel IR with
+compile/correctness feedback.  See DESIGN.md.
+"""
+from repro.core.actions import Action, candidate_actions  # noqa: F401
+from repro.core.cost_model import program_cost, speedup   # noqa: F401
+from repro.core.env import EnvConfig, KernelEnv, OfflineEnv, OfflineTree  # noqa: F401
+from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec  # noqa: F401
+from repro.core.micro_coding import StructuredMicroCoder  # noqa: F401
+from repro.core.pipeline import MTMCPipeline, evaluate_suite  # noqa: F401
+from repro.core.policy import MacroPolicy, PolicyConfig   # noqa: F401
+from repro.core.ppo import PPOConfig, PPOTrainer          # noqa: F401
+from repro.core.trajectories import CollectConfig, collect, collect_suite  # noqa: F401

@@ -1,0 +1,88 @@
+"""Framework integration: MTMC as the kernel autotuner.
+
+``tune_model_kernels(cfg, shape)`` builds a KernelProgram per hot kernel
+of the architecture (attention geometry, the big GEMMs, scans, MoE
+grouped matmul), runs the MTMC pipeline on it, and installs the winning
+schedule into the kernel registry (``kernels.ops.set_schedule``) that the
+model forwards consult on TPU.  This is the paper's technique running as
+a first-class framework feature rather than a side tool.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import tasks as T
+from repro.core.pipeline import MTMCPipeline
+from repro.kernels import ops
+
+
+def _gemm_task(name, m, k, n):
+    from repro.core.kernel_ir import chain_program
+    return chain_program(name, {"a": (m, k), "b": (k, n)},
+                         [("y", "matmul", ("a", "b"))])
+
+
+def model_kernel_tasks(cfg: ModelConfig, shape: ShapeConfig,
+                       tokens_cap: int = 2048) -> dict[str, tuple]:
+    """(task, kernel_name, schedule_key) per hot kernel.
+
+    Shapes are capped for CPU-side evaluation; the schedule key matches
+    what ops.get_schedule looks up at trace time.
+    """
+    S = min(shape.seq_len, tokens_cap)
+    B = max(1, min(shape.global_batch, 2))
+    D, FF, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    H = min(cfg.n_heads, 8)
+    out = {}
+    if cfg.family in ("dense", "moe", "vlm", "hybrid", "encdec"):
+        out["attention"] = (
+            T._attn_program(f"{cfg.name}_attn", B, S, H, hd),
+            "flash_attention", f"S{shape.seq_len}")
+    m = min(B * S, tokens_cap)
+    out["ffn_gemm"] = (_gemm_task(f"{cfg.name}_ffn", m, D, FF),
+                       "matmul", f"({m}, {D})x({D}, {FF})")
+    out["qkv_gemm"] = (_gemm_task(f"{cfg.name}_qkv", m, D,
+                                  cfg.n_heads * hd),
+                       "matmul", f"({m}, {D})x({D}, {cfg.n_heads * hd})")
+    if cfg.family == "rwkv":
+        out["rwkv"] = (T._rwkv_task(f"{cfg.name}_rwkv", B, S,
+                                    min(cfg.n_heads, 8), hd),
+                       "rwkv6_scan", f"T{shape.seq_len}")
+    if cfg.family == "hybrid":
+        out["ssm"] = (T._ssm_task(f"{cfg.name}_ssm", B, S, 4, 128,
+                                  cfg.ssm_state),
+                      "ssm_scan", f"T{shape.seq_len}")
+    if cfg.family == "moe":
+        from repro.models.moe import capacity
+        C = min(capacity(cfg, B * S), 1024)
+        out["moe"] = (T._moe_task(f"{cfg.name}_moe",
+                                  min(cfg.n_experts, 8), C, D, FF),
+                      "grouped_matmul",
+                      f"({cfg.n_experts}, {C}, {D})")
+    return out
+
+
+def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
+                       pipeline: MTMCPipeline | None = None) -> dict:
+    """Runs MTMC per hot kernel; installs schedules; returns report."""
+    pipeline = pipeline or MTMCPipeline(mode="greedy_cost",
+                                        validate=False, max_steps=6)
+    report = {}
+    for kname, (task, kernel, key) in model_kernel_tasks(cfg,
+                                                         shape).items():
+        res = pipeline.optimize(task)
+        sched = _extract_schedule(res.program, kernel)
+        if sched is not None:
+            ops.set_schedule(kernel, key, sched)
+        report[kname] = {"speedup": res.speedup, "correct": res.correct,
+                         "schedule": sched, "trace": res.trace}
+    return report
+
+
+def _extract_schedule(prog, kernel_kind: str):
+    from repro.core.actions import _sched_kind_of_group
+    for g in prog.fusion_groups:
+        if _sched_kind_of_group(prog, g) == kernel_kind:
+            return prog.schedule_for(g)
+    return None

@@ -1,0 +1,225 @@
+"""Analytic TPU-v5e roofline cost model (tier-3 reward source).
+
+Prices a ``KernelProgram`` the way the dry-run roofline prices a whole
+training step: per fused kernel, time = max(compute, HBM) under the
+schedule's tiling/ordering/pipelining, plus launch overhead per kernel.
+All four semantic actions have first-order effects here:
+
+  Tiling     — blocked-matmul re-read traffic  A*(N/bn) + B*(M/bm); flash
+               K/V re-read per q-block; MXU alignment efficiency;
+  Fusion     — intermediates stay in VMEM (no HBM round-trip), one launch;
+  Pipeline   — depth 1: compute + memory serialize; depth>=2: overlap;
+  Reordering — K-not-innermost matmul pays an output-revisit HBM term.
+
+Constants match the §Roofline analysis: 197 TFLOP/s bf16, 819 GB/s HBM.
+The model is deterministic — the RL reward is hardware-grounded without a
+GPU/TPU attached (DESIGN.md §2, deviation 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import actions as A
+from repro.core.kernel_ir import ELEMENTWISE, KernelProgram, TensorSpec
+
+PEAK_FLOPS = 197e12          # bf16 MXU
+VPU_FLOPS = 4e12             # vector unit (elementwise/softmax/exp)
+HBM_BW = 819e9               # bytes/s
+LAUNCH_S = 1.5e-6            # per-kernel dispatch overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupCost:
+    root: str
+    mxu_flops: float
+    vpu_flops: float
+    hbm_bytes: float
+    compute_s: float
+    memory_s: float
+    time_s: float
+    bottleneck: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCost:
+    total_s: float
+    groups: tuple[GroupCost, ...]
+
+    @property
+    def bottleneck(self) -> str:
+        worst = max(self.groups, key=lambda g: g.time_s)
+        return f"{worst.root}:{worst.bottleneck}"
+
+
+def _mxu_efficiency(tiles: dict[str, int]) -> float:
+    if not tiles:
+        return 0.45
+    vals = list(tiles.values())
+    if all(v % 128 == 0 for v in vals):
+        return 0.85
+    if all(v % 8 == 0 for v in vals):
+        return 0.45
+    return 0.15
+
+
+def group_cost(prog: KernelProgram, group: tuple[str, ...],
+               shapes: dict[str, TensorSpec]) -> GroupCost:
+    nm = prog.node_map
+    sched = prog.schedule_for(group)
+    tiles = sched.blocks_dict
+    in_specs = prog.input_specs
+    internal = set(group)
+
+    mxu = vpu = 0.0
+    hbm_in = hbm_out = 0.0
+    reorder_penalty = 0.0
+
+    # bytes entering the group from HBM (external inputs + other groups'
+    # intermediates), with tiling-induced re-reads for the anchor ops
+    for name in group:
+        n = nm[name]
+        out = shapes[name]
+        if n.op == "matmul":
+            a, b = shapes_of(n.inputs, shapes, in_specs)
+            M = int(np.prod(a.shape[:-1]))
+            K, N = a.shape[-1], b.shape[-1]
+            mxu += 2.0 * M * K * N
+            bm = tiles.get("bm", 128)
+            bn = tiles.get("bn", 128)
+            bk = tiles.get("bk", 128)
+            if n.inputs[0] not in internal:
+                hbm_in += a.bytes * max(1, N // max(bn, 1))
+            if n.inputs[1] not in internal:
+                hbm_in += b.bytes * max(1, M // max(bm, 1))
+            order = sched.loop_order or ("m", "n", "k")
+            if order[-1] != "k":
+                reorder_penalty += 2.0 * M * N * 4 * max(1, K // bk)
+        elif n.op == "grouped_matmul":
+            a, b = shapes_of(n.inputs, shapes, in_specs)
+            E, C, D = a.shape
+            F = b.shape[-1]
+            mxu += 2.0 * E * C * D * F
+            bc = tiles.get("bc", 128)
+            bf = tiles.get("bf", 128)
+            if n.inputs[0] not in internal:
+                hbm_in += a.bytes * max(1, F // bf)
+            if n.inputs[1] not in internal:
+                hbm_in += b.bytes * max(1, C // bc)
+        elif n.op in ("qk_scores", "av"):
+            a, b = shapes_of(n.inputs, shapes, in_specs)
+            if n.op == "qk_scores":
+                B, Sq, H, hd = a.shape
+                Sk = b.shape[1]
+                M, K, N = Sq, hd, Sk
+            else:
+                B, H, Sq, Sk = a.shape
+                hd = b.shape[-1]
+                M, K, N = Sq, Sk, hd
+            mxu += 2.0 * B * H * M * K * N
+            bm = tiles.get("bm", 128)
+            bn = tiles.get("bn", 128)
+            if n.inputs[0] not in internal:
+                hbm_in += a.bytes * max(1, N // max(bn, 1))
+            if n.inputs[1] not in internal:
+                hbm_in += b.bytes * max(1, M // max(bm, 1))
+        elif n.op == "attention":
+            q, k = shapes_of(n.inputs[:2], shapes, in_specs)
+            B, Sq, H, hd = q.shape
+            Sk = k.shape[1]
+            mxu += 4.0 * B * Sq * Sk * H * hd
+            vpu += 6.0 * B * Sq * Sk * H          # softmax chain
+            bq = tiles.get("bq", 128)
+            for inp in n.inputs[:1]:
+                if inp not in internal:
+                    hbm_in += shapes.get(inp, in_specs.get(inp)).bytes
+            kv_bytes = sum(shapes.get(i, in_specs.get(i)).bytes
+                           for i in n.inputs[1:3])
+            hbm_in += kv_bytes * max(1, Sq // max(bq, 1))
+        elif n.op in ("rwkv_chunk", "ssm_chunk"):
+            x = shapes.get(n.inputs[0], in_specs.get(n.inputs[0]))
+            T = x.shape[1]
+            c = tiles.get("chunk", 64)
+            feat = int(np.prod(x.shape[2:]))
+            B = x.shape[0]
+            # intra-chunk pairwise work + inter-chunk state matmuls
+            vpu += 3.0 * B * T * c * feat
+            mxu += 4.0 * B * T * feat * 64
+            for inp in n.inputs:
+                if inp not in internal and (
+                        inp in shapes or inp in in_specs):
+                    hbm_in += shapes.get(inp, in_specs.get(inp)).bytes
+        elif n.op == "softmax":
+            vpu += 5.0 * out.elems
+            hbm_in += _plain_input_bytes(n, internal, shapes, in_specs)
+        elif n.op == "rmsnorm":
+            vpu += 4.0 * out.elems
+            hbm_in += _plain_input_bytes(n, internal, shapes, in_specs)
+        elif n.op in ("row_max", "row_sum"):
+            x = shapes.get(n.inputs[0], in_specs.get(n.inputs[0]))
+            vpu += float(x.elems)
+            hbm_in += _plain_input_bytes(n, internal, shapes, in_specs)
+        else:  # elementwise
+            vpu += 2.0 * out.elems
+            hbm_in += _plain_input_bytes(n, internal, shapes, in_specs)
+
+    # bytes leaving the group (consumed elsewhere or program outputs)
+    consumers = _external_consumers(prog, group)
+    for name in consumers:
+        hbm_out += shapes[name].bytes
+
+    eff = _mxu_efficiency(tiles) if mxu else 1.0
+    compute_s = mxu / (PEAK_FLOPS * eff) + vpu / VPU_FLOPS
+    memory_s = (hbm_in + hbm_out + reorder_penalty) / HBM_BW
+    if sched.pipeline_depth >= 2:
+        time_s = max(compute_s, memory_s)
+    else:
+        time_s = compute_s + memory_s
+    time_s += LAUNCH_S
+    return GroupCost(prog.group_root(group), mxu, vpu,
+                     hbm_in + hbm_out + reorder_penalty, compute_s,
+                     memory_s, time_s,
+                     "compute" if compute_s >= memory_s else "memory")
+
+
+def shapes_of(names, shapes, in_specs):
+    return [shapes.get(n, in_specs.get(n)) for n in names]
+
+
+def _plain_input_bytes(n, internal, shapes, in_specs):
+    total = 0.0
+    for inp in n.inputs:
+        if inp not in internal:
+            spec = shapes.get(inp, in_specs.get(inp))
+            if spec is not None:
+                total += spec.bytes
+    return total
+
+
+
+def _external_consumers(prog: KernelProgram, group: tuple[str, ...]):
+    internal = set(group)
+    used_outside = set()
+    for n in prog.nodes:
+        if n.name in internal:
+            continue
+        for inp in n.inputs:
+            if inp in internal:
+                used_outside.add(inp)
+    for o in prog.outputs:
+        if o in internal:
+            used_outside.add(o)
+    return used_outside
+
+
+def program_cost(prog: KernelProgram) -> ProgramCost:
+    shapes = prog.shapes()
+    groups = tuple(group_cost(prog, g, shapes)
+                   for g in prog.fusion_groups)
+    return ProgramCost(sum(g.time_s for g in groups), groups)
+
+
+def speedup(baseline: KernelProgram, optimized: KernelProgram) -> float:
+    return program_cost(baseline).total_s / \
+        max(program_cost(optimized).total_s, 1e-12)

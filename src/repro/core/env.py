@@ -1,0 +1,217 @@
+"""RL environment over kernel programs (live + tree-structured offline).
+
+Reward shaping follows the paper's three tiers, easy -> hard:
+  (1) compiles        — failures penalised, penalty magnitude < tier-2/3
+                        gains so exploration escapes the all-invalid zone;
+  (2) runs correctly  — small positive baseline for any valid rewrite;
+  (3) runs faster     — dominant reward, proportional to the speedup
+                        delta over the previous step's kernel.
+Positive rewards are scaled by a step-proportional decay (paper: "step-
+proportional reward decay mechanism to mitigate degenerate looping"), so
+re-applying no-op optimizations late in an episode earns ~nothing.
+
+``OfflineTree`` caches (state, action) -> (child, status, cost): policy
+training replays materialized transitions only (the paper's offline tree
+built from pre-collected trajectories — no live Micro Coding latency in
+the PPO loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core import actions as A
+from repro.core import cost_model
+from repro.core.kernel_ir import KernelProgram
+from repro.core.micro_coding import MicroCoder, StructuredMicroCoder
+
+
+@dataclasses.dataclass
+class EnvConfig:
+    max_steps: int = 8
+    penalty_compile: float = -0.4
+    penalty_wrong: float = -0.8
+    reward_valid: float = 0.1
+    reward_speed_scale: float = 1.0
+    decay_per_step: float = 0.1       # positive-reward decay
+    decay_floor: float = 0.3
+    curated_actions: bool = True      # False = "w/o AS" ablation
+
+
+@dataclasses.dataclass
+class StepResult:
+    program: KernelProgram
+    reward: float
+    done: bool
+    info: dict
+
+
+class KernelEnv:
+    """Live environment: applies actions through a MicroCoder."""
+
+    def __init__(self, task: KernelProgram, coder: MicroCoder | None = None,
+                 cfg: EnvConfig = EnvConfig()):
+        self.task = task
+        self.coder = coder or StructuredMicroCoder()
+        self.cfg = cfg
+        self.baseline_s = cost_model.program_cost(task).total_s
+
+    def reset(self) -> KernelProgram:
+        self.state = self.task
+        self.t = 0
+        self.prev_s = self.baseline_s
+        return self.state
+
+    def candidates(self, state: KernelProgram | None = None
+                   ) -> list[A.Action]:
+        state = state or self.state
+        if self.cfg.curated_actions:
+            return A.candidate_actions(state)
+        return A.unrestricted_actions(state)
+
+    def _decay(self) -> float:
+        return max(self.cfg.decay_floor,
+                   1.0 - self.cfg.decay_per_step * self.t)
+
+    def step(self, action: A.Action) -> StepResult:
+        cfg = self.cfg
+        self.t += 1
+        done = self.t >= cfg.max_steps
+        if action.kind == "stop":
+            final = self.baseline_s / self.prev_s
+            r = 0.25 * max(0.0, final - 1.0)
+            return StepResult(self.state, r, True,
+                              {"status": "stop", "speedup": final})
+        res = self.coder.apply(self.state, action)
+        if res.status == "compile_error":
+            return StepResult(self.state, cfg.penalty_compile, done,
+                              {"status": res.status, "detail": res.detail})
+        if res.status == "wrong_result":
+            return StepResult(self.state, cfg.penalty_wrong, done,
+                              {"status": res.status})
+        new_s = cost_model.program_cost(res.program).total_s
+        delta = self.prev_s / new_s - 1.0          # speedup vs prev step
+        r = cfg.reward_valid + cfg.reward_speed_scale * max(
+            min(delta, 3.0), -0.5)
+        r *= self._decay()
+        self.state = res.program
+        self.prev_s = new_s
+        return StepResult(self.state, r, done,
+                          {"status": "ok",
+                           "speedup": self.baseline_s / new_s})
+
+
+# ---------------------------------------------------------------------------
+# offline tree
+# ---------------------------------------------------------------------------
+
+def action_key(a: A.Action) -> str:
+    return f"{a.kind}|{a.region}|{a.param!r}"
+
+
+@dataclasses.dataclass
+class TreeNode:
+    program: KernelProgram
+    cost_s: float
+    children: dict = dataclasses.field(default_factory=dict)
+    # action_key -> (child_fp | None, status)
+
+
+class OfflineTree:
+    """Materialized transition cache for offline policy training."""
+
+    def __init__(self, task: KernelProgram):
+        self.task = task
+        self.nodes: dict[str, TreeNode] = {}
+        self.root = self._intern(task)
+
+    def _intern(self, prog: KernelProgram) -> str:
+        fp = prog.fingerprint()
+        if fp not in self.nodes:
+            self.nodes[fp] = TreeNode(
+                prog, cost_model.program_cost(prog).total_s)
+        return fp
+
+    def expand(self, fp: str, action: A.Action,
+               coder: MicroCoder) -> tuple[str | None, str]:
+        node = self.nodes[fp]
+        k = action_key(action)
+        if k in node.children:
+            return node.children[k]
+        res = coder.apply(node.program, action)
+        child = self._intern(res.program) if res.status == "ok" and \
+            action.kind != "stop" else None
+        node.children[k] = (child, res.status)
+        return node.children[k]
+
+    def materialized_actions(self, fp: str) -> list[tuple[A.Action, str]]:
+        node = self.nodes[fp]
+        out = []
+        import ast
+        for k, (child, status) in node.children.items():
+            kind, region, param = k.split("|", 2)
+            out.append((A.Action(kind, region,
+                                 ast.literal_eval(param)), status))
+        return out
+
+    @property
+    def size(self) -> int:
+        return len(self.nodes)
+
+
+class OfflineEnv:
+    """Replays an OfflineTree with the same reward shaping as KernelEnv.
+
+    The candidate set at each state is the tree's materialized actions
+    (plus stop) — the policy learns from offline data exactly as in the
+    paper's environment design.
+    """
+
+    def __init__(self, tree: OfflineTree, cfg: EnvConfig = EnvConfig()):
+        self.tree = tree
+        self.cfg = cfg
+        self.baseline_s = tree.nodes[tree.root].cost_s
+
+    def reset(self) -> str:
+        self.fp = self.tree.root
+        self.t = 0
+        self.prev_s = self.baseline_s
+        return self.fp
+
+    def program(self, fp: str | None = None) -> KernelProgram:
+        return self.tree.nodes[fp or self.fp].program
+
+    def candidates(self) -> list[A.Action]:
+        acts = [a for a, _ in
+                self.tree.materialized_actions(self.fp)]
+        if not any(a.kind == "stop" for a in acts):
+            acts.append(A.STOP)
+        return acts
+
+    def step(self, action: A.Action) -> StepResult:
+        cfg = self.cfg
+        self.t += 1
+        done = self.t >= cfg.max_steps
+        decay = max(cfg.decay_floor, 1.0 - cfg.decay_per_step * self.t)
+        if action.kind == "stop":
+            final = self.baseline_s / self.prev_s
+            r = 0.25 * max(0.0, final - 1.0)
+            return StepResult(self.program(), r, True,
+                              {"status": "stop", "speedup": final})
+        child, status = self.tree.nodes[self.fp].children.get(
+            action_key(action), (None, "compile_error"))
+        if status == "compile_error":
+            return StepResult(self.program(), cfg.penalty_compile, done,
+                              {"status": status})
+        if status == "wrong_result":
+            return StepResult(self.program(), cfg.penalty_wrong, done,
+                              {"status": status})
+        new_s = self.tree.nodes[child].cost_s
+        delta = self.prev_s / new_s - 1.0
+        r = (cfg.reward_valid + cfg.reward_speed_scale *
+             max(min(delta, 3.0), -0.5)) * decay
+        self.fp = child
+        self.prev_s = new_s
+        return StepResult(self.program(), r, done,
+                          {"status": "ok",
+                           "speedup": self.baseline_s / new_s})

@@ -1,0 +1,267 @@
+"""Typed kernel IR — the program representation MTMC optimizes.
+
+A ``KernelProgram`` is an op graph (topological ``nodes``) partitioned into
+``fusion_groups`` (each group = one fused TPU kernel), with a
+``KernelSchedule`` per group.  This is the TPU-native analogue of the
+paper's "kernel code": Macro Thinking proposes semantic actions over it,
+Micro Coding rewrites it, the cost model prices it, and the evaluator
+executes it with the jnp reference ops (correctness oracle).
+
+Op vocabulary (covers the KernelBench/TritonBench-style task suites):
+  matmul(a, b)            attrs: none
+  bias(x, b) / add(x, y) / mul(x, y)
+  relu(x) / gelu(x) / silu(x) / square(x)
+  softmax(x)              last axis
+  rmsnorm(x, scale)
+  row_max(x) / row_sum(x) last axis, keepdims
+  attention(q, k, v)      attrs: causal, window  (B,S,H,hd) layout
+  qk_scores(q, k)         unfused attention scores (scaled, masked)
+  av(probs, v)            unfused attention value matmul
+  rwkv_chunk(r, k, v, w, u)
+  ssm_chunk(x, dt, a, b, c)
+  grouped_matmul(x, w)    (E,C,D)x(E,D,F)
+
+The qk_scores -> softmax -> av triple is the canonical Fusion target:
+merging the three rewrites them into a single ``attention`` node (the
+flash kernel).  Partial fusion (qk_scores+softmax) is a legal
+softmax-epilogue matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.schedule import KernelSchedule, default_schedule
+from repro.models import layers
+
+ELEMENTWISE = ("bias", "add", "mul", "relu", "gelu", "silu", "square")
+REDUCTIONS = ("row_max", "row_sum", "softmax", "rmsnorm")
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    shape: tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def bytes(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def elems(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    name: str
+    op: str
+    inputs: tuple[str, ...]
+    attrs: tuple[tuple[str, Any], ...] = ()
+
+    def attr(self, key: str, default=None):
+        return dict(self.attrs).get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProgram:
+    name: str
+    inputs: tuple[tuple[str, TensorSpec], ...]
+    nodes: tuple[OpNode, ...]
+    outputs: tuple[str, ...]
+    fusion_groups: tuple[tuple[str, ...], ...]
+    schedules: tuple[tuple[str, KernelSchedule], ...]   # group-root -> sched
+    history: tuple[str, ...] = ()
+
+    # ---- convenience ----------------------------------------------------
+    @property
+    def input_specs(self) -> dict[str, TensorSpec]:
+        return dict(self.inputs)
+
+    @property
+    def node_map(self) -> dict[str, OpNode]:
+        return {n.name: n for n in self.nodes}
+
+    @property
+    def schedule_map(self) -> dict[str, KernelSchedule]:
+        return dict(self.schedules)
+
+    def group_of(self, node_name: str) -> tuple[str, ...]:
+        for g in self.fusion_groups:
+            if node_name in g:
+                return g
+        raise KeyError(node_name)
+
+    def group_root(self, group: tuple[str, ...]) -> str:
+        return group[0]
+
+    def schedule_for(self, group: tuple[str, ...]) -> KernelSchedule:
+        return self.schedule_map.get(self.group_root(group),
+                                     KernelSchedule())
+
+    def replace(self, **kw) -> "KernelProgram":
+        return dataclasses.replace(self, **kw)
+
+    def with_schedule(self, group_root: str,
+                      sched: KernelSchedule) -> "KernelProgram":
+        sm = self.schedule_map
+        sm[group_root] = sched
+        return self.replace(schedules=tuple(sorted(sm.items())))
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha1(repr((self.inputs, self.nodes, self.outputs,
+                               self.fusion_groups,
+                               self.schedules)).encode())
+        return h.hexdigest()[:16]
+
+    # ---- shape inference -------------------------------------------------
+    def shapes(self) -> dict[str, TensorSpec]:
+        env: dict[str, TensorSpec] = dict(self.inputs)
+        for n in self.nodes:
+            env[n.name] = infer_shape(n, env)
+        return env
+
+
+def infer_shape(n: OpNode, env: Mapping[str, TensorSpec]) -> TensorSpec:
+    a = env[n.inputs[0]]
+    if n.op == "matmul":
+        b = env[n.inputs[1]]
+        return TensorSpec(a.shape[:-1] + (b.shape[-1],), a.dtype)
+    if n.op == "grouped_matmul":
+        b = env[n.inputs[1]]
+        return TensorSpec((a.shape[0], a.shape[1], b.shape[-1]), a.dtype)
+    if n.op in ("row_max", "row_sum"):
+        return TensorSpec(a.shape[:-1] + (1,), a.dtype)
+    if n.op == "attention":
+        return a  # (B,S,H,hd) -> same
+    if n.op == "qk_scores":
+        b = env[n.inputs[1]]
+        B, Sq, H, hd = a.shape
+        return TensorSpec((B, H, Sq, b.shape[1]), a.dtype)
+    if n.op == "av":
+        v = env[n.inputs[1]]
+        B, H, Sq, Sk = a.shape
+        return TensorSpec((B, Sq, H, v.shape[-1]), a.dtype)
+    if n.op == "rwkv_chunk":
+        v = env[n.inputs[2]]
+        return TensorSpec(v.shape, a.dtype)
+    if n.op == "ssm_chunk":
+        return a
+    return a  # elementwise / softmax / rmsnorm / bias
+
+
+# ---------------------------------------------------------------------------
+# evaluator (correctness oracle; jnp reference semantics)
+# ---------------------------------------------------------------------------
+
+def make_inputs(prog: KernelProgram, key: jax.Array) -> dict[str, jax.Array]:
+    out = {}
+    for i, (name, spec) in enumerate(prog.inputs):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("_decay"):       # rwkv w must be in (0,1)
+            out[name] = jnp.exp(-jnp.exp(
+                jax.random.normal(k, spec.shape))).astype(spec.dtype)
+        elif name.endswith("_dt"):
+            out[name] = jax.nn.softplus(
+                jax.random.normal(k, spec.shape)).astype(spec.dtype)
+        elif name.endswith("_A"):
+            out[name] = -jnp.exp(
+                jax.random.normal(k, spec.shape)).astype(spec.dtype)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out
+
+
+def evaluate(prog: KernelProgram, inputs: Mapping[str, jax.Array]
+             ) -> list[jax.Array]:
+    env: dict[str, jax.Array] = dict(inputs)
+    for n in prog.nodes:
+        args = [env[i] for i in n.inputs]
+        env[n.name] = _eval_op(n, args)
+    return [env[o] for o in prog.outputs]
+
+
+def _eval_op(n: OpNode, a: list[jax.Array]) -> jax.Array:
+    op = n.op
+    if op == "matmul":
+        return jnp.matmul(a[0], a[1])
+    if op == "grouped_matmul":
+        return jnp.einsum("ecd,edf->ecf", a[0], a[1])
+    if op == "bias" or op == "add":
+        return a[0] + a[1]
+    if op == "mul":
+        return a[0] * a[1]
+    if op == "relu":
+        return jax.nn.relu(a[0])
+    if op == "gelu":
+        return jax.nn.gelu(a[0])
+    if op == "silu":
+        return jax.nn.silu(a[0])
+    if op == "square":
+        return jnp.square(a[0])
+    if op == "softmax":
+        return jax.nn.softmax(a[0], axis=-1)
+    if op == "rmsnorm":
+        return layers.rms_norm(a[0], a[1])
+    if op == "row_max":
+        return jnp.max(a[0], axis=-1, keepdims=True)
+    if op == "row_sum":
+        return jnp.sum(a[0], axis=-1, keepdims=True)
+    if op == "attention":
+        return layers.attention(a[0], a[1], a[2],
+                                causal=bool(n.attr("causal", True)),
+                                window=int(n.attr("window", 0)))
+    if op == "qk_scores":
+        q, k = a
+        scale = q.shape[-1] ** -0.5
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+        if bool(n.attr("causal", True)):
+            sq, sk = s.shape[-2], s.shape[-1]
+            mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+            s = jnp.where(mask, s, -1e30)
+        return s
+    if op == "av":
+        return jnp.einsum("bhqk,bkhd->bqhd", a[0], a[1])
+    if op == "rwkv_chunk":
+        o, _ = ref.rwkv6_chunked(a[0], a[1], a[2], a[3], a[4],
+                                 chunk=min(32, a[0].shape[1]))
+        return o
+    if op == "ssm_chunk":
+        y, _ = ref.ssm_chunked(a[0], a[1], a[2], a[3], a[4],
+                               chunk=min(32, a[0].shape[1]))
+        return y
+    raise ValueError(f"unknown op {op}")
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def chain_program(name: str, inputs: dict[str, tuple[int, ...]],
+                  ops: list[tuple[str, str, tuple[str, ...]]],
+                  outputs: tuple[str, ...] | None = None,
+                  dtype: str = "float32") -> KernelProgram:
+    """Each op: (node_name, op, input_names).  Unfused by default."""
+    nodes = tuple(OpNode(nm, op, ins) for nm, op, ins in ops)
+    outs = outputs or (nodes[-1].name,)
+    groups = tuple((n.name,) for n in nodes)
+    scheds = tuple((n.name, default_schedule(_sched_kind(n.op)))
+                   for n in nodes)
+    return KernelProgram(
+        name=name,
+        inputs=tuple((k, TensorSpec(v, dtype)) for k, v in inputs.items()),
+        nodes=nodes, outputs=outs, fusion_groups=groups, schedules=scheds)
+
+
+def _sched_kind(op: str) -> str:
+    return {"matmul": "matmul", "attention": "flash_attention",
+            "qk_scores": "matmul", "av": "matmul",
+            "rmsnorm": "rmsnorm", "rwkv_chunk": "rwkv6_scan",
+            "ssm_chunk": "ssm_scan",
+            "grouped_matmul": "grouped_matmul"}.get(op, "elementwise")

@@ -1,0 +1,168 @@
+"""MTMC inference pipeline: Macro Thinking proposes, Micro Coding applies.
+
+Modes (the paper's main method + its ablations):
+  policy      — trained Macro policy (RL), step-by-step      [MTMC]
+  untrained   — randomly initialised LM scores actions        ["w/o policy"
+                proxy for a general-purpose LLM with no RL — see DESIGN.md]
+  random      — uniform over the curated action space         ["w/o policy - random"]
+  greedy_cost — oracle-ish: picks the best cost-model child   [upper bound]
+  single_pass — samples a whole multi-action plan up front and
+                applies it without intermediate validation    ["w/o Hier"]
+
+``curated=False`` switches the action space to unrestricted proposals
+("w/o AS").  Every run returns correctness (the rewritten program is
+validated against the task's oracle), modeled speedup, and the trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import actions as A
+from repro.core import cost_model
+from repro.core.env import EnvConfig, KernelEnv
+from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
+from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.policy import MacroPolicy
+
+
+@dataclasses.dataclass
+class OptimizationResult:
+    task: str
+    program: KernelProgram
+    correct: bool
+    speedup: float                # modeled, vs naive ("eager") program
+    steps: int
+    n_failures: int               # compile/validation failures en route
+    trace: tuple[str, ...]
+
+    @property
+    def accuracy(self) -> bool:   # benchmark "execute accuracy"
+        return self.correct
+
+
+class MTMCPipeline:
+    def __init__(self, policy: MacroPolicy | None = None, *,
+                 mode: str = "policy", curated: bool = True,
+                 max_steps: int = 8, seed: int = 0,
+                 validate: bool = True):
+        self.policy = policy
+        self.mode = mode
+        self.curated = curated
+        self.max_steps = max_steps
+        self.seed = seed
+        self.validate = validate
+
+    # -- action selection ----------------------------------------------------
+    def _select(self, prog, cands, key, rng):
+        if self.mode == "random" or (self.mode in ("policy", "untrained")
+                                     and self.policy is None):
+            return cands[rng.integers(len(cands))]
+        if self.mode in ("policy", "untrained"):
+            idx, _, _ = self.policy.act(prog, cands, key, greedy=False)
+            return cands[idx]
+        if self.mode == "greedy_cost":
+            coder = StructuredMicroCoder()
+            best, best_c = A.STOP, cost_model.program_cost(prog).total_s
+            for a in cands:
+                if a.kind == "stop":
+                    continue
+                r = coder.apply(prog, a)
+                if r.status == "ok":
+                    c = cost_model.program_cost(r.program).total_s
+                    if c < best_c * 0.999:
+                        best, best_c = a, c
+            return best
+        raise ValueError(self.mode)
+
+    # -- main loop -------------------------------------------------------------
+    def optimize(self, task: KernelProgram) -> OptimizationResult:
+        rng = np.random.default_rng(self.seed)
+        key = jax.random.PRNGKey(self.seed)
+        if self.mode == "single_pass":
+            return self._single_pass(task, rng, key)
+        coder = StructuredMicroCoder()
+        env_cfg = EnvConfig(max_steps=self.max_steps,
+                            curated_actions=self.curated)
+        env = KernelEnv(task, coder, env_cfg)
+        state = env.reset()
+        best = state
+        best_s = env.baseline_s
+        n_fail = 0
+        for t in range(self.max_steps):
+            cands = env.candidates()
+            key, sub = jax.random.split(key)
+            act = self._select(state, cands, sub, rng)
+            res = env.step(act)
+            if res.info["status"] in ("compile_error", "wrong_result"):
+                n_fail += 1
+            state = res.program
+            s = cost_model.program_cost(state).total_s
+            if s < best_s:
+                best, best_s = state, s
+            if act.kind == "stop" or res.done:
+                break
+        correct = self._check(task, best)
+        return OptimizationResult(
+            task.name, best, correct,
+            env.baseline_s / best_s, t + 1, n_fail, best.history)
+
+    def _single_pass(self, task, rng, key) -> OptimizationResult:
+        """'w/o Hier': commit to a full plan against the INITIAL state and
+        apply all steps blindly; any failing step poisons the rest (the
+        paper's observed single-pass failure mode)."""
+        coder = StructuredMicroCoder()
+        cands = (A.candidate_actions(task) if self.curated
+                 else A.unrestricted_actions(task))
+        n = min(self.max_steps, 4)
+        plan = [cands[rng.integers(len(cands))] for _ in range(n)]
+        prog = task
+        n_fail = 0
+        applied = False
+        for act in plan:
+            # regions/params were chosen against the initial program; they
+            # may no longer exist after earlier rewrites
+            res = coder.apply(prog, act)
+            if res.status != "ok":
+                n_fail += 1
+                continue
+            prog = res.program
+            applied = True
+        base = cost_model.program_cost(task).total_s
+        cur = cost_model.program_cost(prog).total_s
+        # single-pass parity with LLM whole-kernel generation: any failed
+        # step means the emitted kernel as a whole is wrong
+        correct = (n_fail == 0) and self._check(task, prog)
+        return OptimizationResult(task.name, prog, correct, base / cur,
+                                  n, n_fail, prog.history)
+
+    def _check(self, task: KernelProgram, prog: KernelProgram) -> bool:
+        if not self.validate:
+            return True
+        inputs = make_inputs(task, jax.random.PRNGKey(7))
+        try:
+            a = evaluate(task, inputs)
+            b = evaluate(prog, inputs)
+        except Exception:
+            return False
+        import jax.numpy as jnp
+        return all(x.shape == y.shape and bool(
+            jnp.allclose(x, y, rtol=2e-3, atol=2e-3))
+            for x, y in zip(a, b))
+
+
+def evaluate_suite(tasks: list[KernelProgram], pipeline: MTMCPipeline
+                   ) -> dict:
+    """Benchmark metrics over a suite (paper Eqs. 3-4): execute accuracy,
+    fast_1/fast_2, mean speedup (failed tasks count speedup 0)."""
+    results = [pipeline.optimize(t) for t in tasks]
+    n = len(results)
+    acc = sum(r.correct for r in results) / n
+    sp = [r.speedup if r.correct else 0.0 for r in results]
+    fast1 = sum(s > 1.0 for s in sp) / n
+    fast2 = sum(s > 2.0 for s in sp) / n
+    return {"n": n, "accuracy": acc, "fast1": fast1, "fast2": fast2,
+            "mean_speedup": float(np.mean(sp)),
+            "results": results}

@@ -1,0 +1,262 @@
+"""Macro Thinking policy — a lightweight LM over the schedule-state DSL.
+
+A small decoder-only transformer (same family shape as the paper's
+DeepSeek-Coder-1.3B backbone, scaled to CPU budget; Table 7 shows policy
+quality is robust to backbone size) reads the serialized kernel state and
+scores each candidate semantic action TWOSOME-style: an action's logit is
+the length-normalized sum of its tokens' log-probs under the LM, and the
+sampling distribution is the softmax over candidate logits (paper Eq. 2).
+
+A value head (mean-pooled state encoding) serves PPO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actions as A
+from repro.core.kernel_ir import KernelProgram
+
+# ---------------------------------------------------------------------------
+# DSL tokenizer (word-level, closed vocabulary)
+# ---------------------------------------------------------------------------
+
+_NUM_BUCKETS = [1, 2, 4, 7, 8, 16, 32, 56, 64, 100, 128, 256, 384, 512,
+                640, 768, 896, 1024, 2048, 4096, 8192]
+
+_WORDS = (
+    ["<pad>", "<s>", "</s>", "[G]", "[H]", "[A]", "->", "@"]
+    + ["matmul", "grouped_matmul", "attention", "qk_scores", "av",
+       "softmax", "rmsnorm", "row_max", "row_sum", "bias", "add", "mul",
+       "relu", "gelu", "silu", "square", "rwkv_chunk", "ssm_chunk"]
+    + ["tiling", "fusion", "pipeline", "reorder", "stop"]
+    + ["bm", "bn", "bk", "bq", "bc", "bf", "bd", "chunk", "rows",
+       "depth", "order", "m", "n", "k", "mem", "flop"]
+    + [f"n{v}" for v in _NUM_BUCKETS]
+    + [f"r{i}" for i in range(24)]          # region slots
+    + ["compute", "memory", "bound", "fused", "epi"]
+)
+VOCAB = {w: i for i, w in enumerate(_WORDS)}
+VOCAB_SIZE = len(_WORDS)
+PAD, BOS, EOS = 0, 1, 2
+
+
+def _bucket(v: int) -> str:
+    b = min(_NUM_BUCKETS, key=lambda x: abs(np.log2(max(v, 1) / x)))
+    return f"n{b}"
+
+
+def encode(words: Sequence[str]) -> list[int]:
+    return [VOCAB[w] for w in words if w in VOCAB]
+
+
+# ---------------------------------------------------------------------------
+# serialization: program state / actions -> DSL words
+# ---------------------------------------------------------------------------
+
+def region_slots(prog: KernelProgram) -> dict[str, str]:
+    return {prog.group_root(g): f"r{i % 24}"
+            for i, g in enumerate(prog.fusion_groups)}
+
+
+def state_words(prog: KernelProgram, max_groups: int = 10) -> list[str]:
+    shapes = prog.shapes()
+    nm = prog.node_map
+    slots = region_slots(prog)
+    words = ["<s>"]
+    from repro.core import cost_model
+    pc = cost_model.program_cost(prog)
+    by_root = {g.root: g for g in pc.groups}
+    for g in prog.fusion_groups[:max_groups]:
+        root = prog.group_root(g)
+        words.append("[G]")
+        words.append(slots[root])
+        for nname in g[:4]:
+            words.append(nm[nname].op)
+        out = shapes[g[-1]]
+        for d in out.shape[-2:]:
+            words.append(_bucket(d))
+        sched = prog.schedule_for(g)
+        for bn, bv in sched.blocks[:3]:
+            words += [bn, _bucket(bv)]
+        words += ["depth", _bucket(sched.pipeline_depth)]
+        gc = by_root.get(root)
+        if gc is not None:
+            words += [gc.bottleneck, "bound"]
+    words.append("[H]")
+    for h in prog.history[-2:]:
+        words += [w for w in re.split(r"[^\w]+", h) if w in VOCAB][:6]
+    return words
+
+
+def action_words(act: A.Action, slots: dict[str, str]) -> list[str]:
+    if act.kind == "stop":
+        return ["stop", "</s>"]
+    words = [act.kind, slots.get(act.region, "r0")]
+    if act.kind == "tiling":
+        for bn, bv in act.param:
+            words += [bn, _bucket(bv)]
+    elif act.kind == "reorder":
+        words += ["order"] + list(act.param)
+    elif act.kind == "pipeline":
+        words += ["depth", _bucket(act.param[0])]
+    elif act.kind == "fusion":
+        words += ["@", slots.get(act.param[0], "r0")]
+    return words + ["</s>"]
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 384
+    max_len: int = 192
+    vocab: int = VOCAB_SIZE
+
+
+def init_policy(cfg: PolicyConfig, key: jax.Array) -> dict:
+    k = jax.random.split(key, 16)
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    L = cfg.n_layers
+    s = 0.02
+
+    def nrm(ki, shape):
+        return s * jax.random.normal(ki, shape, jnp.float32)
+
+    return {
+        "embed": nrm(k[0], (V, D)),
+        "pos": nrm(k[1], (cfg.max_len, D)),
+        "blocks": {
+            "wq": nrm(k[2], (L, D, D)), "wk": nrm(k[3], (L, D, D)),
+            "wv": nrm(k[4], (L, D, D)), "wo": nrm(k[5], (L, D, D)),
+            "n1": jnp.ones((L, D)), "n2": jnp.ones((L, D)),
+            "w1": nrm(k[6], (L, D, F)), "w2": nrm(k[7], (L, F, D)),
+        },
+        "final_norm": jnp.ones((D,)),
+        "lm_head": nrm(k[8], (D, V)),
+        "value_head": nrm(k[9], (D, 1)),
+    }
+
+
+def _rms(x, sc):
+    v = jnp.mean(jnp.square(x), -1, keepdims=True)
+    return x * jax.lax.rsqrt(v + 1e-6) * sc
+
+
+def policy_forward(cfg: PolicyConfig, params: dict, tokens: jax.Array):
+    """tokens: (B, T) -> (token_logits (B,T,V), value (B,))."""
+    B, T = tokens.shape
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    x = params["embed"][tokens] + params["pos"][:T]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    pad_mask = tokens != PAD
+
+    def block(x, p):
+        h = _rms(x, p["n1"])
+        q = (h @ p["wq"]).reshape(B, T, H, hd)
+        k = (h @ p["wk"]).reshape(B, T, H, hd)
+        v = (h @ p["wv"]).reshape(B, T, H, hd)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+        x = x + o.reshape(B, T, -1) @ p["wo"]
+        h = _rms(x, p["n2"])
+        x = x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = _rms(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    pooled = jnp.sum(x * pad_mask[..., None], 1) / \
+        jnp.maximum(jnp.sum(pad_mask, 1, keepdims=True), 1)
+    value = (pooled @ params["value_head"])[:, 0]
+    return logits, value
+
+
+# ---------------------------------------------------------------------------
+# TWOSOME-style action scoring
+# ---------------------------------------------------------------------------
+
+def build_candidate_batch(cfg: PolicyConfig, prog: KernelProgram,
+                          cands: list[A.Action]
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (tokens (N,T), act_mask (N,T), state_len) padded arrays:
+    tokens = state || action; act_mask marks action-token positions."""
+    slots = region_slots(prog)
+    state = encode(state_words(prog))[: cfg.max_len - 24]
+    rows, masks = [], []
+    for a in cands:
+        aw = encode(action_words(a, slots))
+        seq = state + aw
+        m = [0] * len(state) + [1] * len(aw)
+        seq, m = seq[:cfg.max_len], m[:cfg.max_len]
+        pad = cfg.max_len - len(seq)
+        rows.append(seq + [PAD] * pad)
+        masks.append(m + [0] * pad)
+    return (np.array(rows, np.int32), np.array(masks, np.float32),
+            np.int32(len(state)))
+
+
+def make_scorer(cfg: PolicyConfig):
+    @jax.jit
+    def scores(params, tokens, act_mask):
+        logits, value = policy_forward(cfg, params, tokens)
+        logp = jax.nn.log_softmax(logits, -1)
+        # token t predicted by position t-1
+        tgt = tokens[:, 1:]
+        lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None],
+                                 -1)[..., 0]
+        m = act_mask[:, 1:]
+        tok_sum = jnp.sum(lp * m, -1)
+        n_tok = jnp.maximum(jnp.sum(m, -1), 1.0)
+        norm = tok_sum / n_tok                  # TWOSOME normalization
+        return norm, value[0]
+    return scores
+
+
+class MacroPolicy:
+    """Bundles params + scoring; used by PPO and the inference pipeline."""
+
+    def __init__(self, cfg: PolicyConfig = PolicyConfig(), key=None,
+                 params: dict | None = None):
+        self.cfg = cfg
+        self.params = params if params is not None else init_policy(
+            cfg, key if key is not None else jax.random.PRNGKey(0))
+        self._scorer = make_scorer(cfg)
+
+    def action_dist(self, prog: KernelProgram, cands: list[A.Action],
+                    params=None):
+        tokens, mask, _ = build_candidate_batch(self.cfg, prog, cands)
+        n = len(cands)
+        # pad candidate axis to a multiple of 8 (bounded jit variants)
+        n_pad = -(-n // 8) * 8
+        if n_pad > n:
+            tokens = np.concatenate(
+                [tokens, np.zeros((n_pad - n, tokens.shape[1]),
+                                  tokens.dtype)])
+            mask = np.concatenate(
+                [mask, np.zeros((n_pad - n, mask.shape[1]), mask.dtype)])
+        norm, value = self._scorer(
+            self.params if params is None else params, tokens, mask)
+        norm = np.asarray(norm)[:n]
+        logp = jax.nn.log_softmax(jnp.asarray(norm))
+        return np.asarray(logp), float(value)
+
+    def act(self, prog, cands, key, greedy=False):
+        logp, value = self.action_dist(prog, cands)
+        if greedy:
+            idx = int(np.argmax(logp))
+        else:
+            idx = int(jax.random.categorical(key, jnp.asarray(logp)))
+        return idx, float(logp[idx]), value

@@ -1,0 +1,203 @@
+"""PPO training of the Macro Thinking policy on offline trees.
+
+Standard clipped PPO + GAE over episodes rolled out in ``OfflineEnv``s
+(one tree per training task).  The policy's action distribution is the
+TWOSOME softmax over candidate-action token log-prob sums (policy.py);
+gradients flow through the token log-probs of the chosen action relative
+to the other candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actions as A
+from repro.core.env import EnvConfig, OfflineEnv, OfflineTree
+from repro.core.policy import (MacroPolicy, PolicyConfig,
+                               build_candidate_batch, policy_forward)
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    lr: float = 3e-4
+    clip: float = 0.2
+    gamma: float = 0.98
+    lam: float = 0.95
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    epochs_per_iter: int = 2
+    episodes_per_iter: int = 8
+    iters: int = 30
+    max_candidates: int = 40
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Transition:
+    tokens: np.ndarray        # (N_cand, T)
+    mask: np.ndarray          # (N_cand, T)
+    chosen: int
+    logp_old: float
+    reward: float
+    value_old: float
+    done: bool
+
+
+def _pad_cands(tokens, mask, n: int):
+    """Pad candidate axis to fixed n (rows of PADs get -inf scores)."""
+    N, T = tokens.shape
+    if N >= n:
+        return tokens[:n], mask[:n], min(N, n)
+    pt = np.zeros((n - N, T), tokens.dtype)
+    pm = np.zeros((n - N, T), mask.dtype)
+    return np.concatenate([tokens, pt]), np.concatenate([mask, pm]), N
+
+
+def make_loss_fn(pcfg: PolicyConfig, cfg: PPOConfig):
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]          # (B, NC, T)
+        mask = batch["mask"]
+        B, NC, T = tokens.shape
+        flat_t = tokens.reshape(B * NC, T)
+        flat_m = mask.reshape(B * NC, T)
+        logits, values = policy_forward(pcfg, params, flat_t)
+        logp = jax.nn.log_softmax(logits, -1)
+        tgt = flat_t[:, 1:]
+        lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None], -1)[..., 0]
+        m = flat_m[:, 1:]
+        norm = (lp * m).sum(-1) / jnp.maximum(m.sum(-1), 1.0)
+        norm = norm.reshape(B, NC)
+        valid = batch["cand_valid"]                     # (B, NC)
+        norm = jnp.where(valid, norm, -1e30)
+        alogp = jax.nn.log_softmax(norm, -1)
+        chosen_lp = jnp.take_along_axis(
+            alogp, batch["chosen"][:, None], 1)[:, 0]
+        # value of the state = value head on the chosen row (state tokens
+        # dominate the pooled encoding)
+        v = values.reshape(B, NC)[jnp.arange(B), batch["chosen"]]
+
+        ratio = jnp.exp(chosen_lp - batch["logp_old"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+        pg = -jnp.minimum(
+            ratio * adv,
+            jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv).mean()
+        v_loss = jnp.mean(jnp.square(v - batch["returns"]))
+        ent = -jnp.sum(jnp.exp(alogp) * jnp.where(valid, alogp, 0.0),
+                       -1).mean()
+        loss = pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
+        return loss, {"pg": pg, "v_loss": v_loss, "entropy": ent}
+    return loss_fn
+
+
+class PPOTrainer:
+    def __init__(self, trees: dict[str, OfflineTree],
+                 pcfg: PolicyConfig = PolicyConfig(),
+                 cfg: PPOConfig = PPOConfig(),
+                 env_cfg: EnvConfig = EnvConfig()):
+        self.trees = trees
+        self.pcfg, self.cfg, self.env_cfg = pcfg, cfg, env_cfg
+        self.policy = MacroPolicy(pcfg, jax.random.PRNGKey(cfg.seed))
+        self.opt_cfg = adamw.AdamWConfig(lr=cfg.lr, warmup_steps=10,
+                                         total_steps=cfg.iters *
+                                         cfg.epochs_per_iter,
+                                         grad_clip=1.0, weight_decay=0.0)
+        self.opt_state = adamw.init(self.policy.params)
+        self.loss_fn = make_loss_fn(pcfg, cfg)
+        self._grad = jax.jit(jax.value_and_grad(self.loss_fn,
+                                                has_aux=True))
+        self.log: list[dict] = []
+
+    # -- rollouts -----------------------------------------------------------
+    def _rollout(self, env: OfflineEnv, key) -> tuple[list[Transition],
+                                                      float]:
+        traj: list[Transition] = []
+        env.reset()
+        final_speedup = 1.0
+        for t in range(self.env_cfg.max_steps):
+            prog = env.program()
+            cands = env.candidates()[: self.cfg.max_candidates]
+            tokens, mask, _ = build_candidate_batch(self.pcfg, prog,
+                                                    cands)
+            tokens, mask, n_valid = _pad_cands(
+                tokens, mask, self.cfg.max_candidates)
+            logp_all, value = self.policy.action_dist(prog,
+                                                      cands)
+            key, sub = jax.random.split(key)
+            idx = int(jax.random.categorical(sub, jnp.asarray(logp_all)))
+            res = env.step(cands[idx])
+            final_speedup = res.info.get("speedup", final_speedup)
+            traj.append(Transition(tokens, mask, idx,
+                                   float(logp_all[idx]), res.reward,
+                                   value, res.done))
+            if res.done:
+                break
+        return traj, final_speedup
+
+    def _gae(self, traj: list[Transition]):
+        cfg = self.cfg
+        adv = np.zeros(len(traj), np.float32)
+        last = 0.0
+        for i in reversed(range(len(traj))):
+            next_v = 0.0 if (i == len(traj) - 1 or traj[i].done) \
+                else traj[i + 1].value_old
+            delta = traj[i].reward + cfg.gamma * next_v - \
+                traj[i].value_old
+            nonterm = 0.0 if traj[i].done else 1.0
+            last = delta + cfg.gamma * cfg.lam * nonterm * last
+            adv[i] = last
+        returns = adv + np.array([t.value_old for t in traj], np.float32)
+        return adv, returns
+
+    # -- outer loop -----------------------------------------------------------
+    def train(self, iters: int | None = None) -> MacroPolicy:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        names = list(self.trees)
+        for it in range(iters or cfg.iters):
+            batch_tr: list[Transition] = []
+            advs, rets, speedups = [], [], []
+            for e in range(cfg.episodes_per_iter):
+                tree = self.trees[names[rng.integers(len(names))]]
+                env = OfflineEnv(tree, self.env_cfg)
+                key, sub = jax.random.split(key)
+                traj, sp = self._rollout(env, sub)
+                a, r = self._gae(traj)
+                batch_tr += traj
+                advs.append(a)
+                rets.append(r)
+                speedups.append(sp)
+            adv = np.concatenate(advs)
+            ret = np.concatenate(rets)
+            batch = {
+                "tokens": jnp.asarray(
+                    np.stack([t.tokens for t in batch_tr])),
+                "mask": jnp.asarray(np.stack([t.mask for t in batch_tr])),
+                "cand_valid": jnp.asarray(np.stack(
+                    [t.mask.any(-1) for t in batch_tr])),
+                "chosen": jnp.asarray(
+                    np.array([t.chosen for t in batch_tr], np.int32)),
+                "logp_old": jnp.asarray(
+                    np.array([t.logp_old for t in batch_tr],
+                             np.float32)),
+                "adv": jnp.asarray(adv),
+                "returns": jnp.asarray(ret),
+            }
+            for _ in range(cfg.epochs_per_iter):
+                (loss, aux), grads = self._grad(self.policy.params, batch)
+                self.policy.params, self.opt_state, _ = adamw.update(
+                    self.opt_cfg, grads, self.opt_state,
+                    self.policy.params)
+            mean_r = float(np.mean([t.reward for t in batch_tr]))
+            self.log.append({
+                "iter": it, "loss": float(loss),
+                "mean_reward": mean_r,
+                "mean_final_speedup": float(np.mean(speedups)),
+                "entropy": float(aux["entropy"]),
+            })
+        return self.policy

@@ -1,0 +1,250 @@
+"""Task suites mirroring the paper's benchmarks (Table 1).
+
+KB-L1: single ops; KB-L2: fused-op subgraphs; KB-L3: network blocks —
+our KernelBench-like suite.  TB-T: PyTorch-aligned common ops; TB-G:
+real-world kernels (flash attn, rwkv chunk, moe dispatch) — the
+TritonBench-like suite.  ``TRAIN_TASKS`` are disjoint size/pattern
+variants used only for policy training (the paper trains on 60k offline
+trajectories with NO benchmark instances — same discipline here).
+
+Every task is a naive, unfused, default-tiled KernelProgram; its initial
+cost is the "PyTorch Eager" analogue (generic per-op kernels, DESIGN.md
+§7) and speedups are measured against it.
+"""
+from __future__ import annotations
+
+from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec, \
+    chain_program
+
+
+def _attn_program(name, B, S, H, hd, causal=True) -> KernelProgram:
+    nodes = (
+        OpNode("scores", "qk_scores", ("q", "k"),
+               (("causal", causal),)),
+        OpNode("probs", "softmax", ("scores",)),
+        OpNode("out", "av", ("probs", "v")),
+    )
+    return KernelProgram(
+        name=name,
+        inputs=(("q", TensorSpec((B, S, H, hd))),
+                ("k", TensorSpec((B, S, H, hd))),
+                ("v", TensorSpec((B, S, H, hd)))),
+        nodes=nodes, outputs=("out",),
+        fusion_groups=(("scores",), ("probs",), ("out",)),
+        schedules=(("scores", _ms()), ("probs", _ms("elementwise")),
+                   ("out", _ms())))
+
+
+def _ms(kind="matmul"):
+    from repro.kernels.schedule import default_schedule
+    return default_schedule(kind)
+
+
+def _mlp_block(name, M, D, F) -> KernelProgram:
+    return chain_program(name, {"x": (M, D), "w1": (D, F), "b1": (F,),
+                                "w2": (F, D), "scale": (D,)},
+                         [("h", "matmul", ("x", "w1")),
+                          ("hb", "bias", ("h", "b1")),
+                          ("hg", "gelu", ("hb",)),
+                          ("y", "matmul", ("hg", "w2"))])
+
+
+def _transformer_block(name, S, D, H) -> KernelProgram:
+    hd = D // H
+    B = 1
+    nodes = (
+        OpNode("n1", "rmsnorm", ("x2d", "sc1")),
+        OpNode("q2", "matmul", ("n1", "wq")),
+        OpNode("k2", "matmul", ("n1", "wk")),
+        OpNode("v2", "matmul", ("n1", "wv")),
+        # (reshape to heads is layout-free in the IR: 4D inputs given)
+        OpNode("scores", "qk_scores", ("q4", "k4"), (("causal", True),)),
+        OpNode("probs", "softmax", ("scores",)),
+        OpNode("attn", "av", ("probs", "v4")),
+        OpNode("proj", "matmul", ("attn2d", "wo")),
+        OpNode("res1", "add", ("x2d", "proj")),
+        OpNode("n2", "rmsnorm", ("res1", "sc2")),
+        OpNode("ff1", "matmul", ("n2", "wu")),
+        OpNode("ffg", "gelu", ("ff1",)),
+        OpNode("ff2", "matmul", ("ffg", "wd")),
+        OpNode("res2", "add", ("res1", "ff2")),
+    )
+    inputs = {
+        "x2d": (S, D), "sc1": (D,), "sc2": (D,),
+        "wq": (D, D), "wk": (D, D), "wv": (D, D), "wo": (D, D),
+        "q4": (B, S, H, hd), "k4": (B, S, H, hd), "v4": (B, S, H, hd),
+        "attn2d": (S, D), "wu": (D, 4 * D), "wd": (4 * D, D),
+    }
+    groups = tuple((n.name,) for n in nodes)
+    scheds = tuple((n.name, _ms("matmul" if "matmul" in n.op or
+                                n.op in ("qk_scores", "av") else
+                                "elementwise")) for n in nodes)
+    return KernelProgram(
+        name=name,
+        inputs=tuple((k, TensorSpec(v)) for k, v in inputs.items()),
+        nodes=nodes, outputs=("res2",), fusion_groups=groups,
+        schedules=scheds)
+
+
+def _rwkv_task(name, B, T, H, dk) -> KernelProgram:
+    return chain_program(
+        name,
+        {"r": (B, T, H, dk), "kk": (B, T, H, dk), "v": (B, T, H, dk),
+         "w_decay": (B, T, H, dk), "u": (H, dk)},
+        [("wkv", "rwkv_chunk", ("r", "kk", "v", "w_decay", "u"))])
+
+
+def _ssm_task(name, B, T, H, P, N) -> KernelProgram:
+    return chain_program(
+        name,
+        {"x": (B, T, H, P), "x_dt": (B, T, H), "a_A": (H,),
+         "bmat": (B, T, N), "cmat": (B, T, N)},
+        [("y", "ssm_chunk", ("x", "x_dt", "a_A", "bmat", "cmat"))])
+
+
+def _moe_task(name, E, C, D, F) -> KernelProgram:
+    return chain_program(
+        name, {"xg": (E, C, D), "wg": (E, D, F)},
+        [("h", "grouped_matmul", ("xg", "wg")),
+         ("y", "silu", ("h",))])
+
+
+# ---------------------------------------------------------------------------
+# KernelBench-like
+# ---------------------------------------------------------------------------
+
+def kb_level1() -> list[KernelProgram]:
+    t = []
+    for i, (m, k, n) in enumerate([(512, 512, 512), (1024, 512, 256),
+                                   (256, 2048, 512), (2048, 256, 512)]):
+        t.append(chain_program(f"L1_matmul_{i}",
+                               {"a": (m, k), "b": (k, n)},
+                               [("y", "matmul", ("a", "b"))]))
+    t.append(chain_program("L1_softmax", {"x": (1024, 1024)},
+                           [("y", "softmax", ("x",))]))
+    t.append(chain_program("L1_rmsnorm", {"x": (2048, 1024),
+                                          "s": (1024,)},
+                           [("y", "rmsnorm", ("x", "s"))]))
+    t.append(chain_program("L1_relu", {"x": (2048, 2048)},
+                           [("y", "relu", ("x",))]))
+    t.append(chain_program("L1_square_sum",
+                           {"x": (2048, 1024)},
+                           [("sq", "square", ("x",)),
+                            ("y", "row_sum", ("sq",))]))
+    t.append(_attn_program("L1_attention", 2, 512, 4, 64))
+    t.append(_rwkv_task("L1_rwkv", 2, 256, 4, 32))
+    return t
+
+
+def kb_level2() -> list[KernelProgram]:
+    t = []
+    t.append(chain_program("L2_gemm_bias_relu",
+                           {"a": (512, 1024), "b": (1024, 512),
+                            "bias0": (512,)},
+                           [("y0", "matmul", ("a", "b")),
+                            ("y1", "bias", ("y0", "bias0")),
+                            ("y", "relu", ("y1",))]))
+    t.append(chain_program("L2_gemm_max",
+                           {"a": (1024, 512), "b": (512, 1024)},
+                           [("y0", "matmul", ("a", "b")),
+                            ("y", "row_max", ("y0",))]))
+    t.append(chain_program("L2_norm_gemm",
+                           {"x": (512, 1024), "s": (1024,),
+                            "w": (1024, 1024)},
+                           [("n", "rmsnorm", ("x", "s")),
+                            ("y", "matmul", ("n", "w"))]))
+    t.append(chain_program("L2_swiglu",
+                           {"x": (512, 512), "wg": (512, 2048),
+                            "wu": (512, 2048), "wd": (2048, 512)},
+                           [("g", "matmul", ("x", "wg")),
+                            ("gs", "silu", ("g",)),
+                            ("u", "matmul", ("x", "wu")),
+                            ("gu", "mul", ("gs", "u")),
+                            ("y", "matmul", ("gu", "wd"))]))
+    t.append(_mlp_block("L2_mlp", 512, 1024, 4096))
+    t.append(_moe_task("L2_moe_mm", 4, 256, 512, 1024))
+    return t
+
+
+def kb_level3() -> list[KernelProgram]:
+    return [
+        _transformer_block("L3_block_small", 512, 512, 8),
+        _transformer_block("L3_block_wide", 256, 1024, 8),
+        _ssm_task("L3_ssm_net", 2, 512, 4, 64, 16),
+        _rwkv_task("L3_rwkv_net", 2, 512, 8, 64),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# TritonBench-like
+# ---------------------------------------------------------------------------
+
+def tb_t() -> list[KernelProgram]:
+    """PyTorch-aligned common ops."""
+    t = []
+    for i, (m, k, n) in enumerate([(768, 768, 768), (1536, 384, 768)]):
+        t.append(chain_program(f"T_gemm_{i}", {"a": (m, k), "b": (k, n)},
+                               [("y", "matmul", ("a", "b"))]))
+    t.append(chain_program("T_layernormish", {"x": (4096, 768),
+                                              "s": (768,)},
+                           [("y", "rmsnorm", ("x", "s"))]))
+    t.append(chain_program("T_gelu_gemm",
+                           {"a": (768, 768), "b": (768, 3072)},
+                           [("y0", "matmul", ("a", "b")),
+                            ("y", "gelu", ("y0",))]))
+    t.append(chain_program("T_softmax_wide", {"x": (512, 4096)},
+                           [("y", "softmax", ("x",))]))
+    return t
+
+
+def tb_g() -> list[KernelProgram]:
+    """Real-world cases."""
+    return [
+        _attn_program("G_flash_causal", 2, 1024, 8, 64),
+        _attn_program("G_flash_bidir", 2, 512, 8, 64, causal=False),
+        _rwkv_task("G_rwkv_chunk", 2, 1024, 8, 64),
+        _ssm_task("G_mamba_scan", 2, 1024, 8, 64, 16),
+        _moe_task("G_moe_dispatch", 8, 512, 1024, 2048),
+        _transformer_block("G_minigpt_block", 1024, 768, 12),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# policy-training tasks (disjoint from ALL benchmark instances)
+# ---------------------------------------------------------------------------
+
+def train_tasks() -> list[KernelProgram]:
+    t = []
+    for i, (m, k, n) in enumerate([(384, 640, 384), (896, 384, 640),
+                                   (640, 896, 256), (1280, 384, 384),
+                                   (384, 384, 1280), (768, 640, 896)]):
+        t.append(chain_program(f"TR_matmul_{i}", {"a": (m, k),
+                                                  "b": (k, n)},
+                               [("y", "matmul", ("a", "b"))]))
+    for i, (m, k, n) in enumerate([(640, 384, 896), (384, 896, 640)]):
+        t.append(chain_program(f"TR_gemm_gelu_{i}",
+                               {"a": (m, k), "b": (k, n), "bias0": (n,)},
+                               [("y0", "matmul", ("a", "b")),
+                                ("y1", "bias", ("y0", "bias0")),
+                                ("y", "gelu", ("y1",))]))
+    t.append(chain_program("TR_gemm_max", {"a": (896, 640),
+                                           "b": (640, 896)},
+                           [("y0", "matmul", ("a", "b")),
+                            ("y", "row_max", ("y0",))]))
+    t.append(chain_program("TR_norm_gemm",
+                           {"x": (640, 896), "s": (896,),
+                            "w": (896, 640)},
+                           [("n", "rmsnorm", ("x", "s")),
+                            ("y", "matmul", ("n", "w"))]))
+    t.append(_attn_program("TR_attn_a", 2, 384, 4, 64))
+    t.append(_attn_program("TR_attn_b", 1, 640, 8, 64))
+    t.append(_mlp_block("TR_mlp", 384, 640, 2560))
+    t.append(_rwkv_task("TR_rwkv", 2, 384, 4, 64))
+    t.append(_ssm_task("TR_ssm", 2, 384, 4, 64, 16))
+    t.append(_moe_task("TR_moe", 4, 384, 640, 1280))
+    t.append(_transformer_block("TR_block", 384, 640, 8))
+    return t
+
+
+SUITES = {"KB-L1": kb_level1, "KB-L2": kb_level2, "KB-L3": kb_level3,
+          "TB-T": tb_t, "TB-G": tb_g}

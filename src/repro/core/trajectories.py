@@ -1,0 +1,104 @@
+"""Offline trajectory collection -> tree-structured RL environment.
+
+Mirrors the paper's "compact human-curated dataset" of optimization
+trajectories: for each training task we roll out exploration policies
+(epsilon-greedy on the cost model + uniform random) through the live
+MicroCoder, materializing every visited (state, action) transition into
+the task's OfflineTree.  The PPO loop then trains entirely offline (no
+live Micro Coding latency — the paper's stated motivation).
+
+Scaled to CPU budget: ~10^3-10^4 transitions rather than 60k trajectories;
+``collect`` is embarrassingly parallel across tasks/seeds on a fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import actions as A
+from repro.core import cost_model
+from repro.core.env import EnvConfig, KernelEnv, OfflineTree
+from repro.core.kernel_ir import KernelProgram
+from repro.core.micro_coding import StructuredMicroCoder
+
+
+@dataclasses.dataclass
+class CollectConfig:
+    episodes_random: int = 6
+    episodes_greedy: int = 4
+    max_steps: int = 8
+    eps: float = 0.35              # greedy-explorer epsilon
+    seed: int = 0
+    max_actions_per_node: int = 48
+
+
+def _greedy_action(tree: OfflineTree, fp: str, cands, coder, rng):
+    """Pick the materialized-or-new action with best cost-model child."""
+    best, best_cost = None, np.inf
+    for a in cands:
+        if a.kind == "stop":
+            continue
+        child, status = tree.expand(fp, a, coder)
+        if status == "ok" and child is not None:
+            c = tree.nodes[child].cost_s
+            if c < best_cost:
+                best, best_cost = a, c
+    return best
+
+
+def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
+            env_cfg: EnvConfig = EnvConfig()) -> OfflineTree:
+    rng = np.random.default_rng(ccfg.seed)
+    coder = StructuredMicroCoder()
+    tree = OfflineTree(task)
+    env = KernelEnv(task, coder, env_cfg)
+
+    def rollout(pick):
+        fp = tree.root
+        for _ in range(ccfg.max_steps):
+            prog = tree.nodes[fp].program
+            cands = A.candidate_actions(prog) if env_cfg.curated_actions \
+                else A.unrestricted_actions(prog)
+            if len(cands) > ccfg.max_actions_per_node:
+                idx = rng.choice(len(cands),
+                                 ccfg.max_actions_per_node, replace=False)
+                cands = [cands[i] for i in idx] + [A.STOP]
+            a = pick(fp, cands)
+            if a is None or a.kind == "stop":
+                break
+            child, status = tree.expand(fp, a, coder)
+            if status != "ok" or child is None:
+                continue                      # stay, try another action
+            fp = child
+
+    for ep in range(ccfg.episodes_random):
+        rollout(lambda fp, cands: cands[rng.integers(len(cands))])
+    for ep in range(ccfg.episodes_greedy):
+        def pick(fp, cands):
+            if rng.random() < ccfg.eps:
+                return cands[rng.integers(len(cands))]
+            return _greedy_action(tree, fp, cands, coder, rng)
+        rollout(pick)
+    return tree
+
+
+def collect_suite(tasks: list[KernelProgram],
+                  ccfg: CollectConfig = CollectConfig(),
+                  env_cfg: EnvConfig = EnvConfig()
+                  ) -> dict[str, OfflineTree]:
+    out = {}
+    for i, t in enumerate(tasks):
+        c = dataclasses.replace(ccfg, seed=ccfg.seed + i)
+        out[t.name] = collect(t, c, env_cfg)
+    return out
+
+
+def tree_stats(tree: OfflineTree) -> dict:
+    n_edges = sum(len(n.children) for n in tree.nodes.values())
+    ok = sum(1 for n in tree.nodes.values()
+             for c, s in n.children.values() if s == "ok")
+    best = min(n.cost_s for n in tree.nodes.values())
+    root = tree.nodes[tree.root].cost_s
+    return {"nodes": tree.size, "edges": n_edges, "ok_edges": ok,
+            "best_speedup": root / best}

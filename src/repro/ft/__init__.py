@@ -1,0 +1,2 @@
+from repro.ft.straggler import StragglerMonitor  # noqa: F401
+from repro.ft.elastic import elastic_plan, remesh_state  # noqa: F401

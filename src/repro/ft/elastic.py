@@ -1,0 +1,57 @@
+"""Elastic scaling: recompute the mesh when pods/hosts join or leave.
+
+Checkpoints are topology-agnostic (ckpt stores full logical arrays), so a
+rescale is: pick the new mesh shape -> rebuild ShardingRules -> device_put
+the restored state under the new shardings -> resume at the same step.
+The data pipeline is a pure function of (seed, step, row), so the global
+batch is identical across topologies => loss curves continue exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    dropped_replicas: tuple[int, ...] = ()
+
+    def make_mesh(self) -> Mesh:
+        return jax.make_mesh(self.mesh_shape, self.mesh_axes)
+
+
+def elastic_plan(n_chips: int, *, model_parallel: int = 16,
+                 pods: int = 1) -> ElasticPlan:
+    """Largest (pod, data, model) mesh fitting the surviving chips.
+
+    Keeps TP fixed (param shardability is arch-determined) and shrinks the
+    data axis — dropping one host of a 256-chip pod gives data=15 etc.
+    """
+    per_pod = n_chips // pods
+    data = max(1, per_pod // model_parallel)
+    if pods > 1:
+        return ElasticPlan((pods, data, model_parallel),
+                           ("pod", "data", "model"))
+    return ElasticPlan((data, model_parallel), ("data", "model"))
+
+
+def remesh_state(state_tree, shardings):
+    """Move a restored (host) state onto the new mesh's shardings."""
+    return jax.tree.map(jax.device_put, state_tree, shardings)
+
+
+def survivors_after_failure(mesh: Mesh, failed_hosts: list[int],
+                            chips_per_host: int = 4) -> int:
+    total = mesh.devices.size
+    return total - len(failed_hosts) * chips_per_host
+
+
+def rescale_rules(mesh: Mesh, fsdp: bool = True) -> ShardingRules:
+    rules = ShardingRules(mesh)
+    return rules.with_fsdp() if fsdp else rules

@@ -1,0 +1,56 @@
+"""Straggler detection + mitigation hooks.
+
+On a real fleet each host reports step wall-time; the monitor keeps a
+rolling watermark and flags hosts/steps exceeding ``threshold x p50``.
+Mitigations exposed as hooks (the runtime wiring in launch/train.py):
+
+  * ``should_checkpoint_now`` — preemptively snapshot when slowdowns
+    cluster (disk/network degradation often precedes node death),
+  * ``replicas_to_evict``    — replicas whose step time stays above the
+    watermark for ``patience`` consecutive steps (elastic re-mesh then
+    drops them via ft.elastic),
+  * backup-task semantics for input pipeline (data.pipeline is stateless
+    per (step, host), so any host can recompute another host's shard —
+    that IS the straggler work-stealing story for data).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0          # x median => straggler
+    patience: int = 3               # consecutive slow steps => evict
+    window: int = 50
+    _times: dict = field(default_factory=dict)      # replica -> deque
+    _slow_streak: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float, replica: int = 0) -> None:
+        dq = self._times.setdefault(
+            replica, collections.deque(maxlen=self.window))
+        dq.append(seconds)
+        med = self.median()
+        if med and seconds > self.threshold * med:
+            self._slow_streak[replica] = self._slow_streak.get(replica,
+                                                               0) + 1
+            self.events.append({"step": step, "replica": replica,
+                                "sec": seconds, "median": med})
+        else:
+            self._slow_streak[replica] = 0
+
+    def median(self) -> float:
+        all_t = [t for dq in self._times.values() for t in dq]
+        return statistics.median(all_t) if len(all_t) >= 5 else 0.0
+
+    def replicas_to_evict(self) -> list[int]:
+        return [r for r, s in self._slow_streak.items()
+                if s >= self.patience]
+
+    def should_checkpoint_now(self) -> bool:
+        recent = self.events[-self.patience:]
+        return len(recent) >= self.patience and \
+            len({e["replica"] for e in recent}) >= 2

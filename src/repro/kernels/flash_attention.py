@@ -1,0 +1,119 @@
+"""Flash attention (Pallas TPU): tiled online-softmax, GQA-aware.
+
+Grid (B, H, nq, nk) with the KV dimension sequential; per-(b,h,q-block)
+running max/denominator and an f32 output accumulator live in VMEM scratch
+across the KV loop.  GQA indexes the KV block by h // group.  Causal and
+sliding-window masking are applied per block; fully-masked KV blocks still
+DMA (skipping them is a schedule flag the autotuner can enable — the cost
+model prices the saved bandwidth).
+
+Schedule: blocks bq/bk (Tiling), pipeline_depth (Pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            nk: int, bq: int, bk: int, causal: bool, window: int,
+            q_offset: int, scale: float):
+    kj = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                           # (bq,1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)           # (bq,1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # (bq,bk)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                      # (bq,1)
+    l_new = alpha * l_ref[...][:, :1] + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "schedule", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0,
+                    schedule: KernelSchedule | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    s = schedule or default_schedule("flash_attention")
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    bq = min(s.block("bq", 128), Sq)
+    bk = min(s.block("bk", 128), Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, s.blocks)
+    qt = q.transpose(0, 2, 1, 3)       # (B,H,Sq,hd)
+    kt = k.transpose(0, 2, 1, 3)       # (B,KV,Sk,hd)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (B, H, Sq // bq, Sk // bk)
+    scale = hd ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=grid[3], bq=bq, bk=bk,
+                          causal=causal, window=window,
+                          q_offset=q_offset, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,61 @@
+"""Grouped (per-expert) matmul for MoE (Pallas TPU).
+
+x: (E, C, D) @ w: (E, D, F) -> (E, C, F); one grid axis per expert so each
+expert's GEMM tiles stream independently (EP shards the E axis across the
+mesh's model dimension).  Schedule: bc/bf/bd tiles + loop order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nd: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nd - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   schedule: KernelSchedule | None = None,
+                   interpret: bool = False) -> jax.Array:
+    s = schedule or default_schedule("grouped_matmul")
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc = min(s.block("bc", 128), C)
+    bf = min(s.block("bf", 128), F)
+    bd = min(s.block("bd", 128), D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0
+    grid = (E, C // bc, F // bf, D // bd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nd=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w.astype(x.dtype))
+    return out

@@ -1,0 +1,125 @@
+"""Blocked MXU matmul with fusable epilogue (Pallas TPU).
+
+Grid (m, n, k) with a float32 VMEM accumulator; K is the sequential
+("arbitrary") dimension, m/n are parallel.  The schedule controls:
+  * blocks bm/bn/bk   — VMEM tiles (MXU-aligned multiples of 128),
+  * loop_order        — grid permutation ("Reordering" action: K-innermost
+                        reuses the accumulator; N-innermost maximises x-tile
+                        reuse for wide outputs),
+  * epilogue          — fused bias/activation/row-max ("Fusion" action),
+  * pipeline_depth    — HBM->VMEM multi-buffering via dimension semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+
+def _apply_epilogue(y, b_ref, epilogue):
+    if "bias" in epilogue:
+        y = y + b_ref[...].astype(jnp.float32)
+    if epilogue.endswith("relu"):
+        y = jnp.maximum(y, 0.0)
+    elif epilogue.endswith("gelu"):
+        y = jax.nn.gelu(y)
+    elif epilogue.endswith("silu"):
+        y = jax.nn.silu(y)
+    return y
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_axis: int,
+            nk: int, epilogue: str, k_innermost: bool):
+    ki = pl.program_id(k_axis)
+
+    if k_innermost:
+        # fast path: f32 VMEM accumulator lives across the K loop
+        @pl.when(ki == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(ki == nk - 1)
+        def _fin():
+            o_ref[...] = _apply_epilogue(acc_ref[...], b_ref,
+                                         epilogue).astype(o_ref.dtype)
+    else:
+        # K not innermost ("Reordering" away from the accumulator-friendly
+        # order): revisit the output block — correct, but pays an HBM
+        # round-trip per K step; the cost model prices this.
+        @pl.when(ki == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        acc = o_ref[...].astype(jnp.float32) + jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+        @pl.when(ki < nk - 1)
+        def _mid():
+            o_ref[...] = acc.astype(o_ref.dtype)
+
+        @pl.when(ki == nk - 1)
+        def _fin():
+            o_ref[...] = _apply_epilogue(acc, b_ref,
+                                         epilogue).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("epilogue", "schedule",
+                                             "interpret"))
+def matmul(x: jax.Array, w: jax.Array, *, epilogue: str = "none",
+           bias: jax.Array | None = None,
+           schedule: KernelSchedule | None = None,
+           interpret: bool = False) -> jax.Array:
+    """x: (M,K) @ w: (K,N) -> (M,N), epilogue fused in-kernel."""
+    if epilogue == "row_max":      # reduction epilogue: separate path
+        y = matmul(x, w, epilogue="none", bias=None, schedule=schedule,
+                   interpret=interpret)
+        return jnp.max(y, axis=-1, keepdims=True)
+    s = schedule or default_schedule("matmul")
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = (min(s.block("bm", 128), M), min(s.block("bn", 128), N),
+                  min(s.block("bk", 128), K))
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, s.blocks)
+    order = tuple(s.loop_order) or ("m", "n", "k")
+    sizes = {"m": M // bm, "n": N // bn, "k": K // bk}
+    grid = tuple(sizes[a] for a in order)
+    gi = {a: i for i, a in enumerate(order)}       # axis -> grid position
+
+    def idx(*axes):
+        def index_map(*g):
+            return tuple(g[gi[a]] if a is not None else 0 for a in axes)
+        return index_map
+
+    if bias is None:
+        bias = jnp.zeros((N,), x.dtype)
+    sem = tuple("arbitrary" if a == "k" else "parallel" for a in order)
+    k_innermost = order[-1] == "k"
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_axis=gi["k"], nk=sizes["k"],
+                          epilogue=epilogue, k_innermost=k_innermost),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), idx("m", "k")),
+            pl.BlockSpec((bk, bn), idx("k", "n")),
+            pl.BlockSpec((bn,), idx("n")),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), idx("m", "n")),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=sem),
+        interpret=interpret,
+    )(x, w, bias)
+    return out
+
+
+reference = ref.matmul

@@ -1,0 +1,188 @@
+"""Kernel dispatch layer.
+
+Models call these ops.  On TPU backends they run the Pallas kernels from
+``repro.kernels.*`` with the schedule installed by the MTMC autotuner
+(``repro.core.autotune``); on CPU (tests, dry-run lowering) they run the
+mathematically identical jnp reference path, so the dry-run HLO reflects
+the same computation.
+
+``set_schedule(kernel_name, key, schedule)`` is the integration point the
+MTMC pipeline uses to install tuned schedules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+# (kernel_name, shape_key) -> KernelSchedule (see repro.core.kernel_ir)
+_SCHEDULES: dict[tuple[str, str], Any] = {}
+_FORCE_REF = False          # tests can force the reference path
+_FORCE_PALLAS = False       # tests force interpret-mode pallas on CPU
+
+
+def set_schedule(kernel: str, key: str, schedule: Any) -> None:
+    _SCHEDULES[(kernel, key)] = schedule
+
+
+def get_schedule(kernel: str, key: str, default: Any = None) -> Any:
+    return _SCHEDULES.get((kernel, key), default)
+
+
+def use_pallas() -> bool:
+    if _FORCE_REF:
+        return False
+    if _FORCE_PALLAS:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def force(mode: str | None) -> None:
+    """mode in {None, 'ref', 'pallas'} — used by kernel tests."""
+    global _FORCE_REF, _FORCE_PALLAS
+    _FORCE_REF = mode == "ref"
+    _FORCE_PALLAS = mode == "pallas"
+
+
+def interpret() -> bool:
+    return _FORCE_PALLAS and jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+_DEFAULT_CHUNK = 1024     # q-block of the chunked fallback (Tiling knob)
+
+
+def set_default_chunk(c: int) -> None:
+    """§Perf: system-level Tiling action — larger q-chunks divide the KV
+    re-read traffic of long-context attention by the same factor."""
+    global _DEFAULT_CHUNK
+    _DEFAULT_CHUNK = int(c)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              bidir_prefix=0, chunk=None):
+    """Flash attention (Pallas on TPU) / chunked online-softmax ref."""
+    if chunk is None:
+        chunk = _DEFAULT_CHUNK
+    if use_pallas() and bidir_prefix == 0 and q.shape[1] >= 128:
+        from repro.kernels import flash_attention as fa
+        sched = get_schedule("flash_attention", f"S{q.shape[1]}")
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, schedule=sched,
+                                  interpret=interpret())
+    return _ref_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, bidir_prefix=bidir_prefix,
+                          chunk=chunk)
+
+
+def _ref_attention(q, k, v, *, causal, window, q_offset, bidir_prefix,
+                   chunk):
+    if bidir_prefix:
+        # PaliGemma-style prefix-LM mask: keys < prefix are always visible.
+        scale = q.shape[-1] ** -0.5
+        scores = layers._gqa_scores(q * scale, k)
+        sq, sk = scores.shape[-2], scores.shape[-1]
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :] if causal else \
+            jnp.ones((sq, sk), bool)
+        mask |= kpos[None, :] < bidir_prefix
+        if window:
+            mask &= (kpos[None, :] > qpos[:, None] - window) | \
+                (kpos[None, :] < bidir_prefix)
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return layers._gqa_out(probs, v)
+    return layers.attention(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, chunk=chunk)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    return layers.decode_attention(q, k_cache, v_cache, pos, window=window)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    if use_pallas() and x.shape[-1] % 128 == 0:
+        from repro.kernels import rmsnorm as rn
+        sched = get_schedule("rmsnorm", f"D{x.shape[-1]}")
+        return rn.rmsnorm(x, scale, eps=eps, schedule=sched,
+                          interpret=interpret())
+    return layers.rms_norm(x, scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# matmul with fusable epilogue (MTMC's Fusion action target)
+# ---------------------------------------------------------------------------
+
+def matmul(x, w, *, epilogue: str = "none", bias=None):
+    if use_pallas() and x.ndim == 2 and x.shape[0] % 128 == 0 \
+            and x.shape[1] % 128 == 0 and w.shape[1] % 128 == 0:
+        from repro.kernels import matmul as mm
+        sched = get_schedule("matmul", f"{x.shape}x{w.shape}")
+        return mm.matmul(x, w, epilogue=epilogue, bias=bias,
+                         schedule=sched, interpret=interpret())
+    from repro.kernels import ref
+    return ref.matmul(x, w, epilogue=epilogue, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 / ssm scans
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, state=None, *, chunk=64):
+    T = r.shape[1]
+    if use_pallas() and T > 1 and T % max(chunk, 8) == 0:
+        from repro.kernels import rwkv6_scan as rk
+        sched = get_schedule("rwkv6_scan", f"T{T}")
+        return rk.rwkv6_scan(r, k, v, w, u, state, schedule=sched,
+                             interpret=interpret())
+    from repro.kernels import ref
+    if T > 1 and T % chunk == 0:
+        return ref.rwkv6_chunked(r, k, v, w, u, state, chunk=chunk)
+    return ref.rwkv6_scan(r, k, v, w, u, state)
+
+
+def ssm_scan(x, dt, A, B, C, state=None, *, chunk=64):
+    T = x.shape[1]
+    if use_pallas() and T > 1 and T % max(chunk, 8) == 0:
+        from repro.kernels import ssm_scan as sk
+        sched = get_schedule("ssm_scan", f"T{T}")
+        return sk.ssm_scan(x, dt, A, B, C, state, schedule=sched,
+                           interpret=interpret())
+    from repro.kernels import ref
+    if T > 1 and T % chunk == 0:
+        return ref.ssm_chunked(x, dt, A, B, C, state, chunk=chunk)
+    return ref.ssm_scan_step(x, dt, A, B, C, state)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (MoE expert compute)
+# ---------------------------------------------------------------------------
+
+def grouped_matmul(x_groups, w_groups):
+    """x: (E, C, D) or (G, E, C, D), w: (E, D, F) -> (..., E, C, F)."""
+    if x_groups.ndim == 4:
+        # group-local MoE dispatch: G is data-sharded; the TPU kernel
+        # runs per-shard on the 3D slice (einsum here; GSPMD keeps the
+        # G axis sharded)
+        return jnp.einsum("gecd,edf->gecf", x_groups,
+                          w_groups.astype(x_groups.dtype))
+    if use_pallas() and x_groups.shape[1] % 128 == 0 \
+            and x_groups.shape[2] % 128 == 0:
+        from repro.kernels import grouped_matmul as gm
+        sched = get_schedule("grouped_matmul", f"{x_groups.shape}")
+        return gm.grouped_matmul(x_groups, w_groups, schedule=sched,
+                                 interpret=interpret())
+    return jnp.einsum("ecd,edf->ecf", x_groups,
+                      w_groups.astype(x_groups.dtype))

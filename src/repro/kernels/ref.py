@@ -1,0 +1,205 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These double as the CPU / dry-run execution path (identical math), and as
+the ground truth for the per-kernel ``assert_allclose`` sweeps in tests.
+
+Semantics notes
+---------------
+RWKV6 (Finch) recurrence, per head, state S in R^{dk x dv}:
+
+    o_t = r_t @ (S_t + diag(u) k_t (x) v_t)
+    S_{t+1} = diag(w_t) S_t + k_t (x) v_t          (w_t in (0,1), per dk)
+
+The chunked form used by the TPU kernel evaluates, per chunk with inclusive
+log-decay cumsum ``ccum`` and exclusive ``ecum``:
+
+    inter:  (r_t * exp(ecum_t)) @ S_chunkstart
+    intra:  A[t,i] = sum_k r[t,k] k[i,k] exp(ecum_t[k] - ccum_i[k]), i<t
+            A[t,t] = sum_k r[t,k] u[k] k[t,k]
+    state:  S' = exp(ccum_last) * S + sum_i (k_i exp(ccum_last - ccum_i)) (x) v_i
+
+All exponents are <= 0, so the chunked form is numerically safe for any
+decay magnitude (see DESIGN.md; this is the TPU-native adaptation of the
+fla-style chunked linear attention).
+
+SSM: Mamba-2 / SSD-style scalar-per-head decay (TPU/MXU-native adaptation
+of selective scan — see DESIGN.md §2):
+
+    h_t = exp(A_h dt_t) h_{t-1} + dt_t x_t (x) B_t ;   y_t = h_t @ C_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# matmul + epilogues
+# ---------------------------------------------------------------------------
+
+EPILOGUES = ("none", "bias", "relu", "gelu", "silu", "bias_relu",
+             "bias_gelu", "row_max")
+
+
+def apply_epilogue(y, epilogue: str, bias=None):
+    if "bias" in epilogue and bias is not None:
+        y = y + bias.astype(y.dtype)
+    if epilogue.endswith("relu"):
+        y = jax.nn.relu(y)
+    elif epilogue.endswith("gelu"):
+        y = jax.nn.gelu(y)
+    elif epilogue.endswith("silu"):
+        y = jax.nn.silu(y)
+    elif epilogue == "row_max":
+        y = jnp.max(y, axis=-1, keepdims=True)
+    return y
+
+
+def matmul(x, w, *, epilogue: str = "none", bias=None):
+    y = jnp.einsum("mk,kn->mn", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    y = apply_epilogue(y, epilogue, bias)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, state=None):
+    """Step-by-step oracle.  r,k,w: (B,T,H,dk); v: (B,T,H,dv); u: (H,dk)."""
+    B, T, H, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), f32)
+    rs, ks, vs, ws = (a.astype(f32).transpose(1, 0, 2, 3)
+                      for a in (r, k, v, w))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        # op contract: w is clamped away from exact 0 (matches the
+        # log-space chunked forms; see rwkv6_chunked)
+        w_t = jnp.maximum(w_t, 1e-26)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + u.astype(f32)[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, o
+
+    S, o = jax.lax.scan(step, state.astype(f32), (rs, ks, vs, ws))
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), S
+
+
+def rwkv6_chunked(r, k, v, w, u, state=None, *, chunk=32):
+    """Chunk-parallel form (matches rwkv6_scan; used on CPU for long T)."""
+    B, T, H, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), f32)
+    assert T % chunk == 0, (T, chunk)
+    nc, c = T // chunk, chunk
+    rs, ks, vs, ws = (a.astype(f32).reshape(B, nc, c, H, -1)
+                      .transpose(1, 0, 2, 3, 4) for a in (r, k, v, w))
+    uf = u.astype(f32)
+
+    def per_chunk(S, inp):
+        rc, kc, vc, wc = inp               # (B,c,H,dk|dv)
+        # clamp: w underflowing to 0 must not produce log(0) = -inf
+        # (diffs of -inf cumsums are NaN); exp(-60) is already 0 in bf16.
+        lw = jnp.log(jnp.maximum(wc, 1e-26))   # <= 0, finite
+        ccum = jnp.cumsum(lw, axis=1)      # inclusive
+        ecum = ccum - lw                   # exclusive
+        # inter-chunk
+        o_inter = jnp.einsum("bchk,bhkv->bchv", rc * jnp.exp(ecum), S)
+        # intra-chunk: pairwise decay differences (c,c,dk), exponent <= 0
+        diff = ecum[:, :, None, :, :] - ccum[:, None, :, :, :]  # (B,c,c,H,dk)
+        tri = jnp.tril(jnp.ones((c, c), bool), -1)[None, :, :, None, None]
+        dec = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        A = jnp.einsum("bthk,bihk,btihk->bthi", rc, kc, dec)
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, uf, kc)
+        A += jnp.einsum("bth,ti->bthi", diag, jnp.eye(c, dtype=f32))
+        o_intra = jnp.einsum("bthi,bihv->bthv", A, vc)
+        # state update
+        rem = ccum[:, -1:, :, :] - ccum                     # >= 0? no: <=0
+        kd = kc * jnp.exp(rem)
+        S_new = jnp.exp(ccum[:, -1])[..., None] * S + \
+            jnp.einsum("bchk,bchv->bhkv", kd, vc)
+        return S_new, o_inter + o_intra
+
+    S, o = jax.lax.scan(per_chunk, state.astype(f32), (rs, ks, vs, ws))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, T, H, dv)
+    return o.astype(r.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# ssm (SSD-style scalar decay per head)
+# ---------------------------------------------------------------------------
+
+def ssm_scan_step(x, dt, A, B_, C, state=None):
+    """Single/loop scan oracle.  x: (B,T,H,P); dt: (B,T,H); A: (H,);
+    B_,C: (B,T,N); state: (B,H,P,N)."""
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((Bb, H, P, N), f32)
+    xs = x.astype(f32).transpose(1, 0, 2, 3)
+    dts = dt.astype(f32).transpose(1, 0, 2)
+    Bs = B_.astype(f32).transpose(1, 0, 2)
+    Cs = C.astype(f32).transpose(1, 0, 2)
+    Af = A.astype(f32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(Af[None, :] * dt_t)                    # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", dt_t[..., None] * x_t, b_t)
+        h = a[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    h, y = jax.lax.scan(step, state.astype(f32), (xs, dts, Bs, Cs))
+    return y.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def ssm_chunked(x, dt, A, B_, C, state=None, *, chunk=32):
+    """Chunked SSD form (matches ssm_scan_step)."""
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((Bb, H, P, N), f32)
+    assert T % chunk == 0
+    nc, c = T // chunk, chunk
+    xs = x.astype(f32).reshape(Bb, nc, c, H, P).transpose(1, 0, 2, 3, 4)
+    dts = dt.astype(f32).reshape(Bb, nc, c, H).transpose(1, 0, 2, 3)
+    Bs = B_.astype(f32).reshape(Bb, nc, c, N).transpose(1, 0, 2, 3)
+    Cs = C.astype(f32).reshape(Bb, nc, c, N).transpose(1, 0, 2, 3)
+    Af = A.astype(f32)
+
+    def per_chunk(h, inp):
+        xc, dtc, bc, cc = inp
+        la = Af[None, None, :] * dtc                  # (B,c,H) <= 0
+        ccum = jnp.cumsum(la, axis=1)                 # inclusive
+        # inter: h_t gets full inclusive decay from chunk start
+        y_inter = jnp.einsum("bth,bhpn,btn->bthp",
+                             jnp.exp(ccum), h, cc)
+        # intra: L[t,i] = exp(ccum_t - ccum_i), i <= t
+        diff = ccum[:, :, None, :] - ccum[:, None, :, :]   # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        L = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        S = jnp.einsum("btn,bin->bti", cc, bc)             # (B,c,c)
+        G = L * S[..., None]                               # (B,c,c,H)
+        y_intra = jnp.einsum("btih,bih,bihp->bthp", G, dtc, xc)
+        # state update
+        rem = ccum[:, -1:, :] - ccum                       # <= 0
+        upd = jnp.einsum("bih,bihp,bin->bhpn",
+                         dtc * jnp.exp(rem), xc, bc)
+        h = jnp.exp(ccum[:, -1])[..., None, None] * h + upd
+        return h, y_inter + y_intra
+
+    h, y = jax.lax.scan(per_chunk, state.astype(f32), (xs, dts, Bs, Cs))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bb, T, H, P)
+    return y.astype(x.dtype), h

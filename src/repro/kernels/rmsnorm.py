@@ -1,0 +1,49 @@
+"""Row-tiled RMSNorm (Pallas TPU).
+
+Rows are flattened and blocked; the full feature dim stays resident in
+VMEM (d_model <= 8k => <= 4MB f32 per 128-row tile).  Schedule: rows tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "schedule",
+                                             "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            schedule: KernelSchedule | None = None,
+            interpret: bool = False) -> jax.Array:
+    s = schedule or default_schedule("rmsnorm")
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(s.block("rows", 256), R)
+    if R % br != 0:
+        br = 1
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xf, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,108 @@
+"""RWKV6 (Finch) chunked recurrence kernel (Pallas TPU).
+
+Grid (B, H, n_chunks): the chunk axis is sequential ("arbitrary") and the
+per-(b,h) decay state S (dk x dv, f32) lives in VMEM scratch across chunk
+iterations — the TPU-native replacement for the CUDA wkv kernel's
+per-warp registers.  Within a chunk, all pairwise-decay exponents are
+differences of log-decay cumsums and hence <= 0 (numerically safe at any
+decay magnitude; see kernels/ref.py docstring for the algebra).
+
+Schedule: chunk length (Tiling), pipeline_depth (Pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+            S, *, nc: int, c: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        S[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    rc = r_ref[0, 0].astype(jnp.float32)        # (c, dk)
+    kc = k_ref[0, 0].astype(jnp.float32)
+    vc = v_ref[0, 0].astype(jnp.float32)        # (c, dv)
+    wc = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)            # (dk,)
+
+    lw = jnp.log(jnp.maximum(wc, 1e-26))        # <= 0, finite (w may
+    # underflow to 0 at strong decay; -inf cumsum diffs would be NaN)
+    ccum = jnp.cumsum(lw, axis=0)               # inclusive (c, dk)
+    ecum = ccum - lw                            # exclusive
+
+    o_inter = jnp.dot(rc * jnp.exp(ecum), S[...],
+                      preferred_element_type=jnp.float32)      # (c, dv)
+
+    diff = ecum[:, None, :] - ccum[None, :, :]                 # (c,c,dk)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dec = jnp.where(tri[..., None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    A = jnp.sum(rc[:, None, :] * kc[None, :, :] * dec, axis=-1)  # (c,c)
+    diag = jnp.sum(rc * u[None, :] * kc, axis=-1)                # (c,)
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) ==
+           jax.lax.broadcasted_iota(jnp.int32, (c, c), 1))
+    A = A + jnp.where(eye, diag[:, None], 0.0)
+    o = o_inter + jnp.dot(A, vc, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    rem = ccum[-1:, :] - ccum                                  # <= 0
+    kd = kc * jnp.exp(rem)
+    S[...] = jnp.exp(ccum[-1])[:, None] * S[...] + jnp.dot(
+        kd.T, vc, preferred_element_type=jnp.float32)
+
+    @pl.when(ti == nc - 1)
+    def _fin():
+        sout_ref[0, 0] = S[...]
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state=None, *,
+               schedule: KernelSchedule | None = None,
+               interpret: bool = False):
+    """r,k,w: (B,T,H,dk); v: (B,T,H,dv); u: (H,dk); state: (B,H,dk,dv).
+    Returns (o (B,T,H,dv), state (B,H,dk,dv) f32)."""
+    s = schedule or default_schedule("rwkv6_scan")
+    B, T, H, dk = r.shape
+    dv = v.shape[-1]
+    c = min(s.block("chunk", 64), T)
+    assert T % c == 0
+    nc = T // c
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    rt, kt, vt, wt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, w))
+
+    o, s_out = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, c=c),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, dv), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, dk), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, dk), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, dv), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, dv), r.dtype),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, state)
+    return o.transpose(0, 2, 1, 3), s_out

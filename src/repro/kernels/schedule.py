@@ -1,0 +1,64 @@
+"""Kernel schedules — the knobs the MTMC actions turn.
+
+A ``KernelSchedule`` is the concrete, hardware-level realisation of the
+semantic optimization state for one kernel:
+
+  * Tiling     -> ``blocks``        (VMEM BlockSpec tile sizes)
+  * Fusion     -> ``epilogue``      (fused producer/epilogue op)
+  * Pipeline   -> ``pipeline_depth``(HBM->VMEM multi-buffering depth)
+  * Reordering -> ``loop_order``    (grid-axis iteration order)
+
+``core.micro_coding`` rewrites these; ``core.cost_model`` prices them;
+the Pallas kernels below consume them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    # ``blocks`` accepts a dict but is stored as a sorted tuple of pairs so
+    # schedules are hashable (jit static args).
+    blocks: tuple = dataclasses.field(default_factory=tuple)
+    loop_order: tuple[str, ...] = ()
+    pipeline_depth: int = 2           # 1 = no double buffering
+    epilogue: str = "none"
+    flags: tuple[str, ...] = ()       # free-form feature toggles
+
+    def __post_init__(self):
+        if isinstance(self.blocks, Mapping):
+            object.__setattr__(self, "blocks",
+                               tuple(sorted(self.blocks.items())))
+        object.__setattr__(self, "loop_order", tuple(self.loop_order))
+        object.__setattr__(self, "flags", tuple(self.flags))
+
+    @property
+    def blocks_dict(self) -> dict[str, int]:
+        return dict(self.blocks)
+
+    def block(self, name: str, default: int) -> int:
+        return int(self.blocks_dict.get(name, default))
+
+    def replace(self, **kw) -> "KernelSchedule":
+        if isinstance(kw.get("blocks"), Mapping):
+            kw["blocks"] = tuple(sorted(kw["blocks"].items()))
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULTS: dict[str, KernelSchedule] = {
+    "matmul": KernelSchedule(blocks={"bm": 128, "bn": 128, "bk": 128},
+                             loop_order=("m", "n", "k")),
+    "flash_attention": KernelSchedule(blocks={"bq": 128, "bk": 128}),
+    "rmsnorm": KernelSchedule(blocks={"rows": 256}),
+    "rwkv6_scan": KernelSchedule(blocks={"chunk": 64}),
+    "ssm_scan": KernelSchedule(blocks={"chunk": 64}),
+    "grouped_matmul": KernelSchedule(
+        blocks={"bc": 128, "bf": 128, "bd": 128},
+        loop_order=("c", "f", "d")),
+}
+
+
+def default_schedule(kernel: str) -> KernelSchedule:
+    return DEFAULTS.get(kernel, KernelSchedule())

@@ -1,0 +1,103 @@
+"""SSD-style SSM chunked scan kernel (Pallas TPU).
+
+Mamba-2-style scalar-per-head decay makes the chunked form pure matmuls
+(1-semiseparable structure) — the MXU-native adaptation of selective scan
+(DESIGN.md §2).  Grid (B, Hs, n_chunks), per-(b,h) state (P x N, f32) in
+VMEM scratch across the sequential chunk axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schedule import KernelSchedule, default_schedule
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, o_ref, hout_ref,
+            Hs, *, nc: int, c: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        Hs[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    xc = x_ref[0, 0].astype(jnp.float32)          # (c, P)
+    dtc = dt_ref[0, 0].astype(jnp.float32)        # (c,)
+    a = a_ref[0, 0].astype(jnp.float32)           # scalar
+    bc = b_ref[0].astype(jnp.float32)             # (c, N)
+    cc = c_ref[0].astype(jnp.float32)             # (c, N)
+
+    la = a * dtc                                  # (c,) <= 0
+    ccum = jnp.cumsum(la)                         # (c,)
+
+    h = Hs[...]                                   # (P, N)
+    y_inter = jnp.exp(ccum)[:, None] * jnp.dot(
+        cc, h.T, preferred_element_type=jnp.float32)           # (c, P)
+
+    diff = ccum[:, None] - ccum[None, :]                       # (c, c)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    L = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    S = jnp.dot(cc, bc.T, preferred_element_type=jnp.float32)  # (c, c)
+    G = L * S
+    y_intra = jnp.dot(G, dtc[:, None] * xc,
+                      preferred_element_type=jnp.float32)      # (c, P)
+    o_ref[0, 0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+    rem = ccum[-1] - ccum                                      # <= 0
+    xd = (dtc * jnp.exp(rem))[:, None] * xc                    # (c, P)
+    upd = jnp.dot(xd.T, bc, preferred_element_type=jnp.float32)  # (P, N)
+    Hs[...] = jnp.exp(ccum[-1]) * h + upd
+
+    @pl.when(ti == nc - 1)
+    def _fin():
+        hout_ref[0, 0] = Hs[...]
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def ssm_scan(x, dt, A, B_, C, state=None, *,
+             schedule: KernelSchedule | None = None,
+             interpret: bool = False):
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,); B_,C: (B,T,N);
+    state: (B,H,P,N).  Returns (y (B,T,H,P), state f32)."""
+    s = schedule or default_schedule("ssm_scan")
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    c = min(s.block("chunk", 64), T)
+    assert T % c == 0
+    nc = T // c
+    if state is None:
+        state = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xt = x.transpose(0, 2, 1, 3)                  # (B,H,T,P)
+    dtt = dt.transpose(0, 2, 1)                   # (B,H,T)
+    a2 = A.reshape(H, 1)
+
+    y, h_out = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, c=c),
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c), lambda b, h, t: (b, h, t)),
+            pl.BlockSpec((1, 1), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, T, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, a2, B_, C, state)
+    return y.transpose(0, 2, 1, 3), h_out

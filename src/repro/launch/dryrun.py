@@ -1,0 +1,224 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent on the production meshes
+(16x16 single-pod, 2x16x16 multi-pod = 512 chips) without hardware:
+inputs/params/optimizer state are ShapeDtypeStructs, ``.lower().compile()``
+must succeed, and the compiled artifact yields memory_analysis /
+cost_analysis / the partitioned HLO for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_5_3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+# The VERY FIRST lines, before ANY other import (jax locks device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import (RunConfig, SHAPES, normalize_for_mesh,
+                                shape_applicable)  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.dist.sharding import ShardingRules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api, makers  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.serve.engine import make_serve_step  # noqa: E402
+from repro.train.trainer import make_train_step  # noqa: E402
+
+
+def rules_for(mesh, kind: str, fsdp: bool = True,
+              opts: tuple[str, ...] = ()) -> ShardingRules:
+    rules = ShardingRules(mesh)
+    if kind == "train":
+        rules = rules.with_fsdp() if fsdp else rules
+    elif kind == "decode":
+        # KV-cache sequence axis takes whatever mesh axes the batch axis
+        # leaves free (flash-decode style partitioned softmax)
+        rules = rules.replace(kv_seq=("data", "model"))
+    if "seq_shard" in opts:
+        # §Perf H1: shard attention over the query-sequence axis when
+        # heads are unshardable (hymba) — see transformer._q_axes
+        rules = rules.replace(seq=("model",))
+    if "bf16_reduce" in opts:
+        # §Perf H2: pin TP activation all-reduces to bf16
+        rules = rules.with_flags("bf16_reduce")
+    for o in opts:
+        if o.startswith("qchunk"):
+            # §Perf H3: Tiling action — bigger attention q-chunks
+            from repro.kernels import ops as kops
+            kops.set_default_chunk(int(o[len("qchunk"):]))
+    return rules
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp: bool = True, run: RunConfig | None = None,
+               rules_override=None, opts: tuple[str, ...] = ()):
+    """Returns (lowered, compiled, meta) for one cell."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, reason = shape_applicable(cfg0, shape)
+    if not ok:
+        return None, None, {"skipped": reason, "arch": arch,
+                            "shape": shape_name, "mesh": mesh_name}
+    rules = rules_override or rules_for(mesh, shape.kind, fsdp, opts)
+    cfg = normalize_for_mesh(cfg0, rules.tp)
+    run = run or RunConfig(gather_once=("gather_once" in opts))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        params = api.abstract_params(cfg)
+        opt = jax.eval_shape(adamw.init, params)
+        batch = api.batch_struct(cfg, shape)
+        step = make_train_step(cfg, shape, run, rules=rules)
+        p_sh = api.param_shardings(cfg, rules)
+        o_sh = {"mu": p_sh, "nu": p_sh,
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())}
+        b_sh = {k: jax.sharding.NamedSharding(
+            mesh, v) for k, v in api.batch_pspecs(
+                cfg, shape, rules, batch).items()}
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh))
+        lowered = jitted.lower(params, opt, batch)
+        extra = {"accum": step.accum}
+    elif shape.kind == "prefill":
+        params = api.abstract_params(cfg, jnp.bfloat16)
+        batch = api.batch_struct(cfg, shape, with_targets=False)
+        model = api.get_model(cfg)
+
+        def prefill(params, batch):
+            logits, aux = model.forward(cfg, params, batch, rules=rules,
+                                        remat=False)
+            return logits
+
+        p_sh = api.param_shardings(cfg, rules)
+        b_sh = {k: jax.sharding.NamedSharding(mesh, v)
+                for k, v in api.batch_pspecs(cfg, shape, rules,
+                                             batch).items()}
+        lowered = jax.jit(prefill,
+                          in_shardings=(p_sh, b_sh)).lower(params, batch)
+        extra = {}
+    else:  # decode
+        params = api.abstract_params(cfg, jnp.bfloat16)
+        spec = api.decode_input_specs(cfg, shape)
+        serve_step = make_serve_step(cfg, rules=rules)
+        p_sh = api.param_shardings(cfg, rules)
+        c_sh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            api.cache_pspecs(cfg, shape.global_batch, shape.seq_len,
+                             rules))
+        t_sh = jax.sharding.NamedSharding(
+            mesh, api.batch_pspecs(cfg, shape, rules,
+                                   {"tokens": spec["tokens"]})["tokens"])
+        pos_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        jitted = jax.jit(serve_step,
+                         in_shardings=(p_sh, c_sh, t_sh, pos_sh))
+        lowered = jitted.lower(params, spec["cache"], spec["tokens"],
+                               spec["pos"])
+        extra = {}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "chips": chips, "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1), **extra}
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             want_roofline: bool = True,
+             opts: tuple[str, ...] = ()) -> dict:
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name,
+                                             multi_pod=multi_pod,
+                                             opts=opts)
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "FAIL",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+    if compiled is None:
+        return {**meta, "status": "SKIP"}
+    mem = compiled.memory_analysis()
+    out = {**meta, "status": "OK",
+           "arg_gb": round(mem.argument_size_in_bytes / 2**30, 3),
+           "out_gb": round(mem.output_size_in_bytes / 2**30, 3),
+           "temp_gb": round(mem.temp_size_in_bytes / 2**30, 3)}
+    if want_roofline:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        rl = analysis.analyze(
+            compiled, arch=arch, shape=shape,
+            mesh_name=meta["mesh"], chips=meta["chips"],
+            cfg=normalize_for_mesh(cfg, 16), kind=shape.kind)
+        out["roofline"] = rl.row()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", default="",
+                    help="comma list: seq_shard,gather_once (§Perf)")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in cells:
+        r = run_cell(arch, shape, multi_pod=args.multi_pod, opts=opts)
+        if opts:
+            r["opts"] = list(opts)
+        results.append(r)
+        line = {k: v for k, v in r.items()
+                if k in ("arch", "shape", "mesh", "status", "compile_s",
+                         "arg_gb", "temp_gb", "error")}
+        print(json.dumps(line), flush=True)
+        if r["status"] == "OK" and "roofline" in r:
+            rl = r["roofline"]
+            print(f"  terms: compute={rl['compute_s']*1e3:.2f}ms "
+                  f"memory={rl['memory_s']*1e3:.2f}ms "
+                  f"collective={rl['collective_s']*1e3:.2f}ms "
+                  f"dominant={rl['dominant']} "
+                  f"roofline_frac={rl['roofline_fraction']:.3f}",
+                  flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'OK' for r in results)} ok, "
+          f"{sum(r['status'] == 'SKIP' for r in results)} skip, "
+          f"{n_fail} fail")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

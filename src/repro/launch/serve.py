@@ -1,0 +1,45 @@
+"""Serving launcher.
+
+  python -m repro.launch.serve --arch qwen2_5_3b --reduced --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, reduced
+from repro.models import api
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise SystemExit(f"Engine demo supports transformer families; "
+                         f"{cfg.family} decodes via its serve_step "
+                         f"(see launch/dryrun.py decode cells)")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=64, batch_slots=4)
+    key = jax.random.PRNGKey(1)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (3 + i % 4,), 1, 100, jnp.int32)
+               for i in range(args.requests)]
+    outs = engine.generate(prompts, max_new_tokens=args.max_new)
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch qwen2_5_3b --steps 20 --reduced
+
+On a real fleet each host runs this under its own process index; the
+mesh comes from launch.mesh and all state handling (checkpoint/restart,
+elastic re-mesh, stragglers) is wired here.  On this CPU container use
+--reduced for a runnable configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import RunConfig, SHAPES, ShapeConfig
+from repro.configs.registry import get_config, reduced
+from repro.ft import StragglerMonitor
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+        shape = ShapeConfig("reduced", 64, 4, "train")
+    else:
+        shape = SHAPES[args.shape]
+    run = RunConfig(accum_steps=args.accum)
+    monitor = StragglerMonitor()
+    trainer = Trainer(cfg, shape, run, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      straggler_monitor=monitor)
+    state = trainer.restore_or_init()
+    print(f"[train] {cfg.name} {shape.name} from step {state.step} "
+          f"on {len(jax.devices())} device(s)")
+    state = trainer.run_steps(state, args.steps)
+    for m in trainer.metrics_log[-5:]:
+        print({k: round(v, 4) for k, v in m.items()})
+    if monitor.replicas_to_evict():
+        print(f"[ft] replicas flagged for eviction: "
+              f"{monitor.replicas_to_evict()}")
+
+
+if __name__ == "__main__":
+    main()

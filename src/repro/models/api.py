@@ -1,0 +1,147 @@
+"""Uniform model API + input specs.
+
+``get_model(cfg)`` returns the family module implementing:
+    param_tree(cfg, make) / forward(...) -> (logits, aux)
+    cache_tree(cfg, make, batch, max_len) / decode_step(...)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable, no
+device allocation (the multi-pod dry-run lowers against these).
+Modality frontends (vision patches / audio frames) are stubs: precomputed
+embeddings appear directly as inputs, per the assignment spec.
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import makers
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer
+    if cfg.family == "rwkv":
+        from repro.models import rwkv6
+        return rwkv6
+    if cfg.family == "hybrid":
+        from repro.models import hymba
+        return hymba
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    m = get_model(cfg)
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    return m.param_tree(cfg, makers.init_maker(key, dtype))
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    m = get_model(cfg)
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    return m.param_tree(cfg, makers.abstract_maker(dtype))
+
+
+def param_pspecs(cfg: ModelConfig, rules):
+    m = get_model(cfg)
+    return m.param_tree(cfg, makers.pspec_maker(rules))
+
+
+def param_shardings(cfg: ModelConfig, rules):
+    m = get_model(cfg)
+    return m.param_tree(cfg, makers.sharding_maker(rules))
+
+
+# ---------------------------------------------------------------------------
+# batch construction (abstract + concrete)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, *,
+                 with_targets: bool | None = None) -> dict:
+    """ShapeDtypeStructs for the forward/train batch of one shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if with_targets is None:
+        with_targets = shape.kind == "train"
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    batch: dict = {}
+    if cfg.family == "vlm":
+        P = cfg.prefix_len
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                      cdt)
+    elif cfg.family == "encdec":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_len, cfg.d_model), cdt)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if with_targets:
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules,
+                 batch: dict | None = None) -> dict:
+    batch = batch or batch_struct(cfg, shape)
+    out = {}
+    for name, s in batch.items():
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[name] = rules.spec(s.shape, axes)
+    return out
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array,
+                   **overrides) -> dict:
+    """Random concrete batch (smoke tests / examples)."""
+    out = {}
+    for name, s in batch_struct(cfg, shape).items():
+        k = jax.random.fold_in(key, abs(hash(name)) % (2 ** 31))
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0,
+                                           cfg.true_vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype)
+    out.update(overrides)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode-side specs
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None):
+    m = get_model(cfg)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return m.cache_tree(cfg, makers.abstract_maker(dtype), batch, max_len)
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, max_len: int, rules):
+    m = get_model(cfg)
+    return m.cache_tree(cfg, makers.pspec_maker(rules), batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, key=None,
+               dtype=None):
+    m = get_model(cfg)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return m.cache_tree(cfg, makers.init_maker(key, dtype), batch, max_len)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for serve_step on one decode cell."""
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "cache": abstract_cache(cfg, B, S),
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

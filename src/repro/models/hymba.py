@@ -1,0 +1,237 @@
+"""Hymba — hybrid blocks with PARALLEL attention + SSM heads.
+[arXiv:2411.13676]
+
+Each block runs a GQA attention path (sliding-window except 3 global
+layers) and a Mamba-style SSM path on the same normed input; the two
+normalized outputs are averaged (the paper's mean-fusion of parallel
+heads).  The SSM path uses SSD-style scalar-per-head decay (TPU/MXU-native
+adaptation of selective scan — DESIGN.md §2) with P=128 channels/head.
+
+Decode is unrolled per layer (not scanned) because the global-attention
+layers carry a full-length KV cache while SWA layers carry a ring buffer
+of window size — heterogeneous cache shapes (see DESIGN.md; this is the
+memory feature that makes long_500k decode feasible).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers, transformer
+from repro.models.layers import (
+    apply_rope, linear, normal_init, ones_init, rms_norm, zeros_init,
+)
+
+SSM_P = 128   # channels per SSM head
+CONV_K = 4    # depthwise causal conv width
+
+
+def _ssm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return d_in, d_in // SSM_P   # (d_inner, n_ssm_heads)
+
+
+def _a_init():
+    def init(key, shape, dtype):
+        return -jnp.exp(jax.random.uniform(
+            key, shape, jnp.float32, -2.0, 1.0)).astype(dtype)
+    return init
+
+
+def ssm_tree(cfg: ModelConfig, make, L: int):
+    D, N = cfg.d_model, cfg.ssm_state
+    d_in, Hs = _ssm_dims(cfg)
+    w = normal_init(0.02)
+    return {
+        "s_in": make("s_in", (L, D, 2 * d_in), ("layers", "embed", "heads"),
+                     w),
+        "s_conv": make("s_conv", (L, CONV_K, d_in),
+                       ("layers", None, "heads"), normal_init(0.1)),
+        "s_dt": make("s_dt", (L, D, Hs), ("layers", "embed", None), w),
+        "s_dt_bias": make("s_dt_bias", (L, Hs), ("layers", None),
+                          zeros_init()),
+        "s_B": make("s_B", (L, D, N), ("layers", "embed", None), w),
+        "s_C": make("s_C", (L, D, N), ("layers", "embed", None), w),
+        "s_A": make("s_A", (L, Hs), ("layers", None), _a_init()),
+        "s_D": make("s_D", (L, Hs), ("layers", None), ones_init()),
+        "s_norm": make("s_norm", (L, d_in), ("layers", "heads"),
+                       ones_init()),
+        "s_out": make("s_out", (L, d_in, D), ("layers", "heads", "embed"),
+                      normal_init(layers.depth_scale(0.02, L))),
+        "attn_out_norm": make("attn_out_norm", (L, cfg.d_model),
+                              ("layers", "embed"), ones_init()),
+        "ssm_out_norm": make("ssm_out_norm", (L, cfg.d_model),
+                             ("layers", "embed"), ones_init()),
+    }
+
+
+def param_tree(cfg: ModelConfig, make):
+    t = transformer.param_tree(cfg, make)
+    t["blocks"].update(ssm_tree(cfg, make, cfg.n_layers))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# SSM path
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over time.  x: (B,T,C), kernel: (K,C).
+    state: (B,K-1,C) trailing context (decode).  Returns (y, new_state)."""
+    B, T, C = x.shape
+    K = kernel.shape[0]
+    pad = jnp.zeros((B, K - 1, C), x.dtype) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B,T+K-1,C)
+    y = sum(xp[:, i:i + T] * kernel[i].astype(x.dtype) for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def ssm_path(cfg: ModelConfig, p: dict, h: jax.Array, *,
+             conv_state=None, ssm_state=None, rules=None):
+    """h: (B,T,D) normed -> (out (B,T,D), (conv_state, ssm_state))."""
+    B, T, D = h.shape
+    N = cfg.ssm_state
+    d_in, Hs = _ssm_dims(cfg)
+    xz = linear(h, p["s_in"])                             # (B,T,2*d_in)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, new_conv = _causal_conv(x, p["s_conv"], conv_state)
+    x = jax.nn.silu(x)
+    dt = jax.nn.softplus(linear(h, p["s_dt"])
+                         + p["s_dt_bias"].astype(h.dtype))  # (B,T,Hs)
+    B_ = linear(h, p["s_B"])                              # (B,T,N)
+    C_ = linear(h, p["s_C"])
+    xh = x.reshape(B, T, Hs, SSM_P)
+    if rules is not None:
+        xh = rules.constrain(xh, ("batch", None, "heads", None))
+    y, new_state = ops.ssm_scan(xh, dt, p["s_A"], B_, C_, ssm_state)
+    y = y + p["s_D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, T, d_in)
+    y = rms_norm(y, p["s_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return linear(y, p["s_out"]), (new_conv, new_state)
+
+
+# ---------------------------------------------------------------------------
+# forward (scan over layers; both paths share the pre-norm input)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *, rules=None,
+            remat: bool = True, collect_cache: bool = False):
+    tokens = batch["tokens"]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    if rules is not None:
+        x = rules.constrain(x, ("batch", None, None))
+
+    def block(x, scanned):
+        p, idx = scanned
+        B, S, D = x.shape
+        positions = jnp.arange(S)
+        window = transformer._window_for_layer(cfg, idx)
+        attn_out = transformer.attn_block(
+            cfg, p, x, positions=positions, window=window, rules=rules)
+        h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
+        ssm_out, _ = ssm_path(cfg, p, h, rules=rules)
+        fused = 0.5 * (
+            rms_norm(attn_out, p["attn_out_norm"], cfg.norm_eps)
+            + rms_norm(ssm_out, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + fused
+        delta, aux = transformer.mlp_block(cfg, p, x, rules)
+        x = x + delta
+        if rules is not None:
+            x = rules.constrain(x, ("batch", None, None))
+        return x, aux
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    idxs = jnp.arange(cfg.n_layers)
+    x, aux = jax.lax.scan(block, x, (params["blocks"], idxs))
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = transformer.unembed(cfg, params, x, rules)
+    return logits, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# decode: heterogeneous caches (ring buffers for SWA, full for global)
+# ---------------------------------------------------------------------------
+
+def cache_tree(cfg: ModelConfig, make, batch: int, max_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    d_in, Hs = _ssm_dims(cfg)
+    W = min(cfg.swa_window, max_len) if cfg.swa_window else max_len
+    t = {}
+    for i in range(cfg.n_layers):
+        is_global = i in cfg.global_layers
+        S = max_len if is_global else W
+        t[f"k{i}"] = make(f"cache_k{i}", (batch, S, KV, hd),
+                          ("batch", "kv_seq" if is_global else None,
+                           "kv_heads", None), zeros_init())
+        t[f"v{i}"] = make(f"cache_v{i}", (batch, S, KV, hd),
+                          ("batch", "kv_seq" if is_global else None,
+                           "kv_heads", None), zeros_init())
+        t[f"conv{i}"] = make(f"cache_conv{i}", (batch, CONV_K - 1, d_in),
+                             ("batch", None, "heads"), zeros_init())
+        t[f"ssm{i}"] = make(f"cache_ssm{i}",
+                            (batch, Hs, SSM_P, cfg.ssm_state),
+                            ("batch", "heads", None, None), zeros_init())
+    return t
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array, *, rules=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = cfg.swa_window
+    x = params["embed"].astype(cdt)[tokens]
+    positions = jnp.full((1,), pos)
+    new_cache = {}
+    blocks = params["blocks"]
+
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], blocks)
+        is_global = i in cfg.global_layers
+        h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
+        q = linear(h, p["wq"], p.get("bq")).reshape(B, 1, H, hd)
+        k = linear(h, p["wk"], p.get("bk")).reshape(B, 1, KV, hd)
+        v = linear(h, p["wv"], p.get("bv")).reshape(B, 1, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ck, cv = cache[f"k{i}"], cache[f"v{i}"]
+        slot = pos if is_global else (pos % W if W else pos)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        if is_global:
+            o = ops.decode_attention(q, ck, cv, pos)
+        else:
+            # ring buffer: valid slots are j <= pos (early) or all (wrapped)
+            S = ck.shape[1]
+            valid = (jnp.arange(S) <= pos) | (pos >= S)
+            scores = layers._gqa_scores(q * hd ** -0.5, ck)
+            scores = jnp.where(valid[None, None, None, None, :],
+                               scores, -1e30)
+            probs = jax.nn.softmax(scores, -1).astype(cv.dtype)
+            o = layers._gqa_out(probs, cv)
+        attn_out = linear(o.reshape(B, 1, H * hd), p["wo"])
+        ssm_out, (conv_s, ssm_s) = ssm_path(
+            cfg, p, h, conv_state=cache[f"conv{i}"],
+            ssm_state=cache[f"ssm{i}"], rules=rules)
+        fused = 0.5 * (
+            rms_norm(attn_out, p["attn_out_norm"], cfg.norm_eps)
+            + rms_norm(ssm_out, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + fused
+        delta, _ = transformer.mlp_block(cfg, p, x, rules)
+        x = x + delta
+        new_cache[f"k{i}"], new_cache[f"v{i}"] = ck, cv
+        new_cache[f"conv{i}"] = conv_s.astype(cache[f"conv{i}"].dtype)
+        new_cache[f"ssm{i}"] = ssm_s.astype(cache[f"ssm{i}"].dtype)
+
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = transformer.unembed(cfg, params, x, rules)
+    return logits, new_cache

@@ -1,0 +1,221 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameter trees are declared once via a ``make(name, shape, axes, init)``
+callback; three makers derive real params, abstract ShapeDtypeStructs and
+PartitionSpecs from the same declaration (see ``makers.py``).
+
+All sequence layers are written to be scanned over the layer axis: their
+parameter trees carry a leading ``layers`` dimension added by the model
+builders, and forwards take per-layer slices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Maker = Callable[..., jax.Array]
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(scale: float = 0.02):
+    def init(key, shape, dtype):
+        return (scale * jax.random.normal(key, shape)).astype(dtype)
+    return init
+
+
+def zeros_init():
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init():
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (reference / XLA path; Pallas path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,H,hd)  k: (B,Sk,KV,hd)  -> scores (B,KV,G,Sq,Sk)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,KV,G,Sq,Sk)  v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    b, kv, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, kv * g, -1)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              q_offset: int | jax.Array = 0,
+              chunk: int = 0) -> jax.Array:
+    """Masked multi-head attention with GQA grouping.
+
+    window > 0 => sliding-window mask (local attention).
+    chunk > 0  => online-softmax over query chunks (memory-bounded: used
+    for long prefill and as the XLA-level 'flash' fallback of the Pallas
+    kernel).  q_offset is the absolute position of q[0] (decode/prefill).
+    """
+    if chunk and q.shape[1] > chunk and q.shape[1] % chunk == 0:
+        return _chunked_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, chunk=chunk)
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q * scale, k)                  # (B,KV,G,Sq,Sk) f32
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    mask = _apply_window(mask, qpos, kpos, window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return _gqa_out(probs, v)
+
+
+def _apply_window(mask, qpos, kpos, window):
+    """Sliding-window mask; ``window`` may be a traced scalar (scanned
+    per-layer windows, hymba) where 0 means global attention."""
+    if isinstance(window, int):
+        if window == 0:
+            return mask
+        return mask & (kpos[None, :] > (qpos[:, None] - window))
+    w = jnp.asarray(window)
+    wm = (kpos[None, :] > (qpos[:, None] - w)) | (w == 0)
+    return mask & wm
+
+
+def _chunked_attention(q, k, v, *, causal, window, q_offset, chunk):
+    b, sq, h, hd = q.shape
+    nc = sq // chunk
+    qc = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, q_i):
+        i, = carry
+        off = q_offset + i * chunk
+        o = attention(q_i, k, v, causal=causal, window=window,
+                      q_offset=off, chunk=0)
+        return (i + 1,), o
+
+    _, out = jax.lax.scan(body, (jnp.int32(0),), qc)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-step attention against a KV cache.
+
+    q: (B,1,H,hd); caches: (B,S,KV,hd); pos: scalar index of the new token.
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q * scale, k_cache)            # (B,KV,G,1,S)
+    s = k_cache.shape[1]
+    kpos = jnp.arange(s)
+    mask = kpos <= pos
+    if isinstance(window, int):
+        if window:
+            mask &= kpos > (pos - window)
+    else:
+        w = jnp.asarray(window)
+        mask &= (kpos > (pos - w)) | (w == 0)
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return _gqa_out(probs, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None):
+    y = jnp.einsum("...d,dk->...k", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 true_vocab: int) -> jax.Array:
+    """Mean cross-entropy; padded vocab columns masked out.
+
+    logits: (B,S,Vp) (possibly TP-padded), targets: (B,S) int32.
+    """
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp != true_vocab:
+        col = jnp.arange(vp)
+        logits = jnp.where(col < true_vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None],
+                                 axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def fold_key(key: jax.Array, name: str) -> jax.Array:
+    return jax.random.fold_in(key, abs(hash(name)) % (2 ** 31))
+
+
+def depth_scale(base: float, n_layers: int) -> float:
+    return base / np.sqrt(2 * max(n_layers, 1))
+

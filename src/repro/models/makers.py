@@ -1,0 +1,59 @@
+"""Param-tree makers.
+
+A model's parameter tree is declared once as ``param_tree(cfg, make)`` where
+``make(name, shape, axes, init)`` is called per leaf.  The three makers:
+
+  * ``init_maker``      -> real arrays (smoke tests / examples)
+  * ``abstract_maker``  -> jax.ShapeDtypeStruct (dry-run, no allocation)
+  * ``pspec_maker``     -> PartitionSpec from logical axes (sharding)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules
+from repro.models import layers
+
+TreeFn = Callable[..., Any]
+
+
+def init_maker(key: jax.Array, dtype: Any) -> TreeFn:
+    def make(name, shape, axes, init=None):
+        init = init or layers.normal_init()
+        return init(layers.fold_key(key, name), shape, dtype)
+    return make
+
+
+def abstract_maker(dtype: Any) -> TreeFn:
+    def make(name, shape, axes, init=None):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return make
+
+
+def pspec_maker(rules: ShardingRules) -> TreeFn:
+    def make(name, shape, axes, init=None):
+        return rules.spec(shape, axes)
+    return make
+
+
+def sharding_maker(rules: ShardingRules) -> TreeFn:
+    def make(name, shape, axes, init=None):
+        return rules.sharding(shape, axes)
+    return make
+
+
+def build(param_tree: Callable[[TreeFn], Any], *, mode: str,
+          key: jax.Array | None = None, dtype: Any = jnp.float32,
+          rules: ShardingRules | None = None) -> Any:
+    if mode == "init":
+        return param_tree(init_maker(key, dtype))
+    if mode == "abstract":
+        return param_tree(abstract_maker(dtype))
+    if mode == "pspec":
+        return param_tree(pspec_maker(rules))
+    if mode == "sharding":
+        return param_tree(sharding_maker(rules))
+    raise ValueError(mode)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts MLP (phi3.5-moe, dbrx).
+
+Token-choice top-k routing with per-expert capacity (GShard-style, dropped
+tokens fall through the residual), dispatched as a dense (E, C, D) gather +
+grouped matmul — the TPU-native formulation: the grouped matmul maps onto
+``kernels/grouped_matmul`` (MXU), and dispatch/combine are scatters that
+GSPMD turns into all-to-all-ish collectives across the data axis.
+
+Expert parallelism: the expert axis maps onto the "model" mesh axis
+(16 experts / 16-way TP => 1 expert per shard).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import normal_init, depth_scale
+
+
+def moe_mlp_tree(cfg: ModelConfig, make, L: int, prefix: str = ""):
+    D, FF, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    w = normal_init(0.02)
+    wo_init = normal_init(depth_scale(0.02, L))
+    p = prefix
+    return {
+        "router": make(p + "router", (L, D, E), ("layers", "embed", None),
+                       w),
+        "w_gate": make(p + "w_gate", (L, E, D, FF),
+                       ("layers", "expert", "embed", "mlp"), w),
+        "w_up": make(p + "w_up", (L, E, D, FF),
+                     ("layers", "expert", "embed", "mlp"), w),
+        "w_down": make(p + "w_down", (L, E, FF, D),
+                       ("layers", "expert", "mlp", "embed"), wo_init),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    pad = 128 if n_tokens >= 128 else 8
+    return max(pad, -(-c // pad) * pad)
+
+
+def moe_mlp(cfg: ModelConfig, p: dict, h: jax.Array, rules=None):
+    """h: (B,S,D) normed -> (delta (B,S,D), aux_loss scalar).
+
+    GShard-style GROUP-LOCAL dispatch (§Perf H4): tokens are split into
+    G = dp groups matching the data-axis sharding; routing, capacity and
+    the dispatch gather/scatter all stay within a group, so no token
+    crosses a data shard.  Group axis -> data mesh axes, expert axis ->
+    model mesh axis (EP).  Without grouping, either the (E,C,D) dispatch
+    buffers replicate across data shards (16x redundant expert compute —
+    measured, EXPERIMENTS.md H4) or the gather all-to-alls every token.
+    """
+    B, S, D = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = rules.dp if rules is not None else 1
+    while G > 1 and (T % G != 0 or (T // G) % 8 != 0):
+        G //= 2
+    Tg = T // G
+    C = capacity(cfg, Tg)
+    xt = h.reshape(G, Tg, D)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G,Tg,E)
+    gate, idx = jax.lax.top_k(probs, K)                     # (G,Tg,K)
+    gate = gate / (jnp.sum(gate, -1, keepdims=True) + 1e-9)
+
+    # position of each (token, k) slot within its group-local expert queue
+    e_flat = idx.reshape(G, Tg * K)                         # token-major
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)         # (G,TgK,E)
+    pos = (jnp.cumsum(oh, axis=1) * oh).max(-1) - 1         # (G,TgK)
+    keep = pos < C
+    dest_e = jnp.where(keep, e_flat, E)                     # E = drop row
+    dest_p = jnp.where(keep, pos, 0)
+
+    gi = jnp.arange(G)[:, None]
+    tok_ids = jnp.broadcast_to(jnp.arange(Tg * K) // K, (G, Tg * K))
+    # dispatch table: scatter of int32 token ids only (tiny)
+    table = jnp.full((G, E + 1, C), Tg, jnp.int32) \
+        .at[gi, dest_e, dest_p].set(tok_ids)[:, :E]         # (G,E,C)
+
+    xpad = jnp.concatenate(
+        [xt, jnp.zeros((G, 1, D), xt.dtype)], axis=1)       # (G,Tg+1,D)
+    flat_idx = table.reshape(G, E * C)
+    xg = jnp.take_along_axis(xpad, flat_idx[..., None],
+                             axis=1).reshape(G, E, C, D)
+    if rules is not None:
+        xg = rules.constrain(xg, ("batch", "expert", None, None))
+    g = ops.grouped_matmul(xg, p["w_gate"])
+    u = ops.grouped_matmul(xg, p["w_up"])
+    hact = jax.nn.silu(g) * u                               # (G,E,C,FF)
+    y = ops.grouped_matmul(hact, p["w_down"])               # (G,E,C,D)
+    if rules is not None:
+        y = rules.constrain(y, ("batch", "expert", None, None))
+
+    # combine by SLOT GATHER (no scatter-add: each (token, k) gathers
+    # its slot's output; dropped slots hit the zero pad row — GSPMD
+    # lowers gathers far better than big scatter-adds, §Perf H4.3)
+    slot_of = jnp.where(keep, dest_e * C + dest_p, E * C)   # (G,TgK)
+    y_pad = jnp.concatenate(
+        [y.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), y.dtype)], axis=1)
+    picked = jnp.take_along_axis(y_pad, slot_of[..., None], axis=1)
+    out = jnp.sum(picked.reshape(G, Tg, K, D)
+                  * gate[..., None].astype(y.dtype), axis=2)
+
+    # Switch-style load-balancing aux loss (global)
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,219 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+[arXiv:2404.05892]
+
+Per block: time-mix (token-shift with data-dependent LoRA mixing, r/k/v/g
+projections, per-channel decay ``w = exp(-exp(...))`` with LoRA
+data-dependence, u bonus, grouped WKV recurrence) + channel-mix.
+
+The WKV recurrence runs through ``kernels.ops.rwkv6_scan`` (Pallas chunked
+kernel on TPU, chunked jnp on CPU).  O(1) state => long_500k decode runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.layers import linear, normal_init, ones_init, zeros_init
+
+MIX_DIM = 32      # TIME_MIX_EXTRA_DIM
+DECAY_DIM = 64    # TIME_DECAY_EXTRA_DIM
+
+
+def _decay_init():
+    def init(key, shape, dtype):
+        # w = exp(-exp(base)) spread across (0,1)
+        return jnp.broadcast_to(
+            jnp.linspace(-6.0, 1.0, shape[-1], dtype=dtype), shape)
+    return init
+
+
+def param_tree(cfg: ModelConfig, make):
+    L, D, FF, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    H, dk = cfg.n_heads, cfg.head_dim
+    w = normal_init(0.02)
+    wo_init = normal_init(layers.depth_scale(0.02, L))
+    blocks = {
+        "ln1": make("ln1", (L, D), ("layers", "embed"), ones_init()),
+        "ln2": make("ln2", (L, D), ("layers", "embed"), ones_init()),
+        # token-shift mixing (5 targets: w,k,v,r,g)
+        "mu_x": make("mu_x", (L, D), ("layers", "embed"), zeros_init()),
+        "mu": make("mu", (L, 5, D), ("layers", None, "embed"),
+                   zeros_init()),
+        "mix_A": make("mix_A", (L, D, 5 * MIX_DIM),
+                      ("layers", "embed", None), w),
+        "mix_B": make("mix_B", (L, 5, MIX_DIM, D),
+                      ("layers", None, None, "embed"), w),
+        # projections
+        "wr": make("wr", (L, D, H * dk), ("layers", "embed", "heads"), w),
+        "wk": make("wk", (L, D, H * dk), ("layers", "embed", "heads"), w),
+        "wv": make("wv", (L, D, H * dk), ("layers", "embed", "heads"), w),
+        "wg": make("wg", (L, D, H * dk), ("layers", "embed", "heads"), w),
+        "wo": make("wo", (L, H * dk, D), ("layers", "heads", "embed"),
+                   wo_init),
+        # decay
+        "decay_base": make("decay_base", (L, H, dk),
+                           ("layers", "heads", None), _decay_init()),
+        "decay_A": make("decay_A", (L, D, DECAY_DIM),
+                        ("layers", "embed", None), w),
+        "decay_B": make("decay_B", (L, DECAY_DIM, H * dk),
+                        ("layers", None, "heads"), w),
+        "u": make("u", (L, H, dk), ("layers", "heads", None), w),
+        # group norm over head outputs
+        "gn_scale": make("gn_scale", (L, H * dk), ("layers", "heads"),
+                         ones_init()),
+        "gn_bias": make("gn_bias", (L, H * dk), ("layers", "heads"),
+                        zeros_init()),
+        # channel mix
+        "cm_mu_k": make("cm_mu_k", (L, D), ("layers", "embed"),
+                        zeros_init()),
+        "cm_mu_r": make("cm_mu_r", (L, D), ("layers", "embed"),
+                        zeros_init()),
+        "cm_wk": make("cm_wk", (L, D, FF), ("layers", "embed", "mlp"), w),
+        "cm_wr": make("cm_wr", (L, D, D), ("layers", "embed", "ffn_embed"),
+                      w),
+        "cm_wv": make("cm_wv", (L, FF, D), ("layers", "mlp", "embed"),
+                      wo_init),
+    }
+    return {
+        "embed": make("embed", (V, D), ("vocab", "embed"), normal_init()),
+        "blocks": blocks,
+        "final_norm": make("final_norm", (D,), ("embed",), ones_init()),
+        "lm_head": make("lm_head", (D, V), ("embed", "vocab"),
+                        normal_init()),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None):
+    """token shift: out[t] = x[t-1]; position 0 gets ``last`` (decode) or 0."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _time_mix(cfg, p, x, shifted, state, rules=None):
+    """x: (B,T,D) normed. Returns (out, new_wkv_state)."""
+    B, T, D = x.shape
+    H, dk = cfg.n_heads, cfg.head_dim
+    dx = shifted - x
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    kmix = jnp.tanh(jnp.einsum("btd,dm->btm", xxx,
+                               p["mix_A"].astype(x.dtype)))
+    kmix = kmix.reshape(B, T, 5, MIX_DIM)
+    mixes = jnp.einsum("btfm,fmd->btfd", kmix,
+                       p["mix_B"].astype(x.dtype))
+    mixes = mixes + p["mu"].astype(x.dtype)                 # (B,T,5,D)
+    xw, xk, xv, xr, xg = [x + dx * mixes[:, :, i] for i in range(5)]
+
+    r = linear(xr, p["wr"]).reshape(B, T, H, dk)
+    k = linear(xk, p["wk"]).reshape(B, T, H, dk)
+    v = linear(xv, p["wv"]).reshape(B, T, H, dk)
+    g = jax.nn.silu(linear(xg, p["wg"]))                    # (B,T,H*dk)
+
+    dlora = jnp.einsum("btd,dm->btm", jnp.tanh(
+        jnp.einsum("btd,dm->btm", xw, p["decay_A"].astype(x.dtype))),
+        p["decay_B"].astype(x.dtype)).reshape(B, T, H, dk)
+    logw = -jnp.exp(p["decay_base"].astype(jnp.float32)[None, None]
+                    + dlora.astype(jnp.float32))            # < 0
+    w = jnp.exp(logw)                                       # (0,1)
+    if rules is not None:
+        r = rules.constrain(r, ("batch", None, "heads", None))
+        k = rules.constrain(k, ("batch", None, "heads", None))
+        v = rules.constrain(v, ("batch", None, "heads", None))
+        w = rules.constrain(w, ("batch", None, "heads", None))
+    o, new_state = ops.rwkv6_scan(r, k, v, w.astype(r.dtype),
+                                  p["u"], state)
+    o = o.reshape(B, T, H * dk)
+    # per-head group norm
+    oh = o.reshape(B, T, H, dk).astype(jnp.float32)
+    mean = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = oh.reshape(B, T, H * dk).astype(x.dtype)
+    o = o * p["gn_scale"].astype(x.dtype) + p["gn_bias"].astype(x.dtype)
+    return linear(o * g, p["wo"]), new_state
+
+
+def _channel_mix(cfg, p, x, shifted):
+    dx = shifted - x
+    xk = x + dx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(linear(xk, p["cm_wk"])))
+    return jax.nn.sigmoid(linear(xr, p["cm_wr"])) * linear(kk, p["cm_wv"])
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *, rules=None,
+            remat: bool = True, collect_cache: bool = False):
+    tokens = batch["tokens"]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    if rules is not None:
+        x = rules.constrain(x, ("batch", None, None))
+
+    def block(x, p):
+        h1 = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        tm, _ = _time_mix(cfg, p, h1, _shift(h1), None, rules)
+        x = x + tm
+        h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _channel_mix(cfg, p, h2, _shift(h2))
+        if rules is not None:
+            x = rules.constrain(x, ("batch", None, None))
+        return x, jnp.float32(0)
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(block, x, params["blocks"])
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = jnp.einsum("...d,dv->...v", x,
+                        params["lm_head"].astype(x.dtype))
+    if rules is not None:
+        logits = rules.constrain(logits, ("batch", None, "vocab"))
+    return logits, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state
+# ---------------------------------------------------------------------------
+
+def cache_tree(cfg: ModelConfig, make, batch: int, max_len: int):
+    L, D = cfg.n_layers, cfg.d_model
+    H, dk = cfg.n_heads, cfg.head_dim
+    return {
+        "tm_x": make("tm_x", (L, batch, D), ("layers", "batch", "embed"),
+                     zeros_init()),
+        "cm_x": make("cm_x", (L, batch, D), ("layers", "batch", "embed"),
+                     zeros_init()),
+        "wkv": make("wkv", (L, batch, H, dk, dk),
+                    ("layers", "batch", "heads", None, None), zeros_init()),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array, *, rules=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]      # (B,1,D)
+    if rules is not None:
+        x = rules.constrain(x, ("batch", None, None))
+
+    def block(x, scanned):
+        p, tm_x, cm_x, wkv = scanned
+        h1 = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        tm, new_wkv = _time_mix(cfg, p, h1,
+                                tm_x[:, None, :].astype(h1.dtype), wkv,
+                                rules)
+        x = x + tm
+        h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _channel_mix(cfg, p, h2, cm_x[:, None, :].astype(h2.dtype))
+        return x, (h1[:, 0].astype(tm_x.dtype),
+                   h2[:, 0].astype(cm_x.dtype), new_wkv)
+
+    x, (tm_x, cm_x, wkv) = jax.lax.scan(
+        block, x, (params["blocks"], cache["tm_x"], cache["cm_x"],
+                   cache["wkv"]))
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = jnp.einsum("...d,dv->...v", x,
+                        params["lm_head"].astype(x.dtype))
+    return logits, {"tm_x": tm_x, "cm_x": cm_x,
+                    "wkv": wkv.astype(cache["wkv"].dtype)}

@@ -1,0 +1,309 @@
+"""Dense decoder-only transformer (qwen2.5 / qwen3 / yi / gemma / dbrx /
+phi-moe families — MoE swaps the MLP via models.moe).
+
+Interface (uniform across model families, see models/api.py):
+    param_tree(cfg, make)                         -> params declaration
+    forward(cfg, params, batch, rules, remat)     -> (logits, aux)
+    cache_tree(cfg, make, batch, max_len)         -> decode cache decl
+    decode_step(cfg, params, cache, tokens, pos)  -> (logits, new_cache)
+
+Layer parameters are stacked on a leading ``layers`` axis and consumed via
+``jax.lax.scan`` (compact HLO => fast 512-device compiles); remat wraps the
+scanned block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.layers import (
+    apply_rope, linear, normal_init, ones_init, rms_norm, swiglu, zeros_init,
+)
+
+# ---------------------------------------------------------------------------
+# parameter tree
+# ---------------------------------------------------------------------------
+
+def block_tree(cfg: ModelConfig, make, prefix: str = "",
+               n_layers: int | None = None, cross: bool = False):
+    """Stacked per-layer params for the standard attention+MLP block."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, H, KV, hd, FF = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    w = normal_init(0.02)
+    wo_init = normal_init(layers.depth_scale(0.02, L))
+    p = prefix
+    t = {
+        "attn_norm": make(p + "attn_norm", (L, D), ("layers", "embed"),
+                          ones_init()),
+        "wq": make(p + "wq", (L, D, H * hd), ("layers", "embed", "heads"), w),
+        "wk": make(p + "wk", (L, D, KV * hd),
+                   ("layers", "embed", "kv_heads"), w),
+        "wv": make(p + "wv", (L, D, KV * hd),
+                   ("layers", "embed", "kv_heads"), w),
+        "wo": make(p + "wo", (L, H * hd, D), ("layers", "heads", "embed"),
+                   wo_init),
+        "mlp_norm": make(p + "mlp_norm", (L, D), ("layers", "embed"),
+                         ones_init()),
+    }
+    if cfg.family == "moe":
+        from repro.models import moe
+        t.update(moe.moe_mlp_tree(cfg, make, L, p))
+    else:
+        t.update({
+            "w_gate": make(p + "w_gate", (L, D, FF),
+                           ("layers", "embed", "mlp"), w),
+            "w_up": make(p + "w_up", (L, D, FF),
+                         ("layers", "embed", "mlp"), w),
+            "w_down": make(p + "w_down", (L, FF, D),
+                           ("layers", "mlp", "embed"), wo_init),
+        })
+    if cfg.qkv_bias:
+        t["bq"] = make(p + "bq", (L, H * hd), ("layers", "heads"),
+                       zeros_init())
+        t["bk"] = make(p + "bk", (L, KV * hd), ("layers", "kv_heads"),
+                       zeros_init())
+        t["bv"] = make(p + "bv", (L, KV * hd), ("layers", "kv_heads"),
+                       zeros_init())
+    if cfg.qk_norm:
+        t["q_norm"] = make(p + "q_norm", (L, hd), ("layers", None),
+                           ones_init())
+        t["k_norm"] = make(p + "k_norm", (L, hd), ("layers", None),
+                           ones_init())
+    if cross:
+        t["cross_norm"] = make(p + "cross_norm", (L, D),
+                               ("layers", "embed"), ones_init())
+        t["c_wq"] = make(p + "c_wq", (L, D, H * hd),
+                         ("layers", "embed", "heads"), w)
+        t["c_wk"] = make(p + "c_wk", (L, D, KV * hd),
+                         ("layers", "embed", "kv_heads"), w)
+        t["c_wv"] = make(p + "c_wv", (L, D, KV * hd),
+                         ("layers", "embed", "kv_heads"), w)
+        t["c_wo"] = make(p + "c_wo", (L, H * hd, D),
+                         ("layers", "heads", "embed"), wo_init)
+    return t
+
+
+def param_tree(cfg: ModelConfig, make):
+    V, D = cfg.vocab_size, cfg.d_model
+    t = {
+        "embed": make("embed", (V, D), ("vocab", "embed"),
+                      normal_init(0.02)),
+        "blocks": block_tree(cfg, make),
+        "final_norm": make("final_norm", (D,), ("embed",), ones_init()),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = make("lm_head", (D, V), ("embed", "vocab"),
+                            normal_init(0.02))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _window_for_layer(cfg: ModelConfig, idx):
+    """Per-layer sliding window: 0 (global) on cfg.global_layers."""
+    if not cfg.swa_window:
+        return 0
+    if isinstance(idx, int):
+        return 0 if idx in cfg.global_layers else cfg.swa_window
+    is_global = jnp.zeros((), bool)
+    for g in cfg.global_layers:
+        is_global |= idx == g
+    return jnp.where(is_global, 0, cfg.swa_window)
+
+
+def _q_axes(cfg: ModelConfig, rules):
+    """Shard q over heads when divisible; otherwise over the query
+    sequence axis ("seq" logical rule — §Perf H1: hymba's 25 heads can't
+    split 16 ways, so the S x S score tensors shard over seq instead of
+    replicating)."""
+    if rules is not None and cfg.n_heads % max(rules.tp, 1) != 0:
+        return ("batch", "seq", "heads", None)
+    return ("batch", None, "heads", None)
+
+
+def attn_block(cfg: ModelConfig, p: dict, x: jax.Array, *, positions,
+               window=0, bidir_prefix=0, rules=None):
+    """Pre-norm attention sub-block -> residual delta."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
+    q = linear(h, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(h, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+    v = linear(h, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if rules is not None:
+        q = rules.constrain(q, _q_axes(cfg, rules))
+        k = rules.constrain(k, ("batch", None, "kv_heads", None))
+        v = rules.constrain(v, ("batch", None, "kv_heads", None))
+    o = ops.attention(q, k, v, causal=True, window=window,
+                      bidir_prefix=bidir_prefix)
+    return linear(o.reshape(B, S, H * hd), p["wo"])
+
+
+def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array, rules=None):
+    """Pre-norm MLP sub-block -> (residual delta, aux_loss)."""
+    h = ops.rmsnorm(x, p["mlp_norm"], eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        from repro.models import moe
+        return moe.moe_mlp(cfg, p, h, rules)
+    if cfg.family == "vlm":        # gemma GeGLU
+        g = jnp.einsum("...d,df->...f", h, p["w_gate"].astype(h.dtype))
+        u = jnp.einsum("...d,df->...f", h, p["w_up"].astype(h.dtype))
+        out = jnp.einsum("...f,fd->...d", jax.nn.gelu(g) * u,
+                         p["w_down"].astype(h.dtype))
+        return out, jnp.float32(0)
+    return swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0)
+
+
+def _pin_bf16(delta: jax.Array, rules) -> jax.Array:
+    """§Perf H2: keep the TP partial-sum all-reduce in bf16.
+
+    XLA hoists the next rms-norm's f32 upcast ABOVE the contraction
+    all-reduce (numerically nicer, 2x the ICI bytes).  An optimization
+    barrier on the bf16 residual delta pins the convert below the
+    all-reduce.  Enabled via ShardingRules flag "bf16_reduce"."""
+    if rules is not None and "bf16_reduce" in rules.flags:
+        return jax.lax.optimization_barrier(delta)
+    return delta
+
+
+def make_block_fn(cfg: ModelConfig, *, rules=None, bidir_prefix=0,
+                  remat=True, collect_cache=False):
+
+    def block(x, scanned):
+        p, idx = scanned
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        window = _window_for_layer(cfg, idx)
+        h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
+        B = x.shape[0]
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = linear(h, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+        k = linear(h, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+        v = linear(h, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if rules is not None:
+            q = rules.constrain(q, _q_axes(cfg, rules))
+            k = rules.constrain(k, ("batch", None, "kv_heads", None))
+            v = rules.constrain(v, ("batch", None, "kv_heads", None))
+        o = ops.attention(q, k, v, causal=True, window=window,
+                          bidir_prefix=bidir_prefix)
+        x = x + _pin_bf16(linear(o.reshape(B, S, H * hd), p["wo"]),
+                          rules)
+        delta, aux = mlp_block(cfg, p, x, rules)
+        x = x + _pin_bf16(delta, rules)
+        if rules is not None:
+            x = rules.constrain(x, ("batch", None, None))
+        ys = ((k, v), aux) if collect_cache else aux
+        return x, ys
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    return block
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *, rules=None,
+            remat: bool = True, collect_cache: bool = False):
+    """batch: {'tokens': (B,S)[, 'prefix_embeds': (B,P,D)]}."""
+    tokens = batch["tokens"]
+    prefix_embeds = batch.get("prefix_embeds")
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    bidir = cfg.prefix_len if prefix_embeds is not None else 0
+    if rules is not None:
+        x = rules.constrain(x, ("batch", None, None))
+    block = make_block_fn(cfg, rules=rules, bidir_prefix=bidir,
+                          remat=remat, collect_cache=collect_cache)
+    idxs = jnp.arange(cfg.n_layers)
+    x, ys = jax.lax.scan(block, x, (params["blocks"], idxs))
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = unembed(cfg, params, x, rules)
+    if collect_cache:
+        (kvs, aux) = ys
+        return logits, jnp.mean(aux), kvs
+    return logits, jnp.mean(ys)
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array, rules=None):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    if rules is not None:
+        logits = rules.constrain(logits, ("batch", None, "vocab"))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# serving: KV cache + decode step
+# ---------------------------------------------------------------------------
+
+def cache_tree(cfg: ModelConfig, make, batch: int, max_len: int):
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    shape = (L, batch, max_len, KV, hd)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": make("cache_k", shape, axes, zeros_init()),
+            "v": make("cache_v", shape, axes, zeros_init())}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array, *, rules=None):
+    """One-token decode: tokens (B,1), pos scalar -> (logits, new_cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = params["embed"].astype(cdt)[tokens]
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    if rules is not None:
+        x = rules.constrain(x, ("batch", None, None))
+    positions = jnp.full((1,), pos)
+
+    def block(x, scanned):
+        p, idx, ck, cv = scanned
+        window = _window_for_layer(cfg, idx)
+        h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
+        q = linear(h, p["wq"], p.get("bq")).reshape(B, 1, H, hd)
+        k = linear(h, p["wk"], p.get("bk")).reshape(B, 1, KV, hd)
+        v = linear(h, p["wv"], p.get("bv")).reshape(B, 1, KV, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        if rules is not None:
+            ck = rules.constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+            cv = rules.constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+        o = ops.decode_attention(q, ck, cv, pos, window=window)
+        x = x + linear(o.reshape(B, 1, H * hd), p["wo"])
+        delta, _ = mlp_block(cfg, p, x, rules)
+        x = x + delta
+        return x, (ck, cv)
+
+    idxs = jnp.arange(cfg.n_layers)
+    x, (new_k, new_v) = jax.lax.scan(
+        block, x, (params["blocks"], idxs, cache["k"], cache["v"]))
+    x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = unembed(cfg, params, x, rules)
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,130 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+``compiled.cost_analysis()`` on the partitioned module reports PER-DEVICE
+flops/bytes, so chips-worth of totals are per_device x chips and the
+division by chips cancels — we compute terms directly from per-device
+numbers (documented in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hlo_parse import collective_bytes
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: dict
+    model_flops: float                 # 6*N*D (or 6*N_active*D)
+    peak_mem_bytes: float              # per-device (args+out+temp)
+    attn_bytes: float = 0.0            # score-region bytes (XLA fallback)
+    attn_io_bytes: float = 0.0         # q/k/v/o traffic of that region
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def memory_s_kernelized(self) -> float:
+        """Memory term with the Pallas flash-attention kernel substituted
+        for the XLA score materialization: the S x S intermediates stay
+        in VMEM; the kernel still streams the region's q/k/v/o traffic
+        (attn_io_bytes counts every pass's rank-4 reads incl. the
+        per-q-block KV re-reads, so it directly models the kernel)."""
+        b = (self.bytes_per_device - self.attn_bytes
+             + self.attn_io_bytes)
+        return b / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_per_device.get("total", 0.0) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops (remat/padding/dispatch waste)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak the step achieves, counting only
+        model flops as useful: (model_flops/chips/peak) / step_time."""
+        if self.step_s == 0:
+            return 0.0
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        return ideal / self.step_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_s_kernelized": self.memory_s_kernelized,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_gb": self.peak_mem_bytes / 2**30,
+            "collectives": self.collective_per_device,
+        }
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference (per spec:
+    6*N*D dense / 6*N_active*D MoE), D = tokens processed this step."""
+    n = cfg.n_params(active_only=(cfg.family == "moe"))
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1          # decode: one token
+    return 2.0 * n * tokens
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, chips: int,
+            cfg, kind: str) -> Roofline:
+    # NOTE: compiled.cost_analysis() counts while (scan) bodies once, so
+    # flops/bytes come from our HLO-text analyzer with loop multipliers
+    # (hlo_parse.hlo_flops_bytes); verified against 6ND (EXPERIMENTS.md).
+    from repro.roofline.hlo_parse import hlo_flops_bytes
+    txt = compiled.as_text()
+    fb = hlo_flops_bytes(txt)
+    colls = collective_bytes(txt)
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+            mem.temp_size_in_bytes)
+    return Roofline(arch, shape.name, mesh_name, chips, fb["flops"],
+                    fb["bytes"], colls,
+                    model_flops_for(cfg, shape, kind), peak,
+                    attn_bytes=fb.get("attn_bytes", 0.0),
+                    attn_io_bytes=fb.get("attn_io_bytes", 0.0))

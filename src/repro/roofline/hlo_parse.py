@@ -1,0 +1,469 @@
+"""Parse collective traffic out of post-SPMD-partitioned HLO text.
+
+``compiled.as_text()`` is the per-device module after GSPMD partitioning;
+collective ops carry their per-device result shapes and replica groups.
+We sum OPERAND bytes per collective kind (spec definition), deriving the
+operand size from the result where HLO only shows the result type:
+
+  all-reduce / all-to-all / collective-permute : operand == result
+  all-gather                                    : operand == result / G
+  reduce-scatter                                : operand == result * G
+
+Collectives inside while bodies (jax.lax.scan over layers / microbatch
+accumulation) execute trip-count times: we reconstruct the computation
+call graph, read each while loop's trip bound from the constant in its
+condition computation, and multiply nested collectives accordingly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+               "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+               "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int
+    group_size: int
+    computation: str
+    multiplier: int = 1
+
+
+def split_computations(txt: str) -> dict[str, list[str]]:
+    """Computation headers start at column 0 and end with '{'; body lines
+    are indented (op metadata may contain '->' and '{', so only column-0
+    structure is trusted)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        if not line.startswith((" ", "\t")) and \
+                line.rstrip().endswith("{") and "=" not in line.split(
+                    "(", 1)[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def parse_def(line: str):
+    """Parse '%name = TYPE op(operands), attrs' (tuple types included).
+    Returns (name, type_str, op, operands, attrs) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or " = " not in s:
+        return None
+    name, _, rest = s.partition(" = ")
+    name = name.lstrip("%")
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        tstr, rest2 = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        tstr, rest2 = rest[:sp], rest[sp + 1:]
+    m = re.match(r"([\w\-]+)\(([^)]*)\)(.*)$", rest2)
+    if not m:
+        return None
+    return name, tstr, m.group(1), m.group(2), m.group(3)
+
+
+def while_structure(comps: dict[str, list[str]]
+                    ) -> tuple[dict[str, str], dict[str, int]]:
+    """Returns (body_comp -> parent_comp, body_comp -> trip_count)."""
+    parent: dict[str, str] = {}
+    trips: dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?\).*?condition=%?([\w.\-]+),\s*"
+                          r"body=%?([\w.\-]+)", line)
+            if not m:
+                m = re.search(r"while\(.*?\).*?body=%?([\w.\-]+),\s*"
+                              r"condition=%?([\w.\-]+)", line)
+                if m:
+                    body, cond = m.group(1), m.group(2)
+                else:
+                    continue
+            else:
+                cond, body = m.group(1), m.group(2)
+            parent[body] = cname
+            trips[body] = _trip_count(comps.get(cond, []))
+    return parent, trips
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def multiplier_of(comp: str, parent: dict[str, str],
+                  trips: dict[str, int]) -> int:
+    mult = 1
+    seen = set()
+    while comp in parent and comp not in seen:
+        seen.add(comp)
+        mult *= max(trips.get(comp, 1), 1)
+        comp = parent[comp]
+    return mult
+
+
+def parse_collectives(txt: str) -> list[CollectiveOp]:
+    """NOTE: XLA:CPU canonicalizes bf16 arithmetic to f32 (converted
+    inputs, f32 dots, f32 reduces), so collective/memory bytes here are
+    up to 2x what a bf16-native TPU moves.  The factor is systematic
+    across cells and before/after comparisons; reported unadjusted and
+    documented in EXPERIMENTS.md §Roofline notes."""
+    comps = split_computations(txt)
+    parent, trips = while_structure(comps)
+    out: list[CollectiveOp] = []
+    for cname, lines in comps.items():
+        mult = multiplier_of(cname, parent, trips)
+        for line in lines:
+            kind = next((k for k in COLLECTIVES
+                         if re.search(rf"= [^=]*\b{k}\(", line)), None)
+            if kind is None:
+                continue
+            if f"{kind}-done" in line:
+                continue          # async pair: count the -start only
+            d = parse_def(line)
+            if d is None:
+                continue
+            _, type_str, _, operands, _ = d
+            rbytes = _type_bytes(type_str)       # full tuple-aware bytes
+            g = _group_size(line)
+            if kind == "all-gather":
+                operand = rbytes // max(g, 1)
+            elif kind == "reduce-scatter":
+                operand = rbytes * g
+            else:
+                operand = rbytes
+            out.append(CollectiveOp(kind, operand, g, cname, mult))
+    return out
+
+
+def collective_bytes(txt: str) -> dict[str, float]:
+    """Per-device collective operand bytes by kind (trip-count scaled)."""
+    agg: dict[str, float] = defaultdict(float)
+    for op in parse_collectives(txt):
+        agg[op.kind] += float(op.operand_bytes) * op.multiplier
+    agg["total"] = sum(agg.values())
+    return dict(agg)
+
+
+# ---------------------------------------------------------------------------
+# flops / HBM-bytes with loop multipliers
+#
+# XLA's compiled.cost_analysis() counts every while body ONCE (verified —
+# see EXPERIMENTS.md §Dry-run notes), which under-counts a scanned L-layer
+# model by ~L x accum.  We therefore re-derive both terms from the
+# partitioned HLO text: dot flops exactly (2 * result_elems *
+# contracted_size), elementwise/transcendental at 1/8 flops per element,
+# and HBM bytes as operand+result bytes of top-level (non-fused-body)
+# ops, all scaled by the computation's loop-nest multiplier.
+# ---------------------------------------------------------------------------
+
+_TRANSCENDENTAL = ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "cosine", "sine", "logistic")
+_ELEMENTWISE_1F = ("add", "subtract", "multiply", "divide", "maximum",
+                   "minimum", "select", "compare", "and", "or", "negate",
+                   "abs", "floor", "clamp")
+# Ops whose operands/results genuinely stream through HBM on a TPU.
+# Broadcast/iota/convert/elementwise are excluded: XLA:TPU fuses them
+# into consumers (XLA:CPU fuses less, so counting them would import CPU
+# fusion decisions into a TPU roofline).
+_MEM_OPS = ("fusion", "dot", "copy", "dynamic-slice",
+            "dynamic-update-slice", "reduce", "reduce-window",
+            "transpose", "concatenate", "scatter", "gather",
+            "sort", "reverse", "convolution")
+_FREE_OPS = ("bitcast", "reshape", "get-tuple-element", "parameter",
+             "constant", "tuple", "after-all")
+
+def _call_graph(comps: dict[str, list[str]]):
+    """comp -> list[(callee, site_multiplier)] from fusion/call/while."""
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for cname, lines in comps.items():
+        for line in lines:
+            m = parse_def(line)
+            if not m:
+                continue
+            _, _, op_name, _, attrs = m
+            if op_name == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", attrs)
+                if mb:
+                    trip = _trip_count(comps.get(
+                        mc.group(1) if mc else "", []))
+                    edges[cname].append((mb.group(1), max(trip, 1)))
+            else:
+                for mm in re.finditer(r"calls=%?([\w.\-]+)", attrs):
+                    edges[cname].append((mm.group(1), 1))
+                mm = re.search(r"to_apply=%?([\w.\-]+)", attrs)
+                if mm:
+                    edges[cname].append((mm.group(1), 1))
+    return edges
+
+
+def _entry_name(txt: str, comps) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return max(comps, key=lambda c: len(comps[c]))
+
+
+def _reach_multipliers(txt: str, comps) -> dict[str, float]:
+    """Loop-nest multiplier per computation: Kahn topological propagation
+    over the call DAG (entry=1; while bodies multiply by trip count)."""
+    edges = _call_graph(comps)
+    entry = _entry_name(txt, comps)
+    # restrict to subgraph reachable from entry
+    reach = {entry}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for callee, _ in edges.get(c, []):
+            if callee not in reach:
+                reach.add(callee)
+                stack.append(callee)
+    indeg = defaultdict(int)
+    for c in reach:
+        for callee, _ in edges.get(c, []):
+            if callee in reach:
+                indeg[callee] += 1
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    queue = [entry]
+    while queue:
+        c = queue.pop()
+        for callee, m in edges.get(c, []):
+            if callee not in reach:
+                continue
+            mult[callee] += mult[c] * m
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+    return mult
+
+
+def _fused_bodies(comps) -> set[str]:
+    bodies = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                  line):
+                bodies.add(mm.group(1))
+    return bodies
+
+
+_ATTN_META = ("bkgqs", "bqkgh", "bhqk")   # attention einsum signatures
+
+
+def _rank(tstr: str) -> int:
+    m = _SHAPE_RE.search(tstr)
+    if not m or not m.group(2):
+        return 0
+    return len(m.group(2).split(","))
+
+
+def hlo_flops_bytes(txt: str) -> dict[str, float]:
+    """Also separates attention-score-region bytes (``attn_bytes``): ops
+    tagged by attention-einsum metadata, propagated through rank>=5
+    intermediates (the S x S score tensors).  On a real TPU these live in
+    VMEM inside the Pallas flash kernel; ``attn_io_bytes`` (the rank-4
+    q/k/v/o traffic of the region) is what the fused kernel actually
+    streams — analysis.py uses both to report the kernel-substituted
+    memory term."""
+    comps = split_computations(txt)
+    mult = _reach_multipliers(txt, comps)
+    fused = _fused_bodies(comps)
+    # fused computations that wrap a dynamic-(update-)slice: their big
+    # buffer operand/result is aliased in place on TPU — only the slice
+    # moves through HBM
+    dus_bodies = {c for c, lines in comps.items()
+                  if any(" dynamic-update-slice(" in l or
+                         " dynamic-slice(" in l for l in lines)}
+    # computations whose BODY carries attention-einsum metadata: fusion
+    # ops calling them belong to the scores region even when the calling
+    # line itself has no metadata (prefill graphs fuse differently)
+    attn_comps = {c for c, lines in comps.items()
+                  if any(s in l for l in lines for s in _ATTN_META)}
+    flops = 0.0
+    byts = 0.0
+    attn_bytes = 0.0
+    attn_io = 0.0
+    transcend = 0.0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        symbols: dict[str, str] = {}
+        pending: list[tuple] = []
+        for line in lines:
+            d = parse_def(line)
+            if not d:
+                continue
+            name, tstr, op, operands, attrs = d
+            symbols[name] = tstr
+            pending.append((name, tstr, op, operands, attrs))
+        is_body = cname in fused
+        has_attn_meta = any(s in line for line in lines
+                            for s in _ATTN_META)
+        tagged: set[str] = set()
+        # chain collapsing: XLA:TPU fuses elementwise chains that XLA:CPU
+        # leaves as separate kLoop fusions.  A fusion whose single
+        # consumer is another fusion is "virtual" — its value never hits
+        # HBM on TPU; neither its write nor that read is counted.
+        uses: dict[str, int] = defaultdict(int)
+        consumers: dict[str, list[str]] = defaultdict(list)
+        op_of = {name: op for name, _, op, _, _ in pending}
+        for name, tstr, op, operands, attrs in pending:
+            for oname in re.findall(r"%([\w.\-]+)", operands):
+                uses[oname] += 1
+                consumers[oname].append(op)
+        virtual: set[str] = set()
+        for name, tstr, op, operands, attrs in pending:
+            if op == "fusion" and uses[name] == 1 and \
+                    consumers[name] == ["fusion"]:
+                virtual.add(name)
+        for name, tstr, op, operands, attrs in pending:
+            out_elems = _type_bytes(tstr) / max(
+                _dtype_size_of(tstr), 1)
+            opnames = re.findall(r"%([\w.\-]+)", operands)
+            is_attn = any(s in attrs for s in _ATTN_META)
+            callee_m = re.search(r"calls=%?([\w.\-]+)", attrs)
+            if not is_attn and callee_m and \
+                    callee_m.group(1) in attn_comps:
+                is_attn = True
+            if not is_attn and _rank(tstr) >= 5 and (
+                    has_attn_meta or any(o in tagged for o in opnames)):
+                is_attn = True
+            if is_attn:
+                tagged.add(name)
+            if op == "dot":
+                k = _contracted_size(operands, attrs, symbols)
+                flops += m * 2.0 * out_elems * k
+            elif op == "convolution":
+                flops += m * 2.0 * out_elems * 128  # unused by models
+            elif op in _TRANSCENDENTAL:
+                transcend += m * 8.0 * out_elems
+            elif op in _ELEMENTWISE_1F or op in ("reduce",
+                                                 "reduce-window"):
+                flops += m * out_elems
+            if not is_body and op in _MEM_OPS and op not in _FREE_OPS:
+                rb = _type_bytes(tstr)
+                opbytes = [(_type_bytes(symbols.get(o, "")), o)
+                           for o in opnames if o not in virtual]
+                callee = re.search(r"calls=%?([\w.\-]+)", attrs)
+                is_dus = (op in ("dynamic-update-slice",
+                                 "dynamic-slice")
+                          or (op == "fusion" and callee and
+                              callee.group(1) in dus_bodies))
+                if is_dus and opbytes:
+                    # in-place slice update/read: the aliased big buffer
+                    # doesn't stream on TPU; only the slice moves.
+                    #   dynamic-slice:        read+write the slice (=rb)
+                    #   dynamic-update-slice: read+write the update
+                    #                         (= the small operands)
+                    big = max(b for b, _ in opbytes)
+                    small = sum(b for b, _ in opbytes) - big
+                    b = 2.0 * rb if rb < big else 2.0 * small
+                    io_b = b
+                else:
+                    b = 0.0
+                    io_b = 0.0
+                    if name not in virtual:
+                        b += rb
+                        if _rank(tstr) <= 4:
+                            io_b += rb
+                    for ob, oname in opbytes:
+                        b += ob
+                        if _rank(symbols.get(oname, "")) <= 4:
+                            io_b += ob
+                if is_attn:
+                    attn_bytes += m * b
+                    attn_io += m * io_b
+                else:
+                    byts += m * b
+    return {"flops": flops + transcend, "dot_flops": flops,
+            "transcendental_flops": transcend,
+            "bytes": byts + attn_bytes,
+            "attn_bytes": attn_bytes, "attn_io_bytes": attn_io,
+            "bytes_sans_attn": byts}
+
+
+def _dtype_size_of(tstr: str) -> int:
+    m = _SHAPE_RE.search(tstr)
+    return DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+
+def _contracted_size(operands: str, attrs: str, symbols: dict) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+    ops = re.findall(r"%([\w.\-]+)", operands)
+    if not m or not ops:
+        return 1.0
+    lhs_t = symbols.get(ops[0], "")
+    sm = _SHAPE_RE.search(lhs_t)
+    if not sm:
+        return 1.0
+    dims = [int(x) for x in sm.group(2).split(",")] if sm.group(2) else []
+    k = 1.0
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return k

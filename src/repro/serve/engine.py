@@ -1,0 +1,96 @@
+"""Serving engine: prefill + decode with slot-based continuous batching.
+
+``serve_step`` (one token for the whole batch against a KV cache) is the
+function the decode_* / long_* dry-run cells lower.  The Engine below runs
+real generation for the examples/tests (transformer families; rwkv/hymba
+decode through their own cache trees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api, makers
+from repro.models.layers import zeros_init
+
+
+def make_serve_step(cfg: ModelConfig, *, rules=None):
+    model = api.get_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(cfg, params, cache, tokens, pos,
+                                 rules=rules)
+    return serve_step
+
+
+def prefill_transformer(cfg: ModelConfig, params, tokens, max_len: int):
+    """Run the prompt through forward(collect_cache) and build a cache."""
+    from repro.models import transformer
+    logits, aux, (ks, vs) = transformer.forward(
+        cfg, params, {"tokens": tokens}, remat=False, collect_cache=True)
+    B, S = tokens.shape
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    cache = api.init_cache(cfg, B, max_len)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    return logits, {"k": k, "v": v}
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jnp.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Slot-based batched generation for dense transformer families."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 128,
+                 batch_slots: int = 4, greedy: bool = True):
+        assert cfg.family in ("dense", "moe", "vlm")
+        self.cfg, self.params = cfg, params
+        self.max_len, self.slots = max_len, batch_slots
+        self.greedy = greedy
+        self.serve_step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompts: list[jnp.ndarray],
+                 max_new_tokens: int = 16) -> list[list[int]]:
+        """Static batching within slot groups (continuous batching lite:
+        new prompts join as finished ones free their slot group)."""
+        results: list[list[int]] = []
+        queue = list(prompts)
+        while queue:
+            group = queue[:self.slots]
+            queue = queue[self.slots:]
+            results.extend(self._generate_group(group, max_new_tokens))
+        return results
+
+    def _generate_group(self, prompts, max_new):
+        B = len(prompts)
+        S = max(len(p) for p in prompts)
+        toks = jnp.stack([jnp.pad(p, (S - len(p), 0)) for p in prompts])
+        logits, cache = prefill_transformer(self.cfg, self.params, toks,
+                                            self.max_len)
+        last = logits[:, -1]
+        outs = [[] for _ in range(B)]
+        pos = S
+        for _ in range(max_new):
+            nxt = jnp.argmax(last, -1).astype(jnp.int32) if self.greedy \
+                else None
+            for b in range(B):
+                outs[b].append(int(nxt[b]))
+            logits, cache = self.serve_step(
+                self.params, cache, nxt[:, None], jnp.int32(pos))
+            last = logits[:, -1]
+            pos += 1
+            if pos >= self.max_len:
+                break
+        return outs

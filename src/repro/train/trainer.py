@@ -1,0 +1,213 @@
+"""Training step assembly + Trainer loop.
+
+``make_train_step`` builds the pjit-able (params, opt_state, batch) ->
+(params, opt_state, metrics) function for any (arch x shape), with:
+  * microbatch gradient accumulation (auto-sized from the per-device
+    activation budget — see configs.base.auto_accum_steps),
+  * remat (scan-over-layers block checkpointing) in the model forwards,
+  * token 0 = padding (masked from the loss; VLM prefix positions),
+  * MoE aux-loss folding.
+
+The ``Trainer`` drives the loop on real devices (examples/tests); the
+dry-run lowers the same train_step against abstract inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig,
+                                auto_accum_steps)
+from repro.models import api
+from repro.models.layers import softmax_xent
+from repro.optim import adamw
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, rules=None, remat=True):
+    model = api.get_model(cfg)
+    logits, aux = model.forward(cfg, params, batch, rules=rules,
+                                remat=remat)
+    targets = batch["targets"]
+    mask = (targets > 0).astype(jnp.float32)
+    vp = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    if vp != cfg.true_vocab_size:
+        col = jnp.arange(vp)
+        lg = jnp.where(col < cfg.true_vocab_size, lg, -1e30)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    xent = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1)
+    loss = xent + AUX_WEIGHT * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    return {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_prepare(cfg: ModelConfig, rules):
+    """gather-once: cast params to the compute dtype under TP-only
+    sharding (no data/FSDP axis) — one all-gather per step, hoisted out
+    of the microbatch loop; its transpose is one reduce-scatter."""
+    from repro.models import api
+    rules_tp = rules.replace(embed=())
+    shardings = api.param_shardings(cfg, rules_tp)
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def prepare(params):
+        def cast(p, sh):
+            q = p.astype(cdt) if (p.dtype == jnp.float32 and
+                                  p.ndim >= 2) else p
+            return jax.lax.with_sharding_constraint(q, sh)
+        return jax.tree.map(cast, params, shardings)
+    return prepare
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    run: RunConfig = RunConfig(), *, rules=None,
+                    opt_cfg: adamw.AdamWConfig | None = None,
+                    donate: bool = True) -> Callable:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=run.learning_rate, weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip, warmup_steps=run.warmup_steps)
+    dp = rules.dp if rules is not None else 1
+    accum = run.accum_steps or auto_accum_steps(
+        cfg, shape, dp, run.microbatch_bytes_budget)
+    gather_once = run.gather_once and rules is not None
+    prepare = make_prepare(cfg, rules) if gather_once else (lambda p: p)
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, mb, rules=rules, remat=run.remat),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if gather_once:
+            loss, metrics, grads = _gather_once_grads(params, batch)
+        elif accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def body(carry, mb):
+                acc, = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc,), (loss, metrics)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum,), (losses, metricss) = jax.lax.scan(
+                body, (zero,), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricss)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    def _gather_once_grads(params, batch):
+        mb_loss = jax.checkpoint(
+            lambda pc, mb: loss_fn(cfg, pc, mb, rules=rules,
+                                   remat=run.remat))
+
+        def total_loss(p):
+            pc = prepare(p)          # gathered once, outside the loop
+            if accum == 1:
+                return mb_loss(pc, batch)
+            mbs = _split_microbatches(batch, accum)
+
+            def body(acc, mb):
+                loss, metrics = mb_loss(pc, mb)
+                return acc + loss, metrics
+            total, ms = jax.lax.scan(body, jnp.float32(0), mbs)
+            return total / accum, jax.tree.map(jnp.mean, ms)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(params)
+        return loss, metrics, grads
+
+    train_step.accum = accum      # introspection for dry-run reports
+    train_step.opt_cfg = opt_cfg
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Trainer loop (real devices; fault-tolerance hooks from repro.ft)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainerState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 run: RunConfig = RunConfig(), *, rules=None,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 straggler_monitor=None):
+        from repro import ckpt as ckpt_mod
+        self.cfg, self.shape, self.run, self.rules = cfg, shape, run, rules
+        self.train_step = make_train_step(cfg, shape, run, rules=rules)
+        self.jit_step = jax.jit(self.train_step, donate_argnums=(0, 1))
+        self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
+        self.ckpt = ckpt_mod
+        self.straggler_monitor = straggler_monitor
+        self.metrics_log: list[dict] = []
+
+    def init_state(self, seed: int = 0) -> TrainerState:
+        params = api.init_params(self.cfg, jax.random.PRNGKey(seed))
+        return TrainerState(params, adamw.init(params), 0)
+
+    def restore_or_init(self, seed: int = 0) -> TrainerState:
+        if self.ckpt_dir:
+            latest = self.ckpt.latest_step(self.ckpt_dir)
+            if latest is not None:
+                params, opt_state, step = self.ckpt.restore(
+                    self.ckpt_dir, latest)
+                return TrainerState(params, opt_state, step)
+        return self.init_state(seed)
+
+    def run_steps(self, state: TrainerState, n_steps: int,
+                  data=None) -> TrainerState:
+        from repro.data.pipeline import Prefetcher
+        own_data = data is None
+        data = data or Prefetcher(self.cfg, self.shape,
+                                  start_step=state.step)
+        try:
+            target = state.step + n_steps
+            while state.step < target:
+                step_id, hb = data.next()
+                assert step_id == state.step, (step_id, state.step)
+                t0 = time.monotonic()
+                state.params, state.opt_state, metrics = self.jit_step(
+                    state.params, state.opt_state, hb)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.monotonic() - t0
+                if self.straggler_monitor is not None:
+                    self.straggler_monitor.record(state.step, dt)
+                self.metrics_log.append(
+                    {k: float(v) for k, v in metrics.items()}
+                    | {"step": state.step, "sec": dt})
+                state.step += 1
+                if self.ckpt_dir and state.step % self.ckpt_every == 0:
+                    self.ckpt.save(self.ckpt_dir, state.step,
+                                   state.params, state.opt_state,
+                                   async_=True)
+        finally:
+            if own_data:
+                data.stop()
+        if self.ckpt_dir:
+            self.ckpt.wait_pending()
+        return state

@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA device-count forcing here — smoke tests
+and benches must see the real (single-CPU) device; only launch/dryrun.py
+sets --xla_force_host_platform_device_count (per spec)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch is instantiated at a REDUCED config of the same family
+and runs one forward + one train step on CPU, asserting output shapes and
+no NaNs; decode smoke runs one serve_step against a fresh cache.
+The FULL configs are exercised only via the dry-run (abstract lowering).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.registry import ARCH_IDS, get_config, reduced
+from repro.models import api
+from repro.optim import adamw
+from repro.train.trainer import make_train_step
+from repro.data.pipeline import host_batch
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = reduced(get_config(request.param))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def test_full_config_matches_spec():
+    """The exact assigned numbers (guards against config drift)."""
+    spec = {
+        "qwen2_5_3b": (36, 2048, 16, 2, 11008, 151936),
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen2_5_32b": (64, 5120, 40, 8, 27648, 152064),
+        "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+        "phi3_5_moe_42b": (32, 4096, 32, 8, 6400, 32064),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (L, D, H, KV, FF, V) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, D, H, KV, FF, V), arch
+
+
+def test_moe_configs():
+    assert get_config("phi3_5_moe_42b").n_experts == 16
+    assert get_config("phi3_5_moe_42b").top_k == 2
+    assert get_config("dbrx_132b").top_k == 4
+    assert get_config("hymba_1_5b").ssm_state == 16
+
+
+def test_forward_smoke(arch_setup):
+    arch, cfg, params = arch_setup
+    batch = api.concrete_batch(cfg, SHAPE, jax.random.PRNGKey(1))
+    model = api.get_model(cfg)
+    logits, aux = model.forward(cfg, params, batch)
+    assert logits.shape == (SHAPE.global_batch, SHAPE.seq_len,
+                            cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+
+
+def test_train_step_smoke(arch_setup):
+    arch, cfg, params = arch_setup
+    step_fn = make_train_step(cfg, SHAPE, RunConfig(accum_steps=1))
+    opt = adamw.init(params)
+    batch = host_batch(cfg, SHAPE, 0, process_index=0, process_count=1)
+    new_params, new_opt, metrics = jax.jit(step_fn)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert float(metrics["loss"]) > 0
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
+                     params, new_params))
+    assert delta > 0, f"{arch}: optimizer made no update"
+
+
+def test_decode_smoke(arch_setup):
+    arch, cfg, params = arch_setup
+    model = api.get_model(cfg)
+    cache = api.init_cache(cfg, 2, 64)
+    logits, new_cache = model.decode_step(
+        cfg, params, cache, jnp.ones((2, 1), jnp.int32), jnp.int32(3))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+def test_grad_accum_equivalence():
+    """accum=2 must give (numerically) the same update as accum=1."""
+    cfg = reduced(get_config("qwen2_5_3b"))
+    shape = ShapeConfig("s", 16, 4, "train")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = host_batch(cfg, shape, 0, process_index=0, process_count=1)
+    outs = []
+    for accum in (1, 2):
+        step = make_train_step(cfg, shape, RunConfig(accum_steps=accum))
+        p2, _, m = jax.jit(step)(params, adamw.init(params), batch)
+        outs.append((p2, float(m["loss"])))
+    d = jax.tree.reduce(
+        lambda a, b: max(a, b),
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     outs[0][0], outs[1][0]))
+    assert d < 5e-5, d

@@ -1,0 +1,184 @@
+"""Unit + property tests for the MTMC core (env, rewards, policy, cost)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Action, EnvConfig, KernelEnv, MacroPolicy,
+                        OfflineEnv, OfflineTree, PolicyConfig,
+                        StructuredMicroCoder, candidate_actions,
+                        program_cost)
+from repro.core import tasks as T
+from repro.core.actions import unrestricted_actions
+from repro.core.env import action_key
+from repro.core.policy import (action_words, build_candidate_batch,
+                               encode, region_slots, state_words, VOCAB)
+from repro.core.trajectories import CollectConfig, collect, tree_stats
+
+
+# ---------------------------------------------------------------------------
+# reward shaping (paper's three tiers + step decay)
+# ---------------------------------------------------------------------------
+
+def test_reward_tiers():
+    task = T._attn_program("attn", 1, 256, 4, 64)
+    env = KernelEnv(task)
+    env.reset()
+    # tier 1: compile error penalised
+    res = env.step(Action("tiling", "out", (("bq", 999),)))
+    assert res.reward < 0 and res.info["status"] == "compile_error"
+    # tier 2+3: a beneficial fusion earns positive reward
+    env.reset()
+    res = env.step(Action("fusion", "scores", ("probs",)))
+    assert res.info["status"] == "ok"
+    assert res.reward > 0
+
+
+def test_step_decay_suppresses_loops():
+    """Same no-op-ish action later in the episode earns less."""
+    task = T.kb_level2()[0]
+    cfg = EnvConfig(decay_per_step=0.2, decay_floor=0.2)
+    env = KernelEnv(task, cfg=cfg)
+    env.reset()
+    a = Action("pipeline", "y0", (3,))
+    r1 = env.step(a).reward
+    env.reset()
+    env.t = 4   # pretend we're late in the episode
+    r2 = env.step(a).reward
+    if r1 > 0:
+        assert r2 < r1
+
+
+def test_stop_reward_reflects_achieved_speedup():
+    task = T._attn_program("attn", 1, 256, 4, 64)
+    env = KernelEnv(task)
+    env.reset()
+    r_stop_early = env.step(Action("stop", "")).reward
+    env.reset()
+    env.step(Action("fusion", "scores", ("probs",)))
+    env.step(Action("fusion", "scores", ("out",)))
+    r_stop_after = env.step(Action("stop", "")).reward
+    assert r_stop_after > r_stop_early
+
+
+# ---------------------------------------------------------------------------
+# offline tree env == live env semantics
+# ---------------------------------------------------------------------------
+
+def test_offline_tree_replay_matches_live():
+    task = T.kb_level2()[1]  # gemm_max
+    tree = collect(task, CollectConfig(episodes_random=4,
+                                       episodes_greedy=2))
+    stats = tree_stats(tree)
+    assert stats["nodes"] > 1 and stats["ok_edges"] > 0
+    env = OfflineEnv(tree)
+    env.reset()
+    acts = env.candidates()
+    assert acts
+    # replaying a materialized ok-action gives the same cost/reward sign
+    ok_act = next((a for a, s in tree.materialized_actions(tree.root)
+                   if s == "ok"), None)
+    if ok_act is not None:
+        live = KernelEnv(task)
+        live.reset()
+        r_live = live.step(ok_act)
+        env.reset()
+        r_off = env.step(ok_act)
+        assert r_off.info["status"] == r_live.info["status"]
+        np.testing.assert_allclose(r_off.reward, r_live.reward,
+                                   rtol=1e-6)
+
+
+def test_action_key_roundtrip():
+    task = T.kb_level2()[0]
+    for a in candidate_actions(task)[:20]:
+        k = action_key(a)
+        kind, region, param = k.split("|", 2)
+        import ast
+        a2 = Action(kind, region, ast.literal_eval(param))
+        assert a2 == a
+
+
+# ---------------------------------------------------------------------------
+# policy serialization / scoring
+# ---------------------------------------------------------------------------
+
+def test_state_and_action_words_in_vocab():
+    for task in (T.kb_level1()[0], T.kb_level3()[0],
+                 T._attn_program("a", 1, 256, 4, 64)):
+        words = state_words(task)
+        assert words and all(w in VOCAB for w in words)
+        slots = region_slots(task)
+        for a in candidate_actions(task)[:25]:
+            aw = action_words(a, slots)
+            assert all(w in VOCAB for w in aw), (a, aw)
+
+
+def test_policy_distribution_sums_to_one():
+    task = T.kb_level2()[0]
+    pol = MacroPolicy(PolicyConfig(), jax.random.PRNGKey(0))
+    cands = candidate_actions(task)
+    logp, v = pol.action_dist(task, cands)
+    assert len(logp) == len(cands)
+    np.testing.assert_allclose(np.exp(logp).sum(), 1.0, rtol=1e-4)
+    assert np.isfinite(v)
+
+
+def test_policy_distinguishes_actions():
+    """Different candidate sets give different distributions (the LM is
+    actually reading the action tokens)."""
+    task = T.kb_level2()[0]
+    pol = MacroPolicy(PolicyConfig(), jax.random.PRNGKey(1))
+    cands = candidate_actions(task)
+    lp1, _ = pol.action_dist(task, cands[:6])
+    lp2, _ = pol.action_dist(task, cands[6:12])
+    assert not np.allclose(lp1, lp2)
+
+
+# ---------------------------------------------------------------------------
+# cost model properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(bq=st.sampled_from([64, 128, 256, 512]))
+def test_flash_tiling_monotone_kv_traffic(bq):
+    """Bigger q-blocks strictly reduce modeled KV re-read traffic."""
+    task = T._attn_program("attn", 1, 1024, 4, 64)
+    mc = StructuredMicroCoder()
+    r1 = mc.apply(task, Action("fusion", "scores", ("probs",)))
+    r2 = mc.apply(r1.program, Action("fusion", "scores", ("out",)))
+    base = program_cost(r2.program).total_s
+    r3 = mc.apply(r2.program, Action("tiling", "out",
+                                     (("bk", 128), ("bq", bq))))
+    assert r3.status == "ok"
+    t = program_cost(r3.program).total_s
+    if bq > 128:
+        assert t <= base * 1.001
+
+
+def test_fusion_strictly_reduces_cost():
+    task = T.kb_level2()[0]  # gemm + bias + relu chain
+    mc = StructuredMicroCoder()
+    c0 = program_cost(task).total_s
+    r = mc.apply(task, Action("fusion", "y0", ("y1",)))
+    c1 = program_cost(r.program).total_s
+    r = mc.apply(r.program, Action("fusion", "y0", ("y",)))
+    c2 = program_cost(r.program).total_s
+    assert c2 < c1 < c0
+
+
+def test_pipeline_depth1_slower():
+    task = T.kb_level1()[0]
+    mc = StructuredMicroCoder()
+    c0 = program_cost(task).total_s
+    r = mc.apply(task, Action("pipeline", "y", (1,)))
+    assert program_cost(r.program).total_s >= c0
+
+
+def test_unrestricted_space_has_more_failures():
+    task = T.kb_level2()[0]
+    mc = StructuredMicroCoder()
+    cur = [mc.apply(task, a).status for a in candidate_actions(task)]
+    unr = [mc.apply(task, a).status for a in unrestricted_actions(task)]
+    fail = lambda xs: sum(s != "ok" for s in xs) / len(xs)
+    assert fail(unr) > fail(cur)

@@ -1,0 +1,256 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Every kernel is swept over shapes and dtypes and asserted allclose against
+ref.py, plus hypothesis property tests on the numerically risky pieces
+(chunked decay algebra).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.matmul import matmul
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.schedule import KernelSchedule
+from repro.kernels.ssm_scan import ssm_scan
+from repro.models import layers
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+def assert_close(a, b, dtype=jnp.float32):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 512),
+                                   (128, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("epilogue", ["none", "bias", "bias_gelu",
+                                      "relu", "row_max"])
+def test_matmul_sweep(m, k, n, dtype, epilogue):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (m, k), dtype)
+    w = jax.random.normal(k2, (k, n), dtype)
+    b = jnp.linspace(-1, 1, n, dtype=dtype)
+    y = matmul(x, w, epilogue=epilogue, bias=b, interpret=True)
+    yr = ref.matmul(x, w, epilogue=epilogue, bias=b)
+    assert_close(y, yr, dtype)
+
+
+@pytest.mark.parametrize("order", [("m", "n", "k"), ("n", "m", "k"),
+                                   ("k", "m", "n"), ("m", "k", "n")])
+def test_matmul_loop_orders(order):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (256, 384))
+    w = jax.random.normal(k2, (384, 256))
+    s = KernelSchedule(blocks={"bm": 64, "bn": 128, "bk": 192},
+                       loop_order=order)
+    assert_close(matmul(x, w, schedule=s, interpret=True),
+                 ref.matmul(x, w))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 64),
+                                      (128, 64, 128)])
+def test_matmul_tilings(bm, bn, bk):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (256, 256))
+    w = jax.random.normal(k2, (256, 256))
+    s = KernelSchedule(blocks={"bm": bm, "bn": bn, "bk": bk})
+    assert_close(matmul(x, w, schedule=s, interpret=True),
+                 ref.matmul(x, w))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk,h,kv,hd", [
+    (256, 256, 4, 2, 64),     # GQA
+    (128, 128, 4, 4, 32),     # MHA
+    (256, 256, 8, 1, 64),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(sq, sk, h, kv, hd, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, sq, h, hd), dtype)
+    k = jax.random.normal(ks[1], (2, sk, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (2, sk, kv, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, interpret=True)
+    orf = layers.attention(q, k, v, causal=causal)
+    assert_close(o, orf, dtype)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        interpret=True)
+    orf = layers.attention(q, k, v, causal=True, window=window)
+    assert_close(o, orf)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_tilings(bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    s = KernelSchedule(blocks={"bq": bq, "bk": bk})
+    o = flash_attention(q, k, v, schedule=s, interpret=True)
+    assert_close(o, layers.attention(q, k, v))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 37, 256), (128, 512), (2, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, shape, dtype)
+    s = jax.random.normal(k2, shape[-1:], dtype)
+    assert_close(rmsnorm(x, s, interpret=True),
+                 layers.rms_norm(x, s), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+def _rwkv_inputs(B=2, T=128, H=3, dk=16, dv=16, dtype=jnp.float32,
+                 decay_scale=1.0):
+    ks = jax.random.split(KEY, 6)
+    r = jax.random.normal(ks[0], (B, T, H, dk), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, dk), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, dv), dtype)
+    w = jnp.exp(-jnp.exp(
+        decay_scale * jax.random.normal(ks[3], (B, T, H, dk)))).astype(dtype)
+    u = (0.5 * jax.random.normal(ks[4], (H, dk))).astype(dtype)
+    s0 = jax.random.normal(ks[5], (B, H, dk, dv), jnp.float32)
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_kernel_sweep(chunk, dtype):
+    r, k, v, w, u, s0 = _rwkv_inputs(dtype=dtype)
+    o1, st1 = ref.rwkv6_scan(r, k, v, w, u, s0)
+    o2, st2 = rwkv6_scan(r, k, v, w, u, s0,
+                         schedule=KernelSchedule(blocks={"chunk": chunk}),
+                         interpret=True)
+    assert_close(o1, o2, dtype)
+    assert_close(st1, st2, dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(decay=st.floats(0.1, 4.0), chunk=st.sampled_from([16, 32]))
+def test_rwkv6_chunked_extreme_decay_property(decay, chunk):
+    """Chunked algebra must hold at any decay magnitude (exponents <= 0)."""
+    r, k, v, w, u, s0 = _rwkv_inputs(T=64, decay_scale=decay)
+    o1, st1 = ref.rwkv6_scan(r, k, v, w, u, s0)
+    o2, st2 = ref.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    # looser tolerance: exp(cumsum) vs sequential products differ in the
+    # last bits at extreme decay magnitudes
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=5e-3, atol=5e-3)
+    assert bool(jnp.all(jnp.isfinite(o2)))
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+def _ssm_inputs(B=2, T=128, H=2, P=48, N=8, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B_ = jax.random.normal(ks[3], (B, T, N), dtype)
+    C = jax.random.normal(ks[4], (B, T, N), dtype)
+    h0 = jax.random.normal(ks[5], (B, H, P, N), jnp.float32)
+    return x, dt, A, B_, C, h0
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_kernel_sweep(chunk, dtype):
+    x, dt, A, B_, C, h0 = _ssm_inputs(dtype=dtype)
+    y1, h1 = ref.ssm_scan_step(x, dt, A, B_, C, h0)
+    y2, h2 = ssm_scan(x, dt, A, B_, C, h0,
+                      schedule=KernelSchedule(blocks={"chunk": chunk}),
+                      interpret=True)
+    assert_close(y1, y2, dtype)
+    assert_close(h1, h2, dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32]),
+       t_mult=st.integers(2, 4))
+def test_ssm_chunked_matches_scan_property(chunk, t_mult):
+    x, dt, A, B_, C, h0 = _ssm_inputs(T=chunk * t_mult)
+    y1, h1 = ref.ssm_scan_step(x, dt, A, B_, C, h0)
+    y2, h2 = ref.ssm_chunked(x, dt, A, B_, C, h0, chunk=chunk)
+    assert_close(y1, y2)
+    assert_close(h1, h2)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 128, 256, 384), (2, 256, 128, 128),
+                                     (8, 128, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(e, c, d, f, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (e, c, d), dtype)
+    w = jax.random.normal(k2, (e, d, f), dtype)
+    y = grouped_matmul(x, w, interpret=True)
+    yr = jnp.einsum("ecd,edf->ecf", x, w)
+    assert_close(y, yr, dtype)
+
+
+# ---------------------------------------------------------------------------
+# state chaining property: splitting T in half and carrying state is exact
+# ---------------------------------------------------------------------------
+
+def test_rwkv6_state_chaining():
+    r, k, v, w, u, s0 = _rwkv_inputs(T=64)
+    o_full, st_full = ref.rwkv6_scan(r, k, v, w, u, s0)
+    o1, st1 = ref.rwkv6_chunked(*(a[:, :32] for a in (r, k, v, w)), u, s0,
+                                chunk=16)
+    o2, st2 = ref.rwkv6_chunked(*(a[:, 32:] for a in (r, k, v, w)), u, st1,
+                                chunk=16)
+    assert_close(jnp.concatenate([o1, o2], 1), o_full)
+    assert_close(st2, st_full)
+
+
+def test_ssm_state_chaining():
+    x, dt, A, B_, C, h0 = _ssm_inputs(T=64)
+    y_full, h_full = ref.ssm_scan_step(x, dt, A, B_, C, h0)
+    y1, h1 = ref.ssm_chunked(x[:, :32], dt[:, :32], A, B_[:, :32],
+                             C[:, :32], h0, chunk=16)
+    y2, h2 = ref.ssm_chunked(x[:, 32:], dt[:, 32:], A, B_[:, 32:],
+                             C[:, 32:], h1, chunk=16)
+    assert_close(jnp.concatenate([y1, y2], 1), y_full)
+    assert_close(h2, h_full)

@@ -1,0 +1,154 @@
+"""HLO-text analyzer unit tests: loop multipliers, dot flops, collective
+bytes — verified against tiny programs with known ground truth.
+
+(These run on the default single-device CPU backend; collective tests
+build tiny meshes only if >1 device is available, otherwise they verify
+the text-parsing layer on canned HLO snippets.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_parse as H
+
+
+def _compiled_text(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_scan_flops_multiplied():
+    """XLA cost_analysis counts a scanned body once; ours multiplies by
+    the trip count."""
+    n, L = 128, 10
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=L)
+        return y
+
+    s = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    txt = _compiled_text(f, s, s)
+    fb = H.hlo_flops_bytes(txt)
+    expect = 2.0 * n ** 3 * L
+    assert abs(fb["dot_flops"] - expect) / expect < 0.05, \
+        (fb["dot_flops"], expect)
+
+
+def test_nested_scan_multipliers():
+    n, L1, L2 = 64, 3, 5
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=L2)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=L1)
+        return y
+
+    s = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    txt = _compiled_text(f, s, s)
+    fb = H.hlo_flops_bytes(txt)
+    expect = 2.0 * n ** 3 * L1 * L2
+    assert abs(fb["dot_flops"] - expect) / expect < 0.05
+
+
+def test_plain_matmul_flops_and_bytes():
+    m, k, n = 256, 512, 128
+
+    def f(a, b):
+        return a @ b
+
+    txt = _compiled_text(f, jax.ShapeDtypeStruct((m, k), jnp.float32),
+                         jax.ShapeDtypeStruct((k, n), jnp.float32))
+    fb = H.hlo_flops_bytes(txt)
+    assert abs(fb["dot_flops"] - 2 * m * k * n) / (2 * m * k * n) < 0.01
+    io = 4 * (m * k + k * n + m * n)
+    assert fb["bytes"] >= io * 0.9
+    assert fb["bytes"] <= io * 3          # upper bound, not unbounded
+
+
+def test_type_bytes_tuples():
+    assert H._type_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert H._type_bytes("bf16[16]") == 32
+    assert H._type_bytes("(f32[4,4]{1,0}, bf16[8]{0})") == 64 + 16
+    assert H._type_bytes("pred[2,3]") == 6
+
+
+def test_group_size_parsing():
+    line = ("%ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8],"
+            " to_apply=%add")
+    assert H._group_size(line) == 4
+    line2 = "%ag = f32[8]{0} all-gather(%x), replica_groups={{0,1,2,3}}"
+    assert H._group_size(line2) == 4
+
+
+def test_collective_parsing_canned():
+    txt = """HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128,512]) -> f32[128,512] {
+  %x = f32[128,512]{1,0} parameter(0)
+  %ar = f32[128,512]{1,0} all-reduce(%x), replica_groups=[2,8]<=[16], to_apply=%add
+  ROOT %cp = f32[128,512]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    cb = H.collective_bytes(txt)
+    sz = 128 * 512 * 4
+    assert cb["all-reduce"] == sz
+    assert cb["collective-permute"] == sz
+    assert cb["total"] == 2 * sz
+
+
+def test_collective_in_loop_multiplied():
+    txt = """HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (t: (s32[], f32[64])) -> pred[] {
+  %t = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (t: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %t = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[64]{0} get-tuple-element(%t), index=1
+  %ar = f32[64]{0} all-reduce(%x), replica_groups=[1,4]<=[4], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[64]{0}) tuple(%ni, %ar)
+}
+
+ENTRY %main (x: f32[64]) -> (s32[], f32[64]) {
+  %x = f32[64]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[64]{0}) tuple(%zero, %x)
+  ROOT %w = (s32[], f32[64]{0}) while(%t), condition=%cond, body=%body
+}
+"""
+    cb = H.collective_bytes(txt)
+    assert cb["all-reduce"] == 64 * 4 * 12       # x trip count
+
+
+def test_parse_def_tuple_types():
+    d = H.parse_def("  %w = (f32[8]{0}, bf16[4]{0}) while(%t), "
+                    "condition=%c, body=%b")
+    assert d is not None
+    name, tstr, op, operands, attrs = d
+    assert op == "while" and name == "w"
+    assert H._type_bytes(tstr) == 32 + 8
+    assert "condition=%c" in attrs

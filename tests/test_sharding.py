@@ -1,0 +1,82 @@
+"""ShardingRules unit + property tests (divisibility, padding, specs)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import normalize_for_mesh
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="module")
+def rules():
+    return ShardingRules(make_local_mesh())
+
+
+def test_divisibility_replicates(rules):
+    # 'model' axis has size 1 locally; use a fake 4-wide mesh via rule math
+    spec = rules.spec((6, 8), ("heads", "embed"))
+    assert isinstance(spec, P)
+
+
+def test_padding_policy_all_archs():
+    tp = 16
+    for arch in ARCH_IDS:
+        cfg = normalize_for_mesh(get_config(arch), tp)
+        assert cfg.vocab_size % tp == 0, arch
+        if cfg.n_kv_heads and cfg.n_kv_heads < cfg.n_heads:
+            # GQA grouping must stay exact
+            assert cfg.n_heads % cfg.n_kv_heads == 0, arch
+        assert cfg.n_heads >= cfg.true_n_heads, arch
+        assert cfg.vocab_size >= cfg.true_vocab_size, arch
+
+
+def test_padding_specific_cases():
+    tp = 16
+    yi = normalize_for_mesh(get_config("yi_34b"), tp)
+    assert yi.n_heads == 64 and yi.n_kv_heads == 8       # 56 -> 64
+    hymba = normalize_for_mesh(get_config("hymba_1_5b"), tp)
+    assert hymba.n_heads == 25                            # unpaddable GQA
+    rwkv = normalize_for_mesh(get_config("rwkv6_3b"), tp)
+    assert rwkv.n_heads == 48 and rwkv.n_kv_heads == 48   # MHA-style pad
+    seam = normalize_for_mesh(get_config("seamless_m4t_medium"), tp)
+    assert seam.n_heads == 16
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(1, 4096))
+def test_spec_divisibility_property(dim):
+    """A sharded dim always divides the mesh axis product; otherwise the
+    spec must replicate that dim."""
+    mesh = make_local_mesh()
+    rules = ShardingRules(mesh)
+    spec = rules.spec((dim,), ("vocab",))
+    axes = spec[0] if len(spec) > 0 else None
+    if axes is not None:
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = int(np.prod([mesh.shape[a] for a in names]))
+        assert dim % total == 0
+
+
+def test_no_duplicate_mesh_axes():
+    mesh = make_local_mesh()
+    rules = ShardingRules(mesh).with_fsdp()
+    # expert and mlp both map to model: first-come-wins, no duplicates
+    spec = rules.spec((4, 64, 128), ("expert", "embed", "mlp"))
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        used += [entry] if isinstance(entry, str) else list(entry)
+    assert len(used) == len(set(used))
+
+
+def test_fsdp_rules_shard_embed():
+    mesh = make_local_mesh()
+    r0 = ShardingRules(mesh)
+    r1 = r0.with_fsdp()
+    assert r0.rules["embed"] == ()
+    assert r1.rules["embed"] == ("data",)
