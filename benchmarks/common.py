@@ -8,20 +8,28 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (CollectConfig, EnvConfig, MTMCPipeline,
-                        MacroPolicy, PPOConfig, PPOTrainer, PolicyConfig,
-                        collect_suite, evaluate_suite)
+from repro.core import (CollectConfig, EnvConfig, EvalEngine,
+                        MTMCPipeline, MacroPolicy, PPOConfig, PPOTrainer,
+                        PolicyConfig, TranspositionStore, collect_suite,
+                        evaluate_suite)
 from repro.core import tasks as T
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 POLICY_PATH = os.path.join(RESULTS, "macro_policy.pkl")
+
+# One transposition store for the whole benchmark process: every table,
+# mode and ablation sweeps the same suites, so rewrites, cost pricing
+# and oracle outputs are shared across all of them.
+STORE = TranspositionStore()
+WORKERS = max(2, (os.cpu_count() or 2))
 
 
 def train_policy(iters: int = 24, episodes: int = 8, seed: int = 0,
                  pcfg: PolicyConfig = PolicyConfig()) -> MacroPolicy:
     trees = collect_suite(
         T.train_tasks(),
-        CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed))
+        CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed),
+        store=STORE)
     trainer = PPOTrainer(
         trees, pcfg=pcfg,
         cfg=PPOConfig(iters=iters, episodes_per_iter=episodes, seed=seed,
@@ -49,11 +57,20 @@ def cached_policy(retrain: bool = False, **kw) -> MacroPolicy:
 
 
 def eval_mode(suite, mode: str, policy=None, curated: bool = True,
-              seed: int = 0, max_steps: int = 8) -> dict:
-    pipe = MTMCPipeline(policy, mode=mode, curated=curated, seed=seed,
-                        max_steps=max_steps)
+              seed: int = 0, max_steps: int = 8,
+              workers: int | None = None) -> dict:
+    """Evaluate one (suite x mode) cell through the batched engine.
+
+    Metrics match the serial ``evaluate_suite`` path (seed_stride=0:
+    same per-task seeds; the store memoizes only pure functions) — see
+    the golden regression in tests/test_engine.py and the oracle-input
+    caveat in core/engine.py.
+    """
+    eng = EvalEngine(policy, store=STORE, mode=mode, curated=curated,
+                     seed=seed, max_steps=max_steps,
+                     workers=WORKERS if workers is None else workers)
     t0 = time.time()
-    out = evaluate_suite(suite, pipe)
+    out = eng.evaluate_suite(suite)
     out["wall_s"] = time.time() - t0
     return out
 

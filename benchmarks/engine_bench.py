@@ -1,0 +1,107 @@
+"""Wall-clock evidence for the batched/cached evaluation engine.
+
+Runs the SAME workload — ``tasks.train_tasks()`` under greedy_cost with
+fixed seeds — through (a) the serial ``evaluate_suite`` reference and
+(b) the batched ``EvalEngine``; each side in its OWN subprocess so
+neither benefits from the other's warm XLA jit cache.  Asserts the
+metrics are bit-identical and reports the speedup (acceptance: >= 3x),
+plus the marginal cost of a second, fully-cached suite sweep (the
+"scenario sweep" case the engine exists for).
+
+  PYTHONPATH=src python benchmarks/engine_bench.py [--out results/engine_bench.txt]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+SERIAL = r"""
+import json, time
+from repro.core import MTMCPipeline, evaluate_suite
+from repro.core import tasks as T
+tasks = T.train_tasks()
+t0 = time.time()
+out = evaluate_suite(tasks, MTMCPipeline(mode="greedy_cost",
+                                         max_steps=8, seed=0))
+t1 = time.time() - t0
+t0 = time.time()
+out2 = evaluate_suite(tasks, MTMCPipeline(mode="greedy_cost",
+                                          max_steps=8, seed=0))
+t2 = time.time() - t0
+m = {k: v for k, v in out.items() if k != "results"}
+print("RESULT:" + json.dumps({"first_s": t1, "second_s": t2,
+                              "metrics": m}))
+"""
+
+ENGINE = r"""
+import json, time
+from repro.core import EvalEngine
+from repro.core import tasks as T
+tasks = T.train_tasks()
+eng = EvalEngine(mode="greedy_cost", max_steps=8, seed=0, workers=%d)
+t0 = time.time()
+out = eng.evaluate_suite(tasks)
+t1 = time.time() - t0
+t0 = time.time()
+out2 = eng.evaluate_suite(tasks)
+t2 = time.time() - t0
+m = {k: v for k, v in out.items() if k != "results"}
+print("RESULT:" + json.dumps({"first_s": t1, "second_s": t2,
+                              "metrics": m,
+                              "store": eng.store.stats_dict()}))
+"""
+
+
+def _run(script: str) -> dict:
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("RESULT:"))
+    return json.loads(line[len("RESULT:"):])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "engine_bench.txt"))
+    ap.add_argument("--workers", type=int,
+                    default=max(2, os.cpu_count() or 2))
+    args = ap.parse_args()
+
+    serial = _run(SERIAL)
+    engine = _run(ENGINE % args.workers)
+    assert serial["metrics"] == engine["metrics"], (
+        "metrics diverged", serial["metrics"], engine["metrics"])
+    sp_fresh = serial["first_s"] / engine["first_s"]
+    sp_sweep = serial["second_s"] / engine["second_s"]
+    lines = [
+        "engine_bench: tasks.train_tasks() x greedy_cost(max_steps=8, "
+        "seed=0), fresh process per side",
+        f"serial evaluate_suite : first {serial['first_s']:.2f}s, "
+        f"repeat {serial['second_s']:.2f}s",
+        f"EvalEngine(workers={args.workers}): first "
+        f"{engine['first_s']:.2f}s, repeat {engine['second_s']:.2f}s",
+        f"speedup fresh  : {sp_fresh:.2f}x (acceptance >= 3x)",
+        f"speedup repeat : {sp_sweep:.2f}x (cached scenario re-sweep)",
+        f"metrics identical: {json.dumps(serial['metrics'])}",
+        f"store: {json.dumps(engine['store'])}",
+    ]
+    text = "\n".join(lines) + "\n"
+    print(text)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    if sp_fresh < 3.0:
+        print("WARNING: fresh-run speedup below 3x on this host")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,8 +26,14 @@ def main() -> None:
     ap.add_argument("--retrain", action="store_true")
     ap.add_argument("--fast", action="store_true",
                     help="fewer PPO iters (CI smoke)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="engine worker threads per suite eval "
+                         "(default: all cores)")
     args = ap.parse_args()
     tables = set(args.tables.split(","))
+    if args.workers is not None:
+        import benchmarks.common as common
+        common.WORKERS = args.workers
 
     kw = dict(iters=4, episodes=4) if args.fast else {}
     policy = cached_policy(retrain=args.retrain, **kw)
@@ -62,6 +68,8 @@ def main() -> None:
         with open(os.path.join(RESULTS, "policy_training.json"),
                   "w") as f:
             json.dump(policy.train_log, f, indent=1)
+    from benchmarks.common import STORE
+    print("# engine store:", json.dumps(STORE.stats_dict()))
 
 
 if __name__ == "__main__":

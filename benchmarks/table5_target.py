@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.common import STORE
 from repro.core import MTMCPipeline, program_cost
 from repro.core import tasks as T
 
@@ -27,9 +28,10 @@ def run(policy) -> list[str]:
     rows = []
     for name, pipe in [
             ("pallas_full", MTMCPipeline(mode="greedy_cost",
-                                         max_steps=8)),
+                                         max_steps=8, store=STORE)),
             ("xla_fusion_only", _FusionOnlyPipeline(mode="greedy_cost",
-                                                    max_steps=8))]:
+                                                    max_steps=8,
+                                                    store=STORE))]:
         times = []
         for t in suite:
             r = pipe.optimize(t)

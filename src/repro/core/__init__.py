@@ -7,10 +7,12 @@ compile/correctness feedback.  See DESIGN.md.
 """
 from repro.core.actions import Action, candidate_actions  # noqa: F401
 from repro.core.cost_model import program_cost, speedup   # noqa: F401
+from repro.core.engine import (EngineConfig, EvalEngine,  # noqa: F401
+                               TranspositionStore)
 from repro.core.env import EnvConfig, KernelEnv, OfflineEnv, OfflineTree  # noqa: F401
 from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec  # noqa: F401
 from repro.core.micro_coding import StructuredMicroCoder  # noqa: F401
-from repro.core.pipeline import MTMCPipeline, evaluate_suite  # noqa: F401
+from repro.core.pipeline import MTMCPipeline, evaluate_suite, suite_metrics  # noqa: F401
 from repro.core.policy import MacroPolicy, PolicyConfig   # noqa: F401
 from repro.core.ppo import PPOConfig, PPOTrainer          # noqa: F401
 from repro.core.trajectories import CollectConfig, collect, collect_suite  # noqa: F401

@@ -47,14 +47,31 @@ class StepResult:
 
 
 class KernelEnv:
-    """Live environment: applies actions through a MicroCoder."""
+    """Live environment: applies actions through a MicroCoder.
+
+    ``store`` (optional, a ``core.engine.TranspositionStore`` or anything
+    with the same ``apply``/``cost`` duck type) memoizes rewrites and
+    cost-model pricing by fingerprint, shared with ``OfflineTree`` and
+    the pipeline — a visited (state, action) edge is never re-rewritten.
+    """
 
     def __init__(self, task: KernelProgram, coder: MicroCoder | None = None,
-                 cfg: EnvConfig = EnvConfig()):
+                 cfg: EnvConfig = EnvConfig(), store=None):
         self.task = task
         self.coder = coder or StructuredMicroCoder()
         self.cfg = cfg
-        self.baseline_s = cost_model.program_cost(task).total_s
+        self.store = store
+        self.baseline_s = self._cost(task)
+
+    def _cost(self, prog: KernelProgram) -> float:
+        if self.store is not None:
+            return self.store.cost(prog)
+        return cost_model.program_cost(prog).total_s
+
+    def _apply(self, action: A.Action):
+        if self.store is not None:
+            return self.store.apply(self.coder, self.state, action)
+        return self.coder.apply(self.state, action)
 
     def reset(self) -> KernelProgram:
         self.state = self.task
@@ -82,14 +99,14 @@ class KernelEnv:
             r = 0.25 * max(0.0, final - 1.0)
             return StepResult(self.state, r, True,
                               {"status": "stop", "speedup": final})
-        res = self.coder.apply(self.state, action)
+        res = self._apply(action)
         if res.status == "compile_error":
             return StepResult(self.state, cfg.penalty_compile, done,
                               {"status": res.status, "detail": res.detail})
         if res.status == "wrong_result":
             return StepResult(self.state, cfg.penalty_wrong, done,
                               {"status": res.status})
-        new_s = cost_model.program_cost(res.program).total_s
+        new_s = self._cost(res.program)
         delta = self.prev_s / new_s - 1.0          # speedup vs prev step
         r = cfg.reward_valid + cfg.reward_speed_scale * max(
             min(delta, 3.0), -0.5)
@@ -118,14 +135,25 @@ class TreeNode:
 
 
 class OfflineTree:
-    """Materialized transition cache for offline policy training."""
+    """Materialized transition cache for offline policy training.
 
-    def __init__(self, task: KernelProgram):
+    When given a ``store`` (``core.engine.TranspositionStore``), the tree
+    interns and expands against that shared backing store, so live envs,
+    pipelines and other trees reuse its transitions (and vice versa).
+    """
+
+    def __init__(self, task: KernelProgram, store=None):
         self.task = task
+        self.store = store
         self.nodes: dict[str, TreeNode] = {}
         self.root = self._intern(task)
 
     def _intern(self, prog: KernelProgram) -> str:
+        if self.store is not None:
+            fp = self.store.intern(prog)
+            if fp not in self.nodes:
+                self.nodes[fp] = TreeNode(prog, self.store.cost(prog))
+            return fp
         fp = prog.fingerprint()
         if fp not in self.nodes:
             self.nodes[fp] = TreeNode(
@@ -138,7 +166,10 @@ class OfflineTree:
         k = action_key(action)
         if k in node.children:
             return node.children[k]
-        res = coder.apply(node.program, action)
+        if self.store is not None:
+            res = self.store.apply(coder, node.program, action)
+        else:
+            res = coder.apply(node.program, action)
         child = self._intern(res.program) if res.status == "ok" and \
             action.kind != "stop" else None
         node.children[k] = (child, res.status)

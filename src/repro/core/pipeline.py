@@ -28,6 +28,12 @@ from repro.core.micro_coding import StructuredMicroCoder
 from repro.core.policy import MacroPolicy
 
 
+# tier-2 validation parameters — shared by the serial _check path and
+# the engine's memoized TranspositionStore.check so they cannot diverge
+CHECK_SEED = 7
+CHECK_RTOL = CHECK_ATOL = 2e-3
+
+
 @dataclasses.dataclass
 class OptimizationResult:
     task: str
@@ -47,13 +53,28 @@ class MTMCPipeline:
     def __init__(self, policy: MacroPolicy | None = None, *,
                  mode: str = "policy", curated: bool = True,
                  max_steps: int = 8, seed: int = 0,
-                 validate: bool = True):
+                 validate: bool = True, store=None):
         self.policy = policy
         self.mode = mode
         self.curated = curated
         self.max_steps = max_steps
         self.seed = seed
         self.validate = validate
+        # optional TranspositionStore (core.engine): memoizes rewrites,
+        # costs and oracle checks; None keeps the uncached serial path
+        self.store = store
+        self._coder = StructuredMicroCoder()
+
+    # -- cached primitives ---------------------------------------------------
+    def _apply(self, prog, act):
+        if self.store is not None:
+            return self.store.apply(self._coder, prog, act)
+        return self._coder.apply(prog, act)
+
+    def _cost(self, prog) -> float:
+        if self.store is not None:
+            return self.store.cost(prog)
+        return cost_model.program_cost(prog).total_s
 
     # -- action selection ----------------------------------------------------
     def _select(self, prog, cands, key, rng):
@@ -64,14 +85,13 @@ class MTMCPipeline:
             idx, _, _ = self.policy.act(prog, cands, key, greedy=False)
             return cands[idx]
         if self.mode == "greedy_cost":
-            coder = StructuredMicroCoder()
-            best, best_c = A.STOP, cost_model.program_cost(prog).total_s
+            best, best_c = A.STOP, self._cost(prog)
             for a in cands:
                 if a.kind == "stop":
                     continue
-                r = coder.apply(prog, a)
+                r = self._apply(prog, a)
                 if r.status == "ok":
-                    c = cost_model.program_cost(r.program).total_s
+                    c = self._cost(r.program)
                     if c < best_c * 0.999:
                         best, best_c = a, c
             return best
@@ -83,13 +103,13 @@ class MTMCPipeline:
         key = jax.random.PRNGKey(self.seed)
         if self.mode == "single_pass":
             return self._single_pass(task, rng, key)
-        coder = StructuredMicroCoder()
         env_cfg = EnvConfig(max_steps=self.max_steps,
                             curated_actions=self.curated)
-        env = KernelEnv(task, coder, env_cfg)
+        env = KernelEnv(task, self._coder, env_cfg, store=self.store)
         state = env.reset()
         best = state
         best_s = env.baseline_s
+        best_steps = 0
         n_fail = 0
         for t in range(self.max_steps):
             cands = env.candidates()
@@ -99,39 +119,38 @@ class MTMCPipeline:
             if res.info["status"] in ("compile_error", "wrong_result"):
                 n_fail += 1
             state = res.program
-            s = cost_model.program_cost(state).total_s
+            s = self._cost(state)
             if s < best_s:
-                best, best_s = state, s
+                best, best_s, best_steps = state, s, t + 1
             if act.kind == "stop" or res.done:
                 break
         correct = self._check(task, best)
+        # steps/trace describe the BEST program (the one returned and
+        # graded), not wherever the episode happened to wander afterwards
         return OptimizationResult(
             task.name, best, correct,
-            env.baseline_s / best_s, t + 1, n_fail, best.history)
+            env.baseline_s / best_s, best_steps, n_fail, best.history)
 
     def _single_pass(self, task, rng, key) -> OptimizationResult:
         """'w/o Hier': commit to a full plan against the INITIAL state and
         apply all steps blindly; any failing step poisons the rest (the
         paper's observed single-pass failure mode)."""
-        coder = StructuredMicroCoder()
         cands = (A.candidate_actions(task) if self.curated
                  else A.unrestricted_actions(task))
         n = min(self.max_steps, 4)
         plan = [cands[rng.integers(len(cands))] for _ in range(n)]
         prog = task
         n_fail = 0
-        applied = False
         for act in plan:
             # regions/params were chosen against the initial program; they
             # may no longer exist after earlier rewrites
-            res = coder.apply(prog, act)
+            res = self._apply(prog, act)
             if res.status != "ok":
                 n_fail += 1
                 continue
             prog = res.program
-            applied = True
-        base = cost_model.program_cost(task).total_s
-        cur = cost_model.program_cost(prog).total_s
+        base = self._cost(task)
+        cur = self._cost(prog)
         # single-pass parity with LLM whole-kernel generation: any failed
         # step means the emitted kernel as a whole is wrong
         correct = (n_fail == 0) and self._check(task, prog)
@@ -141,7 +160,9 @@ class MTMCPipeline:
     def _check(self, task: KernelProgram, prog: KernelProgram) -> bool:
         if not self.validate:
             return True
-        inputs = make_inputs(task, jax.random.PRNGKey(7))
+        if self.store is not None:
+            return self.store.check(task, prog)
+        inputs = make_inputs(task, jax.random.PRNGKey(CHECK_SEED))
         try:
             a = evaluate(task, inputs)
             b = evaluate(prog, inputs)
@@ -149,15 +170,13 @@ class MTMCPipeline:
             return False
         import jax.numpy as jnp
         return all(x.shape == y.shape and bool(
-            jnp.allclose(x, y, rtol=2e-3, atol=2e-3))
+            jnp.allclose(x, y, rtol=CHECK_RTOL, atol=CHECK_ATOL))
             for x, y in zip(a, b))
 
 
-def evaluate_suite(tasks: list[KernelProgram], pipeline: MTMCPipeline
-                   ) -> dict:
-    """Benchmark metrics over a suite (paper Eqs. 3-4): execute accuracy,
-    fast_1/fast_2, mean speedup (failed tasks count speedup 0)."""
-    results = [pipeline.optimize(t) for t in tasks]
+def suite_metrics(results: list[OptimizationResult]) -> dict:
+    """Benchmark metrics over per-task results (paper Eqs. 3-4): execute
+    accuracy, fast_1/fast_2, mean speedup (failed tasks count 0)."""
     n = len(results)
     acc = sum(r.correct for r in results) / n
     sp = [r.speedup if r.correct else 0.0 for r in results]
@@ -166,3 +185,11 @@ def evaluate_suite(tasks: list[KernelProgram], pipeline: MTMCPipeline
     return {"n": n, "accuracy": acc, "fast1": fast1, "fast2": fast2,
             "mean_speedup": float(np.mean(sp)),
             "results": results}
+
+
+def evaluate_suite(tasks: list[KernelProgram], pipeline: MTMCPipeline
+                   ) -> dict:
+    """Serial reference evaluator (one task after another).  The batched,
+    cached path is ``core.engine.EvalEngine.evaluate_suite`` — same
+    metrics, shared transposition store, worker pool."""
+    return suite_metrics([pipeline.optimize(t) for t in tasks])

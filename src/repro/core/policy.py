@@ -237,10 +237,15 @@ class MacroPolicy:
 
     def action_dist(self, prog: KernelProgram, cands: list[A.Action],
                     params=None):
+        """Score the WHOLE candidate set in one batched forward (the
+        candidate axis is the batch axis of ``policy_forward``) — no
+        per-action calls.  The axis is padded to the next power of two
+        so the jit sees O(log n) shapes instead of O(n/8): under the
+        engine's worker pool this caps recompilations across tasks with
+        wildly varying candidate counts."""
         tokens, mask, _ = build_candidate_batch(self.cfg, prog, cands)
         n = len(cands)
-        # pad candidate axis to a multiple of 8 (bounded jit variants)
-        n_pad = -(-n // 8) * 8
+        n_pad = max(8, 1 << (n - 1).bit_length())
         if n_pad > n:
             tokens = np.concatenate(
                 [tokens, np.zeros((n_pad - n, tokens.shape[1]),

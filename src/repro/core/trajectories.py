@@ -48,11 +48,13 @@ def _greedy_action(tree: OfflineTree, fp: str, cands, coder, rng):
 
 
 def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
-            env_cfg: EnvConfig = EnvConfig()) -> OfflineTree:
+            env_cfg: EnvConfig = EnvConfig(), store=None) -> OfflineTree:
+    """``store`` (core.engine.TranspositionStore) lets collection reuse —
+    and feed — the same transposition table the evaluation engine uses."""
     rng = np.random.default_rng(ccfg.seed)
     coder = StructuredMicroCoder()
-    tree = OfflineTree(task)
-    env = KernelEnv(task, coder, env_cfg)
+    tree = OfflineTree(task, store=store)
+    env = KernelEnv(task, coder, env_cfg, store=store)
 
     def rollout(pick):
         fp = tree.root
@@ -85,12 +87,12 @@ def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
 
 def collect_suite(tasks: list[KernelProgram],
                   ccfg: CollectConfig = CollectConfig(),
-                  env_cfg: EnvConfig = EnvConfig()
+                  env_cfg: EnvConfig = EnvConfig(), store=None
                   ) -> dict[str, OfflineTree]:
     out = {}
     for i, t in enumerate(tasks):
         c = dataclasses.replace(ccfg, seed=ccfg.seed + i)
-        out[t.name] = collect(t, c, env_cfg)
+        out[t.name] = collect(t, c, env_cfg, store=store)
     return out
 
 

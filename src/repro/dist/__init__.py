@@ -1,0 +1,1 @@
+from repro.dist.sharding import ShardingRules  # noqa: F401

@@ -1,0 +1,137 @@
+"""Logical-axis sharding rules with a divisibility-or-replicate policy.
+
+``ShardingRules`` maps LOGICAL axis names (the ones ``param_tree`` /
+``cache_tree`` / the forward passes annotate: "batch", "embed", "heads",
+"kv_heads", "mlp", "vocab", "expert", "kv_seq", "seq", ...) to MESH axis
+names ("pod", "data", "model").  A spec is produced per-tensor, and two
+safety policies are applied at that point:
+
+  * divisibility-or-replicate — a dimension is only sharded over the
+    longest prefix of its mesh axes whose size product divides it; an
+    unshardable dim silently replicates (normalize_for_mesh pads heads /
+    vocab so the hot tensors stay shardable; everything else degrades
+    gracefully — e.g. hymba's 25 q-heads on tp=16 replicate);
+  * first-come-wins — within one spec a mesh axis is used at most once
+    (expert and mlp both map to "model": whichever dim comes first gets
+    it, the later one replicates), since a PartitionSpec naming the same
+    mesh axis twice is illegal.
+
+The default rule set is mesh-aware: "batch" takes every pod/data axis the
+mesh actually has, tensor-parallel logical axes take "model" when present.
+``with_fsdp`` additionally shards "embed" over "data" (the FSDP weight
+split); ``replace`` overrides individual rules (e.g. decode's
+``kv_seq=("data", "model")`` flash-decode split); ``with_flags`` attaches
+free-form feature toggles ("bf16_reduce") read by the model code.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axes that shard over the tensor-parallel ("model") mesh axis
+_TP_AXES = ("heads", "kv_heads", "mlp", "vocab", "expert")
+# logical axes that default to replicated
+_REPLICATED = ("embed", "kv_seq", "seq", "layers")
+
+
+def _default_rules(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    names = mesh.axis_names
+    data = tuple(a for a in ("pod", "data") if a in names)
+    model = ("model",) if "model" in names else ()
+    rules: dict[str, tuple[str, ...]] = {"batch": data}
+    for ax in _TP_AXES:
+        rules[ax] = model
+    for ax in _REPLICATED:
+        rules[ax] = ()
+    return rules
+
+
+class ShardingRules:
+    """Immutable logical-axis -> mesh-axes mapping bound to one mesh."""
+
+    def __init__(self, mesh: Mesh,
+                 rules: dict[str, tuple[str, ...]] | None = None,
+                 flags: frozenset[str] = frozenset()):
+        self.mesh = mesh
+        self.rules = dict(_default_rules(mesh) if rules is None else rules)
+        self.flags = frozenset(flags)
+
+    # -- derived parallel degrees -----------------------------------------
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree (size of the "model" mesh axis)."""
+        if "model" in self.mesh.axis_names:
+            return int(self.mesh.shape["model"])
+        return 1
+
+    @property
+    def dp(self) -> int:
+        """Data-parallel degree (product of the batch rule's axes)."""
+        return int(np.prod([self.mesh.shape[a]
+                            for a in self.rules.get("batch", ())] or [1]))
+
+    # -- functional updates ------------------------------------------------
+    def replace(self, **kw) -> "ShardingRules":
+        """Override individual logical-axis rules (values: mesh-axis
+        tuples), e.g. ``rules.replace(kv_seq=("data", "model"))``."""
+        new = dict(self.rules)
+        for k, v in kw.items():
+            new[k] = tuple(v)
+        return ShardingRules(self.mesh, new, self.flags)
+
+    def with_fsdp(self) -> "ShardingRules":
+        """Shard the embed (weight-column) axis over data: FSDP."""
+        return self.replace(embed=("data",) if "data" in
+                            self.mesh.axis_names else ())
+
+    def with_flags(self, *flags: str) -> "ShardingRules":
+        return ShardingRules(self.mesh, self.rules,
+                             self.flags | set(flags))
+
+    # -- spec construction -------------------------------------------------
+    def spec(self, shape: tuple[int, ...],
+             axes: tuple[str | None, ...]) -> PartitionSpec:
+        """PartitionSpec for ``shape`` under the logical ``axes`` names.
+
+        Applies divisibility-or-replicate per dim and first-come-wins
+        de-duplication of mesh axes across dims.
+        """
+        used: set[str] = set()
+        entries = []
+        for dim, ax in zip(shape, axes):
+            if ax is None:
+                entries.append(None)
+                continue
+            mesh_axes = tuple(a for a in self.rules.get(ax, ())
+                              if a not in used)
+            chosen: tuple[str, ...] = ()
+            prod = 1
+            for a in mesh_axes:
+                size = int(self.mesh.shape[a])
+                if dim % (prod * size) != 0:
+                    break
+                prod *= size
+                chosen += (a,)
+            if not chosen:
+                entries.append(None)
+            elif len(chosen) == 1:
+                entries.append(chosen[0])
+            else:
+                entries.append(chosen)
+            used.update(chosen)
+        return PartitionSpec(*entries)
+
+    def sharding(self, shape: tuple[int, ...],
+                 axes: tuple[str | None, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constrain(self, x: jax.Array,
+                  axes: tuple[str | None, ...]) -> jax.Array:
+        """with_sharding_constraint under this mesh (jit-traceable)."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, axes)))
+
+    def __repr__(self) -> str:
+        return (f"ShardingRules(mesh={dict(self.mesh.shape)}, "
+                f"rules={self.rules}, flags={sorted(self.flags)})")

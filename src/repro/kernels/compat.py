@@ -1,0 +1,12 @@
+"""jax/Pallas version compatibility.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+environment ships so the kernels import everywhere.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")

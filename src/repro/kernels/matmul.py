@@ -19,6 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref
+from repro.kernels.compat import CompilerParams
 from repro.kernels.schedule import KernelSchedule, default_schedule
 
 
@@ -116,7 +117,7 @@ def matmul(x: jax.Array, w: jax.Array, *, epilogue: str = "none",
         out_specs=pl.BlockSpec((bm, bn), idx("m", "n")),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=sem),
+        compiler_params=CompilerParams(dimension_semantics=sem),
         interpret=interpret,
     )(x, w, bias)
     return out

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
 from repro.kernels.schedule import KernelSchedule, default_schedule
 
 
@@ -42,7 +43,7 @@ def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
                   pl.BlockSpec((D,), lambda i: (0,))],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xf, scale)

@@ -94,3 +94,51 @@ class Engine:
             if pos >= self.max_len:
                 break
         return outs
+
+
+class KernelService:
+    """Kernel-optimization-as-a-service on top of ``core.engine``.
+
+    A long-lived server process keeps ONE transposition store: repeated
+    or similar optimization requests (the common case in production —
+    many users submitting the same hot kernels) hit cached rewrites,
+    cost pricing and oracle checks instead of redoing the search
+    substrate.  Same cache the batched benchmark evaluator uses.
+    """
+
+    def __init__(self, policy=None, *, mode: str = "greedy_cost",
+                 max_steps: int = 8, workers: int = 0, store=None,
+                 max_programs: int = 200_000):
+        from repro.core.engine import EvalEngine, TranspositionStore
+        self.store = store if store is not None else TranspositionStore()
+        self._engine = EvalEngine(policy, store=self.store, mode=mode,
+                                  max_steps=max_steps, workers=workers)
+        # capacity bound: the store never invalidates for correctness
+        # (all entries are pure functions of their keys) but a server
+        # fed a stream of DISTINCT kernels grows without bound — drop
+        # and recreate wholesale past the cap
+        self.max_programs = max_programs
+        self.n_requests = 0
+        self.n_store_resets = 0
+
+    def _maybe_evict(self) -> None:
+        if len(self.store.programs) > self.max_programs:
+            from repro.core.engine import TranspositionStore
+            self.store = TranspositionStore()
+            self._engine.store = self.store
+            self.n_store_resets += 1
+
+    def optimize(self, task, seed: int | None = None):
+        """One request -> OptimizationResult (cached substrate)."""
+        self.n_requests += 1
+        self._maybe_evict()
+        return self._engine.optimize(task, seed)
+
+    def optimize_batch(self, tasks) -> dict:
+        self.n_requests += len(tasks)
+        self._maybe_evict()
+        return self._engine.evaluate_suite(tasks)
+
+    def stats(self) -> dict:
+        return dict(self.store.stats_dict(), requests=self.n_requests,
+                    store_resets=self.n_store_resets)

@@ -1,0 +1,88 @@
+"""Hypothesis compatibility layer for this test suite.
+
+The real ``hypothesis`` package is used when installed.  When it is not
+(this container does not ship it and the repo pins no test extras), a
+minimal deterministic fallback provides the tiny subset the suite uses:
+``@settings(max_examples=..., deadline=...)``, ``@given(name=strategy)``,
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+
+The fallback draws a fixed, seeded sample (boundary values first, then
+uniform draws), so tests are reproducible property *spot checks* rather
+than shrinking searches — good enough to keep the invariants exercised
+in environments without hypothesis.
+"""
+from __future__ import annotations
+
+try:                                        # pragma: no cover
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sampler, edges=()):
+            self.sampler = sampler
+            self.edges = list(edges)
+
+        def draws(self, n, rng):
+            out = list(self.edges[:n])
+            while len(out) < n:
+                out.append(self.sampler(rng))
+            return out
+
+    class strategies:                       # noqa: N801 (mimic module)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                edges=[min_value, max_value])
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(len(items)))],
+                edges=items[:2])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            span = max_value - min_value
+            return _Strategy(
+                lambda rng: float(min_value + span * rng.random()),
+                edges=[min_value, max_value])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)),
+                             edges=[False, True])
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = np.random.default_rng(0)
+                draws = {k: s.draws(n, rng) for k, s in strats.items()}
+                for i in range(n):
+                    fn(*args, **{k: v[i] for k, v in draws.items()},
+                       **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            # (the real hypothesis does the same)
+            wrapper.__dict__.pop("__wrapped__", None)
+            params = [p for p in
+                      inspect.signature(fn).parameters.values()
+                      if p.name not in strats]
+            wrapper.__signature__ = inspect.Signature(params)
+            return wrapper
+        return deco

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import (Action, EnvConfig, KernelEnv, MacroPolicy,
                         OfflineEnv, OfflineTree, PolicyConfig,

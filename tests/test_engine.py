@@ -1,0 +1,249 @@
+"""Batched/cached evaluation engine: golden regression vs the serial
+path, cache effectiveness, live/offline environment parity, service."""
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (Action, EvalEngine, KernelEnv, MTMCPipeline,
+                        OfflineEnv, StructuredMicroCoder,
+                        TranspositionStore, evaluate_suite)
+from repro.core import tasks as T
+from repro.core.env import action_key
+from repro.core.trajectories import CollectConfig, collect
+
+
+# ---------------------------------------------------------------------------
+# golden-metrics regression: serial evaluate_suite == batched engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,steps", [("random", 6), ("single_pass", 4),
+                                        ("greedy_cost", 4)])
+def test_golden_metrics_serial_vs_engine(mode, steps):
+    """Bit-identical accuracy/fast1/fast2/mean_speedup on the full
+    training suite, fixed seeds, threaded engine vs serial reference."""
+    tasks = T.train_tasks()
+    serial = evaluate_suite(
+        tasks, MTMCPipeline(mode=mode, max_steps=steps, seed=3))
+    eng = EvalEngine(mode=mode, max_steps=steps, seed=3, workers=2)
+    batched = eng.evaluate_suite(tasks)
+    for k in ("n", "accuracy", "fast1", "fast2", "mean_speedup"):
+        assert serial[k] == batched[k], (mode, k)
+    for a, b in zip(serial["results"], batched["results"]):
+        assert a.task == b.task
+        assert a.correct == b.correct
+        assert a.speedup == b.speedup
+        assert a.steps == b.steps
+        assert a.n_failures == b.n_failures
+        assert a.trace == b.trace
+        assert a.program.fingerprint() == b.program.fingerprint()
+
+
+def test_second_suite_run_is_fully_cached():
+    """Re-running the same suite performs ZERO fresh micro-coder
+    rewrites, zero cost-model evaluations and zero oracle executions."""
+    tasks = T.train_tasks()
+    eng = EvalEngine(mode="greedy_cost", max_steps=3, seed=0)
+    first = eng.evaluate_suite(tasks)
+    before = dict(eng.store.stats)
+    second = eng.evaluate_suite(tasks)
+    after = eng.store.stats
+    assert after["fresh_applies"] == before["fresh_applies"]
+    assert after["cost_evals"] == before["cost_evals"]
+    assert after["oracle_runs"] == before["oracle_runs"]
+    assert after["check_evals"] == before["check_evals"]
+    assert after["apply_hits"] > before["apply_hits"]
+    assert first["mean_speedup"] == second["mean_speedup"]
+    assert first["accuracy"] == second["accuracy"]
+
+
+def test_structural_check_skips_oracle_for_schedule_only_rewrites():
+    """Tiling/pipeline/reorder never change the op graph, so validation
+    must be structural (no oracle execution); fusion must execute."""
+    store = TranspositionStore()
+    task = T.kb_level1()[0]                     # single matmul
+    mc = StructuredMicroCoder()
+    tiled = mc.apply(task, Action("tiling", "y",
+                                  (("bm", 256), ("bn", 128),
+                                   ("bk", 128)))).program
+    assert store.check(task, tiled)
+    assert store.stats["oracle_runs"] == 0
+    assert store.stats["check_structural"] == 1
+    # plain fusion only regroups kernels (nodes unchanged) -> still
+    # structural; the flash rewrite REPLACES the op triple -> oracle
+    fused_task = T.kb_level2()[0]               # gemm+bias+relu
+    fused = mc.apply(fused_task,
+                     Action("fusion", "y0", ("y1",))).program
+    assert store.check(fused_task, fused)
+    assert store.stats["oracle_runs"] == 0
+    assert store.stats["check_structural"] == 2
+    attn = T._attn_program("chk_attn", 1, 256, 4, 64)
+    r = mc.apply(attn, Action("fusion", "scores", ("probs",)))
+    flash = mc.apply(r.program, Action("fusion", "scores", ("out",)))
+    assert [n.op for n in flash.program.nodes] == ["attention"]
+    assert store.check(attn, flash.program)
+    assert store.stats["oracle_runs"] == 2      # task + flash program
+
+
+def test_store_reconstructs_history_on_hits():
+    """A cache hit must return the child the live coder would have
+    produced — including the history chained from the ACTUAL parent."""
+    store = TranspositionStore()
+    mc = StructuredMicroCoder()
+    task = T.kb_level2()[0]
+    a1 = Action("pipeline", "y0", (3,))
+    a2 = Action("tiling", "y0", (("bm", 256), ("bn", 128), ("bk", 256)))
+    # path A: a1 then a2 (both fresh)
+    p1 = store.apply(mc, task, a1).program
+    pa = store.apply(mc, p1, a2).program
+    # path B: a2 directly from the root — (root, a2) is FRESH, then a1
+    # from there; now replay path A, all hits
+    q1 = store.apply(mc, task, a2).program
+    qa = store.apply(mc, q1, a1).program
+    r1 = store.apply(mc, task, a1).program          # hit
+    ra = store.apply(mc, r1, a2).program            # hit
+    assert r1.history == p1.history
+    assert ra.history == pa.history
+    assert ra.fingerprint() == pa.fingerprint() == qa.fingerprint()
+    assert qa.history != pa.history                 # different route
+
+
+def test_store_hit_preserves_caller_identity():
+    """Two structurally identical tasks share a fingerprint; a cache hit
+    must still return a child carrying the CALLER's task name."""
+    store = TranspositionStore()
+    mc = StructuredMicroCoder()
+    t1 = T.kb_level1()[0]
+    t2 = t1.replace(name="same_graph_other_task")
+    a = Action("pipeline", "y", (3,))
+    c1 = store.apply(mc, t1, a).program       # fresh
+    c2 = store.apply(mc, t2, a).program       # hit (same fingerprint)
+    assert c1.name == t1.name
+    assert c2.name == "same_graph_other_task"
+    assert c1.fingerprint() == c2.fingerprint()
+
+
+def test_kernel_service_store_cap_resets():
+    from repro.serve.engine import KernelService
+    svc = KernelService(mode="greedy_cost", max_steps=2, max_programs=5)
+    first = svc.optimize(T.kb_level1()[0])          # interns > 5 programs
+    assert len(svc.store.programs) > 5
+    svc.optimize(T.kb_level1()[1])                  # triggers the reset
+    assert svc.stats()["store_resets"] >= 1
+    assert first.correct
+
+
+def test_max_steps_zero_returns_baseline():
+    """Regression: ``t`` was unbound when max_steps == 0."""
+    task = T.kb_level1()[0]
+    res = MTMCPipeline(mode="random", max_steps=0, seed=0).optimize(task)
+    assert res.steps == 0 and res.speedup == 1.0 and res.correct
+    assert res.trace == ()
+
+
+def test_result_reports_best_program_history():
+    """steps/trace describe the returned (best) program, not the last
+    state the episode wandered to."""
+    task = T._attn_program("attn", 1, 256, 4, 64)
+    res = MTMCPipeline(mode="greedy_cost", max_steps=8, seed=0
+                       ).optimize(task)
+    assert res.trace == res.program.history
+    assert res.steps >= len([h for h in res.trace])  # failures add steps
+    assert res.steps <= 8
+
+
+# ---------------------------------------------------------------------------
+# live/offline environment parity (property)
+# ---------------------------------------------------------------------------
+
+def _walk(tree, seed, max_len=5):
+    """Seeded random walk over materialized ok-edges, ending with stop;
+    throws in one materialized FAILING action when available to cover
+    the penalty branches."""
+    rng = np.random.default_rng(seed)
+    fp, acts = tree.root, []
+    for _ in range(max_len):
+        edges = tree.materialized_actions(fp)
+        bad = [a for a, s in edges if s != "ok"]
+        ok = [a for a, s in edges if s == "ok" and a.kind != "stop"]
+        if bad and rng.random() < 0.3:
+            acts.append(bad[int(rng.integers(len(bad)))])   # stays put
+            continue
+        if not ok:
+            break
+        a = ok[int(rng.integers(len(ok)))]
+        acts.append(a)
+        fp = tree.nodes[fp].children[action_key(a)][0]
+    acts.append(Action("stop", ""))
+    return acts
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), ti=st.integers(0, 2))
+def test_live_offline_parity(seed, ti):
+    """Replaying one action sequence through the live KernelEnv and the
+    OfflineEnv (same OfflineTree) yields identical rewards, statuses and
+    fingerprints at every step — including the stop-bonus and the
+    step-proportional decay paths."""
+    task = [T.kb_level2()[0], T.kb_level2()[1],
+            T._attn_program("parity_attn", 1, 256, 4, 64)][ti]
+    tree = collect(task, CollectConfig(episodes_random=3,
+                                       episodes_greedy=1,
+                                       seed=seed % 997))
+    acts = _walk(tree, seed)
+    live = KernelEnv(task)
+    off = OfflineEnv(tree)
+    live.reset()
+    off.reset()
+    for a in acts:
+        rl = live.step(a)
+        ro = off.step(a)
+        assert rl.info["status"] == ro.info["status"], a
+        np.testing.assert_allclose(rl.reward, ro.reward, rtol=1e-9)
+        assert live.state.fingerprint() == \
+            off.program().fingerprint(), a
+        if "speedup" in rl.info:
+            np.testing.assert_allclose(rl.info["speedup"],
+                                       ro.info["speedup"], rtol=1e-9)
+        if rl.done or a.kind == "stop":
+            break
+    assert live.t == off.t
+
+
+def test_live_env_through_store_matches_plain():
+    """KernelEnv with a shared store is behaviourally identical to the
+    uncached env (rewards, states), even when the store is pre-warmed
+    by a different traversal order."""
+    task = T.kb_level2()[3]                     # swiglu chain
+    store = TranspositionStore()
+    warm = KernelEnv(task, store=store)
+    warm.reset()
+    for a in (Action("fusion", "g", ("gs",)), Action("pipeline", "y", (3,))):
+        warm.step(a)
+    seq = (Action("pipeline", "y", (3,)), Action("fusion", "g", ("gs",)),
+           Action("tiling", "nope", (("bm", 8),)), Action("stop", ""))
+    plain, cached = KernelEnv(task), KernelEnv(task, store=store)
+    plain.reset()
+    cached.reset()
+    for a in seq:
+        rp, rc = plain.step(a), cached.step(a)
+        assert rp.info["status"] == rc.info["status"]
+        np.testing.assert_allclose(rp.reward, rc.reward, rtol=1e-12)
+        assert plain.state.fingerprint() == cached.state.fingerprint()
+        assert plain.state.history == cached.state.history
+
+
+# ---------------------------------------------------------------------------
+# serving reuse
+# ---------------------------------------------------------------------------
+
+def test_kernel_service_reuses_cache_across_requests():
+    from repro.serve.engine import KernelService
+    svc = KernelService(mode="greedy_cost", max_steps=3)
+    task = T.kb_level2()[0]
+    r1 = svc.optimize(task)
+    fresh = svc.stats()["fresh_applies"]
+    r2 = svc.optimize(task)
+    assert svc.stats()["fresh_applies"] == fresh   # 2nd request: all hits
+    assert r1.speedup == r2.speedup and r1.correct == r2.correct
+    assert svc.stats()["requests"] == 2

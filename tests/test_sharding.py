@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import normalize_for_mesh
@@ -80,3 +80,108 @@ def test_fsdp_rules_shard_embed():
     r1 = r0.with_fsdp()
     assert r0.rules["embed"] == ()
     assert r1.rules["embed"] == ("data",)
+
+
+# ---------------------------------------------------------------------------
+# divisibility-or-replicate on a WIDE (faked) mesh — the local box has a
+# single device, so spec() policy is exercised against a stub mesh that
+# only exposes what ShardingRules reads: .shape and .axis_names
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_nondivisible_dim_replicates_wide_mesh():
+    rules = ShardingRules(_FakeMesh({"data": 2, "model": 4}))
+    # 6 heads cannot split 4 ways -> the dim must fully replicate
+    spec = rules.spec((6, 8), ("heads", "embed"))
+    assert spec[0] is None
+    # 8 heads can -> sharded over model
+    spec = rules.spec((8, 8), ("heads", "embed"))
+    assert spec[0] == "model"
+
+
+def test_divisible_prefix_only_wide_mesh():
+    # kv_seq maps to (data, model): 4 divides data(2) but not 2*4 -> the
+    # longest dividing PREFIX shards, the rest replicates
+    rules = ShardingRules(_FakeMesh({"data": 2, "model": 4})).replace(
+        kv_seq=("data", "model"))
+    spec = rules.spec((4, 16), ("kv_seq", None))
+    assert spec[0] == "data"
+    spec = rules.spec((16, 16), ("kv_seq", None))
+    assert spec[0] == ("data", "model")
+
+
+def test_batch_rule_spans_pod_and_data():
+    rules = ShardingRules(_FakeMesh({"pod": 2, "data": 16, "model": 16}))
+    assert rules.dp == 32 and rules.tp == 16
+    spec = rules.spec((256, 4096), ("batch", None))
+    assert spec[0] == ("pod", "data")
+
+
+def test_gqa_grouping_exact_after_normalize():
+    """Padded q-heads stay an exact multiple of kv-heads (grouping
+    correctness), and the padded heads shard where the true ones would
+    replicate."""
+    for tp in (4, 8, 16):
+        rules = ShardingRules(_FakeMesh({"data": 2, "model": tp}))
+        for arch in ARCH_IDS:
+            cfg = normalize_for_mesh(get_config(arch), rules.tp)
+            if cfg.n_kv_heads and cfg.n_kv_heads < cfg.n_heads:
+                assert cfg.n_heads % cfg.n_kv_heads == 0, (arch, tp)
+            if cfg.n_heads % tp == 0:
+                spec = rules.spec((cfg.n_heads, cfg.head_dim),
+                                  ("heads", None))
+                assert spec[0] == "model", (arch, tp)
+
+
+def test_dryrun_smoke_on_forced_8device_mesh():
+    """dryrun's rules_for + param/batch shardings materialize on a real
+    8-virtual-device host mesh (subprocess: device count must be forced
+    before jax backend init)."""
+    import json
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+jax.devices()          # lock the 8-device backend BEFORE importing dryrun
+from repro.configs.base import ShapeConfig, normalize_for_mesh
+from repro.configs.registry import get_config, reduced
+from repro.launch.dryrun import rules_for
+from repro.models import api
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+out = {}
+for kind in ("train", "decode"):
+    rules = rules_for(mesh, kind)
+    cfg = normalize_for_mesh(reduced(get_config("qwen2_5_3b")), rules.tp)
+    sh = jax.tree.leaves(api.param_shardings(cfg, rules))
+    out[kind] = {"n": len(sh), "tp": rules.tp, "dp": rules.dp,
+                 "named": all(type(s).__name__ == "NamedSharding"
+                              for s in sh)}
+cache_sh = jax.tree.leaves(api.cache_pspecs(cfg, 8, 64,
+                           rules_for(mesh, "decode")))
+out["cache_specs"] = len(cache_sh)
+out["n_devices"] = len(jax.devices())
+print("RESULT:" + json.dumps(out))
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("RESULT:"))
+    out = json.loads(line[len("RESULT:"):])
+    assert out["n_devices"] == 8
+    for kind in ("train", "decode"):
+        assert out[kind]["tp"] == 4 and out[kind]["dp"] == 2
+        assert out[kind]["n"] > 0 and out[kind]["named"]
+    assert out["cache_specs"] > 0
