@@ -1,0 +1,6 @@
+"""Benchmark harness package (one module per paper table).
+
+A real package (not a path-hack namespace): modules import each other
+relatively, so ``python -m benchmarks.run`` works from any directory
+with the repo root and ``src/`` on PYTHONPATH.
+"""

@@ -1,0 +1,61 @@
+"""CI accuracy gate: fail if any suite's execute-accuracy regressed.
+
+Compares a freshly produced ``benchmarks.csv`` against the committed
+baseline: for every row name present in BOTH files whose ``derived``
+column carries an ``acc=`` field, the new accuracy must be >= the
+baseline's (within a 1e-9 float-print slack).  Modeled speedups are
+deliberately NOT gated — they move whenever the cost model or search
+deepens; execute accuracy is the correctness contract.
+
+  python -m benchmarks.check_regression <baseline.csv> <new.csv>
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+_ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
+
+
+def parse_accuracies(path: str) -> dict[str, float]:
+    out: dict[str, float] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("name,", "#")):
+                continue
+            parts = line.split(",", 2)
+            if len(parts) < 3:
+                continue
+            m = _ACC.search(parts[2])
+            if m:
+                out[parts[0]] = float(m.group(1))
+    return out
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    base = parse_accuracies(argv[1])
+    new = parse_accuracies(argv[2])
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        print(f"error: no comparable rows between {argv[1]} ({len(base)} "
+              f"acc rows) and {argv[2]} ({len(new)} acc rows)")
+        return 2
+    drops = [(n, base[n], new[n]) for n in shared
+             if new[n] < base[n] - 1e-9]
+    print(f"compared execute-accuracy on {len(shared)} rows "
+          f"({len(base) - len(shared)} baseline-only, "
+          f"{len(new) - len(shared)} new-only)")
+    for name, b, n in drops:
+        print(f"REGRESSION {name}: acc {b:.3f} -> {n:.3f}")
+    if drops:
+        return 1
+    print("no execute-accuracy regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

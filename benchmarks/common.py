@@ -8,10 +8,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (CollectConfig, EnvConfig, EvalEngine,
-                        MTMCPipeline, MacroPolicy, PPOConfig, PPOTrainer,
-                        PolicyConfig, TranspositionStore, collect_suite,
-                        evaluate_suite)
+from repro.core import (CollectConfig, EvalEngine, MacroPolicy,
+                        PPOConfig, PPOTrainer, PolicyConfig,
+                        TranspositionStore, collect_suite)
 from repro.core import tasks as T
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -75,15 +74,18 @@ def eval_mode(suite, mode: str, policy=None, curated: bool = True,
     return out
 
 
-def fmt_row(table: str, name: str, metrics: dict) -> str:
-    """CSV: name,us_per_call,derived (spec format)."""
-    times = [1e6 * _prog_time(r.program) for r in metrics["results"]]
+def fmt_row(table: str, name: str, metrics: dict,
+            target=None) -> str:
+    """CSV: name,us_per_call,derived (spec format); ``target`` selects
+    which chip the modeled times are priced against."""
+    times = [1e6 * _prog_time(r.program, target)
+             for r in metrics["results"]]
     return (f"{table}/{name},{np.mean(times):.1f},"
             f"acc={metrics['accuracy']:.2f};"
             f"fast1={metrics['fast1']:.2f};fast2={metrics['fast2']:.2f};"
             f"speedup={metrics['mean_speedup']:.2f}")
 
 
-def _prog_time(prog) -> float:
+def _prog_time(prog, target=None) -> float:
     from repro.core import program_cost
-    return program_cost(prog).total_s
+    return program_cost(prog, target).total_s

@@ -1,28 +1,28 @@
 """Benchmark harness — one function per paper table.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modeled kernel times come
-from the v5e roofline cost model (this container has no TPU); accuracy is
-real (every optimized program is executed and checked against the task
-oracle on CPU).
+from the roofline cost model for the selected hardware target (this
+container has no TPU); accuracy is real (every optimized program is
+executed and checked against the task oracle on CPU).
 
-  python -m benchmarks.run [--tables 3,4,5,6,7] [--retrain] [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--tables 3,4,5,6,7,8]
+                                          [--retrain] [--fast]
+
+Run from the repo root (or put the repo root on PYTHONPATH): the
+package uses relative imports and never mutates sys.path.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from benchmarks.common import RESULTS, cached_policy  # noqa: E402
+from .common import RESULTS, cached_policy
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="3,4,5,6,7")
+    ap.add_argument("--tables", default="3,4,5,6,7,8")
     ap.add_argument("--retrain", action="store_true")
     ap.add_argument("--fast", action="store_true",
                     help="fewer PPO iters (CI smoke)")
@@ -32,7 +32,7 @@ def main() -> None:
     args = ap.parse_args()
     tables = set(args.tables.split(","))
     if args.workers is not None:
-        import benchmarks.common as common
+        from . import common
         common.WORKERS = args.workers
 
     kw = dict(iters=4, episodes=4) if args.fast else {}
@@ -46,20 +46,23 @@ def main() -> None:
         rows.extend(new_rows)
 
     if "3" in tables:
-        from benchmarks import table3_kernelbench
+        from . import table3_kernelbench
         emit(table3_kernelbench.run(policy))
     if "4" in tables:
-        from benchmarks import table4_tritonbench
+        from . import table4_tritonbench
         emit(table4_tritonbench.run(policy))
     if "5" in tables:
-        from benchmarks import table5_target
+        from . import table5_target
         emit(table5_target.run(policy))
     if "6" in tables:
-        from benchmarks import table6_hier
+        from . import table6_hier
         emit(table6_hier.run(policy))
     if "7" in tables:
-        from benchmarks import table7_policy
+        from . import table7_policy
         emit(table7_policy.run(policy))
+    if "8" in tables:
+        from . import table8_targets
+        emit(table8_targets.run(policy))
 
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "benchmarks.csv"), "w") as f:
@@ -68,7 +71,7 @@ def main() -> None:
         with open(os.path.join(RESULTS, "policy_training.json"),
                   "w") as f:
             json.dump(policy.train_log, f, indent=1)
-    from benchmarks.common import STORE
+    from .common import STORE
     print("# engine store:", json.dumps(STORE.stats_dict()))
 
 

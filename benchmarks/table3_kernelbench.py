@@ -3,7 +3,7 @@ level, MTMC (trained policy) vs baselines (untrained-LM proxy for
 general-purpose LLMs, random policy)."""
 from __future__ import annotations
 
-from benchmarks.common import eval_mode, fmt_row
+from .common import eval_mode, fmt_row
 from repro.core import tasks as T
 
 

@@ -2,7 +2,7 @@
 call+execute accuracy and speedups, MTMC vs baselines."""
 from __future__ import annotations
 
-from benchmarks.common import eval_mode, fmt_row
+from .common import eval_mode, fmt_row
 from repro.core import MacroPolicy
 from repro.core import tasks as T
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import STORE
+from .common import STORE
 from repro.core import MTMCPipeline, program_cost
 from repro.core import tasks as T
 

@@ -2,7 +2,7 @@
 feeding the whole optimization plan at once degrades accuracy/speedup."""
 from __future__ import annotations
 
-from benchmarks.common import eval_mode, fmt_row
+from .common import eval_mode, fmt_row
 from repro.core import tasks as T
 
 

@@ -5,8 +5,8 @@
 on a 10%-style subset of the benchmark tasks (paper's protocol)."""
 from __future__ import annotations
 
-from benchmarks.common import eval_mode, fmt_row
-from repro.core import MacroPolicy, PolicyConfig
+from .common import eval_mode, fmt_row
+from repro.core import MacroPolicy
 from repro.core import tasks as T
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal, Sequence
+from typing import Literal
 
 Family = Literal["dense", "moe", "rwkv", "hybrid", "encdec", "vlm"]
 

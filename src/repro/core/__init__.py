@@ -10,6 +10,11 @@ from repro.core.cost_model import program_cost, speedup   # noqa: F401
 from repro.core.engine import (EngineConfig, EvalEngine,  # noqa: F401
                                TranspositionStore)
 from repro.core.env import EnvConfig, KernelEnv, OfflineEnv, OfflineTree  # noqa: F401
+from repro.core.hardware import (HardwareTarget, get_target,  # noqa: F401
+                                 register_target, registered_targets)
+from repro.core.search import (AnnealedSearch, BeamSearch,  # noqa: F401
+                               GreedySearch, SearchStrategy,
+                               get_strategy)
 from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec  # noqa: F401
 from repro.core.micro_coding import StructuredMicroCoder  # noqa: F401
 from repro.core.pipeline import MTMCPipeline, evaluate_suite, suite_metrics  # noqa: F401

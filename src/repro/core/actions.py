@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
-from repro.core.kernel_ir import ELEMENTWISE, KernelProgram
+from repro.core.kernel_ir import KernelProgram
 
 TILE_PRESETS = {
     "matmul": [{"bm": m, "bn": n, "bk": k}

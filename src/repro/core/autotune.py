@@ -9,8 +9,6 @@ a first-class framework feature rather than a side tool.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import tasks as T
 from repro.core.pipeline import MTMCPipeline
@@ -64,19 +62,35 @@ def model_kernel_tasks(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
-                       pipeline: MTMCPipeline | None = None) -> dict:
-    """Runs MTMC per hot kernel; installs schedules; returns report."""
+                       pipeline: MTMCPipeline | None = None,
+                       target=None, strategy: str | None = None) -> dict:
+    """Runs MTMC per hot kernel; installs schedules; returns report.
+
+    ``target`` selects the hardware target the schedules are tuned
+    against AND the registry slot they are installed under
+    (``ops.set_schedule(..., target=...)``) — tuning for several chips
+    fills independent slots and ``ops.set_active_target`` picks at
+    serve time.  ``strategy`` optionally swaps the default greedy
+    descent for a search strategy ("beam", "anneal").
+    """
+    if pipeline is not None and (target is not None
+                                 or strategy is not None):
+        raise ValueError("pass either an explicit pipeline or "
+                         "target/strategy overrides, not both (the "
+                         "pipeline already fixes its own)")
     pipeline = pipeline or MTMCPipeline(mode="greedy_cost",
-                                        validate=False, max_steps=6)
+                                        validate=False, max_steps=6,
+                                        target=target, strategy=strategy)
     report = {}
     for kname, (task, kernel, key) in model_kernel_tasks(cfg,
                                                          shape).items():
         res = pipeline.optimize(task)
         sched = _extract_schedule(res.program, kernel)
         if sched is not None:
-            ops.set_schedule(kernel, key, sched)
+            ops.set_schedule(kernel, key, sched, target=pipeline.target)
         report[kname] = {"speedup": res.speedup, "correct": res.correct,
-                         "schedule": sched, "trace": res.trace}
+                         "schedule": sched, "trace": res.trace,
+                         "target": pipeline.target.name}
     return report
 
 

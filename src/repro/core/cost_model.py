@@ -1,4 +1,4 @@
-"""Analytic TPU-v5e roofline cost model (tier-3 reward source).
+"""Analytic roofline cost model (tier-3 reward source), multi-target.
 
 Prices a ``KernelProgram`` the way the dry-run roofline prices a whole
 training step: per fused kernel, time = max(compute, HBM) under the
@@ -11,9 +11,14 @@ All four semantic actions have first-order effects here:
   Pipeline   — depth 1: compute + memory serialize; depth>=2: overlap;
   Reordering — K-not-innermost matmul pays an output-revisit HBM term.
 
-Constants match the §Roofline analysis: 197 TFLOP/s bf16, 819 GB/s HBM.
-The model is deterministic — the RL reward is hardware-grounded without a
-GPU/TPU attached (DESIGN.md §2, deviation 2).
+Hardware constants come from a ``HardwareTarget`` (``core/hardware.py``):
+peak matmul/vector FLOP/s, HBM bandwidth, tile-alignment geometry and
+launch overhead, so any program can be priced against any registered
+chip.  The default target is tpu_v5e with the §Roofline constants
+(197 TFLOP/s bf16, 819 GB/s HBM) — default prices are bit-identical to
+the original single-target model.  The model is deterministic — the RL
+reward is hardware-grounded without a GPU/TPU attached (DESIGN.md §2,
+deviation 2).
 """
 from __future__ import annotations
 
@@ -21,13 +26,16 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import actions as A
-from repro.core.kernel_ir import ELEMENTWISE, KernelProgram, TensorSpec
+from repro.core import hardware
+from repro.core.hardware import HardwareTarget
+from repro.core.kernel_ir import KernelProgram, TensorSpec
 
-PEAK_FLOPS = 197e12          # bf16 MXU
-VPU_FLOPS = 4e12             # vector unit (elementwise/softmax/exp)
-HBM_BW = 819e9               # bytes/s
-LAUNCH_S = 1.5e-6            # per-kernel dispatch overhead
+# default-target (tpu_v5e) constants, kept as module aliases for code
+# and docs that refer to the single-target model
+PEAK_FLOPS = hardware.resolve(None).matmul_flops("bf16")
+VPU_FLOPS = hardware.resolve(None).vector_flops
+HBM_BW = hardware.resolve(None).hbm_bw
+LAUNCH_S = hardware.resolve(None).launch_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +54,7 @@ class GroupCost:
 class ProgramCost:
     total_s: float
     groups: tuple[GroupCost, ...]
+    target: str = hardware.DEFAULT_TARGET
 
     @property
     def bottleneck(self) -> str:
@@ -53,19 +62,10 @@ class ProgramCost:
         return f"{worst.root}:{worst.bottleneck}"
 
 
-def _mxu_efficiency(tiles: dict[str, int]) -> float:
-    if not tiles:
-        return 0.45
-    vals = list(tiles.values())
-    if all(v % 128 == 0 for v in vals):
-        return 0.85
-    if all(v % 8 == 0 for v in vals):
-        return 0.45
-    return 0.15
-
-
 def group_cost(prog: KernelProgram, group: tuple[str, ...],
-               shapes: dict[str, TensorSpec]) -> GroupCost:
+               shapes: dict[str, TensorSpec],
+               target: HardwareTarget | str | None = None) -> GroupCost:
+    tgt = hardware.resolve(target)
     nm = prog.node_map
     sched = prog.schedule_for(group)
     tiles = sched.blocks_dict
@@ -169,14 +169,16 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
     for name in consumers:
         hbm_out += shapes[name].bytes
 
-    eff = _mxu_efficiency(tiles) if mxu else 1.0
-    compute_s = mxu / (PEAK_FLOPS * eff) + vpu / VPU_FLOPS
-    memory_s = (hbm_in + hbm_out + reorder_penalty) / HBM_BW
+    eff = tgt.mxu_efficiency(tiles) if mxu else 1.0
+    dtype = prog.inputs[0][1].dtype if prog.inputs else "bf16"
+    compute_s = mxu / (tgt.matmul_flops(dtype) * eff) \
+        + vpu / tgt.vector_flops
+    memory_s = (hbm_in + hbm_out + reorder_penalty) / tgt.hbm_bw
     if sched.pipeline_depth >= 2:
         time_s = max(compute_s, memory_s)
     else:
         time_s = compute_s + memory_s
-    time_s += LAUNCH_S
+    time_s += tgt.launch_s
     return GroupCost(prog.group_root(group), mxu, vpu,
                      hbm_in + hbm_out + reorder_penalty, compute_s,
                      memory_s, time_s,
@@ -197,7 +199,6 @@ def _plain_input_bytes(n, internal, shapes, in_specs):
     return total
 
 
-
 def _external_consumers(prog: KernelProgram, group: tuple[str, ...]):
     internal = set(group)
     used_outside = set()
@@ -213,13 +214,17 @@ def _external_consumers(prog: KernelProgram, group: tuple[str, ...]):
     return used_outside
 
 
-def program_cost(prog: KernelProgram) -> ProgramCost:
+def program_cost(prog: KernelProgram,
+                 target: HardwareTarget | str | None = None
+                 ) -> ProgramCost:
+    tgt = hardware.resolve(target)
     shapes = prog.shapes()
-    groups = tuple(group_cost(prog, g, shapes)
+    groups = tuple(group_cost(prog, g, shapes, tgt)
                    for g in prog.fusion_groups)
-    return ProgramCost(sum(g.time_s for g in groups), groups)
+    return ProgramCost(sum(g.time_s for g in groups), groups, tgt.name)
 
 
-def speedup(baseline: KernelProgram, optimized: KernelProgram) -> float:
-    return program_cost(baseline).total_s / \
-        max(program_cost(optimized).total_s, 1e-12)
+def speedup(baseline: KernelProgram, optimized: KernelProgram,
+            target: HardwareTarget | str | None = None) -> float:
+    return program_cost(baseline, target).total_s / \
+        max(program_cost(optimized, target).total_s, 1e-12)

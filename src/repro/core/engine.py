@@ -17,7 +17,11 @@ time.  Two pieces fix that here:
         parent's history + the action description) and a visited
         (state, action) edge is never re-rewritten — not by greedy_cost
         candidate scoring, not by env.step, not by tree expansion.
-      * costs — fingerprint -> ``program_cost(...).total_s``.
+      * costs — ``(fingerprint, target.name)`` ->
+        ``program_cost(..., target).total_s``: one store prices the same
+        program against many ``HardwareTarget``s without invalidation
+        (transitions and oracle entries are target-independent — only
+        the cost memo is per-target; DESIGN.md §9).
       * oracle outputs / checks — ``evaluate`` is a pure function of
         (inputs, nodes, outputs) only (the ``eval_fingerprint``), so
         schedule-only rewrites are proven correct structurally with NO
@@ -50,7 +54,7 @@ import threading
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model
+from repro.core import cost_model, hardware
 from repro.core.env import action_key
 from repro.core.kernel_ir import (KernelProgram, evaluate, evaluate_np,
                                   make_inputs_np)
@@ -71,7 +75,8 @@ class TranspositionStore:
     def __init__(self):
         self._lock = threading.RLock()
         self.programs: dict[str, KernelProgram] = {}
-        self.costs: dict[str, float] = {}
+        # (fp, target_name) -> program_cost(prog, target).total_s
+        self.costs: dict[tuple[str, str], float] = {}
         # (fp, action_key) -> (status, child_fp | None, detail)
         self.edges: dict[tuple[str, str], tuple[str, str | None, str]] = {}
         # (task_fp, prog_fp, seed) -> bool
@@ -95,32 +100,33 @@ class TranspositionStore:
     def fingerprint(self, prog: KernelProgram) -> str:
         return prog.fingerprint()    # memoized on the program itself
 
-    def intern(self, prog: KernelProgram) -> str:
+    def intern(self, prog: KernelProgram, target=None) -> str:
         """Register a program and price it; returns its fingerprint."""
         fp = self.fingerprint(prog)
         with self._lock:
             self.programs.setdefault(fp, prog)
-        self.cost(prog)
+        self.cost(prog, target)
         return fp
 
     def program(self, fp: str) -> KernelProgram:
         return self.programs[fp]
 
     # -- cost memo -----------------------------------------------------------
-    def cost(self, prog: KernelProgram) -> float:
-        fp = self.fingerprint(prog)
-        c = self.costs.get(fp)
+    def cost(self, prog: KernelProgram, target=None) -> float:
+        tgt = hardware.resolve(target)
+        key = (self.fingerprint(prog), tgt.name)
+        c = self.costs.get(key)
         if c is not None:
             self._bump("cost_hits")
             return c
         self._bump("cost_evals")
-        c = cost_model.program_cost(prog).total_s
+        c = cost_model.program_cost(prog, tgt).total_s
         with self._lock:
-            self.costs[fp] = c
+            self.costs[key] = c
         return c
 
-    def cost_of(self, fp: str) -> float:
-        return self.costs[fp]
+    def cost_of(self, fp: str, target=None) -> float:
+        return self.costs[(fp, hardware.resolve(target).name)]
 
     # -- transition memo -------------------------------------------------------
     def apply(self, coder: MicroCoder, prog: KernelProgram,
@@ -148,7 +154,15 @@ class TranspositionStore:
             return ApplyResult(status, child, detail)
         self._bump("fresh_applies")
         res = coder.apply(prog, action)
-        child_fp = self.intern(res.program) if res.status == "ok" else None
+        child_fp = None
+        if res.status == "ok":
+            # register WITHOUT pricing: the caller prices against its
+            # own target right after (memoized), so eager default-target
+            # pricing here would only duplicate cost-model work for
+            # non-default-target searches
+            child_fp = self.fingerprint(res.program)
+            with self._lock:
+                self.programs.setdefault(child_fp, res.program)
         with self._lock:
             self.edges[key] = (res.status, child_fp, res.detail)
         return res
@@ -237,6 +251,8 @@ class EngineConfig:
     validate: bool = True
     workers: int = 0       # <=1 serial; N>1 thread pool over tasks
     seed_stride: int = 0   # per-task seed = seed + stride * task_index
+    target: str | None = None     # hardware target name (None = default)
+    strategy: str | None = None   # search strategy name (None = mode loop)
 
 
 class EvalEngine:
@@ -256,15 +272,22 @@ class EvalEngine:
         self.cfg = cfg or EngineConfig(**kw)
         self.store = store if store is not None else TranspositionStore()
 
-    def pipeline(self, seed: int | None = None) -> MTMCPipeline:
+    def pipeline(self, seed: int | None = None,
+                 target=None) -> MTMCPipeline:
         c = self.cfg
         return MTMCPipeline(self.policy, mode=c.mode, curated=c.curated,
                             max_steps=c.max_steps,
                             seed=c.seed if seed is None else seed,
-                            validate=c.validate, store=self.store)
+                            validate=c.validate, store=self.store,
+                            target=c.target if target is None else target,
+                            strategy=c.strategy)
 
-    def optimize(self, task: KernelProgram, seed: int | None = None):
-        return self.pipeline(seed).optimize(task)
+    def optimize(self, task: KernelProgram, seed: int | None = None,
+                 target=None):
+        """Single-task entry; ``target`` overrides the engine's default
+        per request (the store shares transitions/oracle entries across
+        targets, so mixed-target request streams stay cached)."""
+        return self.pipeline(seed, target).optimize(task)
 
     def evaluate_suite(self, tasks: list[KernelProgram]) -> dict:
         """Same metrics dict as ``pipeline.evaluate_suite`` (Eqs. 3-4).

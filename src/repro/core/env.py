@@ -18,10 +18,9 @@ the PPO loop).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 from repro.core import actions as A
-from repro.core import cost_model
+from repro.core import cost_model, hardware
 from repro.core.kernel_ir import KernelProgram
 from repro.core.micro_coding import MicroCoder, StructuredMicroCoder
 
@@ -56,17 +55,20 @@ class KernelEnv:
     """
 
     def __init__(self, task: KernelProgram, coder: MicroCoder | None = None,
-                 cfg: EnvConfig = EnvConfig(), store=None):
+                 cfg: EnvConfig = EnvConfig(), store=None, target=None):
         self.task = task
         self.coder = coder or StructuredMicroCoder()
         self.cfg = cfg
         self.store = store
+        # the chip rewards are priced against (None = registry default);
+        # rewrite legality stays target-independent (DESIGN.md §9)
+        self.target = hardware.resolve(target)
         self.baseline_s = self._cost(task)
 
     def _cost(self, prog: KernelProgram) -> float:
         if self.store is not None:
-            return self.store.cost(prog)
-        return cost_model.program_cost(prog).total_s
+            return self.store.cost(prog, self.target)
+        return cost_model.program_cost(prog, self.target).total_s
 
     def _apply(self, action: A.Action):
         if self.store is not None:
@@ -142,22 +144,25 @@ class OfflineTree:
     pipelines and other trees reuse its transitions (and vice versa).
     """
 
-    def __init__(self, task: KernelProgram, store=None):
+    def __init__(self, task: KernelProgram, store=None, target=None):
         self.task = task
         self.store = store
+        self.target = hardware.resolve(target)
         self.nodes: dict[str, TreeNode] = {}
         self.root = self._intern(task)
 
     def _intern(self, prog: KernelProgram) -> str:
         if self.store is not None:
-            fp = self.store.intern(prog)
+            fp = self.store.intern(prog, self.target)
             if fp not in self.nodes:
-                self.nodes[fp] = TreeNode(prog, self.store.cost(prog))
+                self.nodes[fp] = TreeNode(prog,
+                                          self.store.cost(prog,
+                                                          self.target))
             return fp
         fp = prog.fingerprint()
         if fp not in self.nodes:
             self.nodes[fp] = TreeNode(
-                prog, cost_model.program_cost(prog).total_s)
+                prog, cost_model.program_cost(prog, self.target).total_s)
         return fp
 
     def expand(self, fp: str, action: A.Action,

@@ -1,0 +1,129 @@
+"""Hardware-target registry — the chip the cost model prices against.
+
+A ``HardwareTarget`` is the full set of roofline parameters one chip
+contributes to the analytic cost model: peak matmul FLOP/s per dtype,
+vector-unit FLOP/s, HBM and on-chip (VMEM/SMEM) bandwidth and capacity,
+the lane/sublane tile-alignment geometry of the matrix unit, and the
+per-kernel dispatch overhead.  Everything downstream of the cost model
+(env rewards, pipeline/search scoring, the transposition store's cost
+memo, autotuned schedule installation) is parameterized by a target, so
+one process can price the same program against many chips.
+
+Three targets ship registered (public datasheet numbers):
+
+  tpu_v5e   — 197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB (the seed model's
+              constants; stays the default so existing prices are
+              bit-identical)
+  tpu_v4    — 275 TFLOP/s bf16, 1228 GB/s HBM, 32 GiB
+  gpu_a100  — 312 TFLOP/s bf16 (dense), 1555 GB/s HBM2e, 40 GiB; GPU
+              tensor-core alignment is finer-grained (lane 64 /
+              sublane 16) and kernel launch overhead is higher
+
+Semantics notes (DESIGN.md §9): targets are frozen and registry names
+are unique — a cost memo keyed ``(fingerprint, target.name)`` is a pure
+function of its key.  Re-registering a name with different numbers
+requires ``overwrite=True`` and invalidates any store holding costs for
+that name (drop the store wholesale, same rule as a cost-model code
+change).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GIB = 2 ** 30
+MIB = 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTarget:
+    name: str
+    kind: str                    # "tpu" | "gpu"
+    # dtype -> peak matmul FLOP/s, first entry = default mixed-precision
+    # rate used for dtypes without their own entry (programs are priced
+    # at the matrix unit's native rate regardless of storage dtype)
+    matmul_flops_by_dtype: tuple[tuple[str, float], ...]
+    vector_flops: float          # elementwise / softmax / exp chains
+    hbm_bw: float                # bytes/s
+    hbm_bytes: float             # capacity
+    vmem_bw: float               # on-chip (VMEM / SMEM+L2) bytes/s
+    vmem_bytes: float            # on-chip capacity per core/SM-aggregate
+    lane: int = 128              # full-efficiency tile multiple
+    sublane: int = 8             # reduced-efficiency tile multiple
+    launch_s: float = 1.5e-6     # per-kernel dispatch overhead
+
+    def matmul_flops(self, dtype: str = "bf16") -> float:
+        d = dict(self.matmul_flops_by_dtype)
+        return d.get(dtype, self.matmul_flops_by_dtype[0][1])
+
+    def mxu_efficiency(self, tiles: dict[str, int]) -> float:
+        """Achievable fraction of peak for a tile dict: full-rate when
+        every tile is lane-aligned, reduced when sublane-aligned, poor
+        otherwise (padding + partial-tile waste)."""
+        if not tiles:
+            return 0.45
+        vals = list(tiles.values())
+        if all(v % self.lane == 0 for v in vals):
+            return 0.85
+        if all(v % self.sublane == 0 for v in vals):
+            return 0.45
+        return 0.15
+
+
+_REGISTRY: dict[str, HardwareTarget] = {}
+
+DEFAULT_TARGET = "tpu_v5e"
+
+
+def register_target(t: HardwareTarget, *, overwrite: bool = False) -> None:
+    if t.name in _REGISTRY and not overwrite:
+        raise ValueError(f"target {t.name!r} already registered "
+                         "(pass overwrite=True to replace — and drop "
+                         "any TranspositionStore holding its costs)")
+    _REGISTRY[t.name] = t
+
+
+def get_target(name: str) -> HardwareTarget:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware target {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_targets() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve(target: "HardwareTarget | str | None") -> HardwareTarget:
+    """None -> default target; str -> registry lookup; pass-through."""
+    if target is None:
+        return _REGISTRY[DEFAULT_TARGET]
+    if isinstance(target, str):
+        return get_target(target)
+    return target
+
+
+register_target(HardwareTarget(
+    name="tpu_v5e", kind="tpu",
+    matmul_flops_by_dtype=(("bf16", 197e12), ("int8", 394e12)),
+    vector_flops=4e12,
+    hbm_bw=819e9, hbm_bytes=16 * GIB,
+    vmem_bw=11e12, vmem_bytes=16 * MIB,
+    lane=128, sublane=8, launch_s=1.5e-6))
+
+register_target(HardwareTarget(
+    name="tpu_v4", kind="tpu",
+    matmul_flops_by_dtype=(("bf16", 275e12), ("int8", 275e12)),
+    vector_flops=4.4e12,
+    hbm_bw=1228e9, hbm_bytes=32 * GIB,
+    vmem_bw=15e12, vmem_bytes=16 * MIB,
+    lane=128, sublane=8, launch_s=1.5e-6))
+
+register_target(HardwareTarget(
+    name="gpu_a100", kind="gpu",
+    matmul_flops_by_dtype=(("bf16", 312e12), ("fp16", 312e12),
+                           ("tf32", 156e12), ("int8", 624e12)),
+    vector_flops=19.5e12,
+    hbm_bw=1555e9, hbm_bytes=40 * GIB,
+    vmem_bw=19e12, vmem_bytes=20 * MIB,
+    lane=64, sublane=16, launch_s=4e-6))

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.core import actions as A
-from repro.core import cost_model
+from repro.core import cost_model, hardware, search as S
 from repro.core.env import EnvConfig, KernelEnv
 from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
 from repro.core.micro_coding import StructuredMicroCoder
@@ -53,7 +53,8 @@ class MTMCPipeline:
     def __init__(self, policy: MacroPolicy | None = None, *,
                  mode: str = "policy", curated: bool = True,
                  max_steps: int = 8, seed: int = 0,
-                 validate: bool = True, store=None):
+                 validate: bool = True, store=None, target=None,
+                 strategy: "S.SearchStrategy | str | None" = None):
         self.policy = policy
         self.mode = mode
         self.curated = curated
@@ -63,6 +64,14 @@ class MTMCPipeline:
         # optional TranspositionStore (core.engine): memoizes rewrites,
         # costs and oracle checks; None keeps the uncached serial path
         self.store = store
+        # the hardware target every cost/reward is priced against
+        # (None = registry default, tpu_v5e)
+        self.target = hardware.resolve(target)
+        # optional SearchStrategy (core.search) — when set, optimize()
+        # explores the macro action space with it instead of running a
+        # single mode-driven rollout
+        self.strategy = (None if strategy is None
+                         else S.get_strategy(strategy))
         self._coder = StructuredMicroCoder()
 
     # -- cached primitives ---------------------------------------------------
@@ -73,8 +82,8 @@ class MTMCPipeline:
 
     def _cost(self, prog) -> float:
         if self.store is not None:
-            return self.store.cost(prog)
-        return cost_model.program_cost(prog).total_s
+            return self.store.cost(prog, self.target)
+        return cost_model.program_cost(prog, self.target).total_s
 
     # -- action selection ----------------------------------------------------
     def _select(self, prog, cands, key, rng):
@@ -99,13 +108,16 @@ class MTMCPipeline:
 
     # -- main loop -------------------------------------------------------------
     def optimize(self, task: KernelProgram) -> OptimizationResult:
+        if self.strategy is not None:
+            return self._search(task)
         rng = np.random.default_rng(self.seed)
         key = jax.random.PRNGKey(self.seed)
         if self.mode == "single_pass":
             return self._single_pass(task, rng, key)
         env_cfg = EnvConfig(max_steps=self.max_steps,
                             curated_actions=self.curated)
-        env = KernelEnv(task, self._coder, env_cfg, store=self.store)
+        env = KernelEnv(task, self._coder, env_cfg, store=self.store,
+                        target=self.target)
         state = env.reset()
         best = state
         best_s = env.baseline_s
@@ -130,6 +142,26 @@ class MTMCPipeline:
         return OptimizationResult(
             task.name, best, correct,
             env.baseline_s / best_s, best_steps, n_fail, best.history)
+
+    def _search(self, task: KernelProgram) -> OptimizationResult:
+        """Strategy-driven exploration (core.search) sharing the
+        pipeline's store, target and action curation.  A pipeline built
+        without a store gets a private one — strategies lean on the
+        transposition property (beam siblings / restarts share every
+        visited edge), so searching uncached would repeat rewrites."""
+        store = self.store
+        if store is None:
+            from repro.core.engine import TranspositionStore
+            store = TranspositionStore()
+        out = self.strategy.search(
+            task, coder=self._coder, store=store, target=self.target,
+            max_steps=self.max_steps, seed=self.seed,
+            curated=self.curated)
+        correct = True if not self.validate else \
+            store.check(task, out.program)
+        return OptimizationResult(
+            task.name, out.program, correct, out.speedup, out.steps,
+            out.n_failures, out.program.history)
 
     def _single_pass(self, task, rng, key) -> OptimizationResult:
         """'w/o Hier': commit to a full plan against the INITIAL state and

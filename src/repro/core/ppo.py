@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import actions as A
 from repro.core.env import EnvConfig, OfflineEnv, OfflineTree
 from repro.core.policy import (MacroPolicy, PolicyConfig,
                                build_candidate_batch, policy_forward)

@@ -1,0 +1,259 @@
+"""Search strategies over the macro action space.
+
+The paper's central claim is that Macro Thinking wins by *exploring* the
+semantic optimization space; a single greedy descent (the seed's
+``greedy_cost`` mode) commits to one rollout and stops at the first
+local minimum where no single action improves the modeled cost.  This
+module makes the search pluggable:
+
+  greedy  — the baseline: best cost-model child each step, stop when no
+            child improves by the relative tolerance (exactly the seed's
+            ``greedy_cost`` descent, factored out).
+  beam    — beam search over macro actions: a width-`w` frontier of
+            distinct programs is expanded each depth and the global-best
+            program is tracked.  The frontier keeps the best `w`
+            children even when they are all worse than their parents, so
+            beam traverses cost plateaus and sub-threshold improvements
+            that stall greedy.  A greedy backbone run is folded in (the
+            shared ``TranspositionStore`` makes it free — every edge the
+            backbone walks is an edge the beam expands anyway), so beam
+            can never return a worse program than greedy on the same
+            store.
+  anneal  — random-restart epsilon-greedy: restart 0 is exact greedy
+            (same guarantee), later restarts follow the greedy child
+            with probability 1-eps and a uniform valid child otherwise,
+            with eps decaying per restart.
+
+All strategies share transition/cost/oracle memos through the store, so
+beam siblings and restarts never re-rewrite a visited (state, action)
+edge and never re-price a visited (program, target) pair.  Strategies
+only ever move along ``status == "ok"`` rewrites, so every returned
+program is oracle-checkable against the task (property-tested in
+``tests/test_search.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import actions as A
+from repro.core import hardware
+from repro.core.kernel_ir import KernelProgram
+
+# a child must beat the incumbent by this relative margin for greedy to
+# descend (the seed's greedy_cost used the same 0.999); beam/anneal use
+# it only for their embedded greedy backbone
+GREEDY_REL_TOL = 0.999
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchOutcome:
+    program: KernelProgram
+    cost_s: float                # modeled cost of ``program`` on target
+    baseline_s: float            # modeled cost of the task itself
+    steps: int                   # actions applied along the winning path
+    n_expanded: int              # ok-children materialized
+    n_failures: int              # compile/validation failures en route
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_s / max(self.cost_s, 1e-12)
+
+
+class SearchStrategy:
+    """Pluggable exploration over macro actions.
+
+    ``search`` walks the (program, action) graph through a
+    ``TranspositionStore`` (duck-typed: ``apply``/``cost``) so sibling
+    states share rewrites and pricing, and returns the best-found
+    program under ``target``'s cost model.
+    """
+
+    name = "base"
+
+    def search(self, task: KernelProgram, *, coder, store,
+               target=None, max_steps: int = 8, seed: int = 0,
+               curated: bool = True) -> SearchOutcome:
+        raise NotImplementedError
+
+    def _children(self, store, coder, prog: KernelProgram,
+                  curated: bool) -> tuple[list, int]:
+        """All valid (action, child) successors of ``prog``."""
+        acts = (A.candidate_actions(prog) if curated
+                else A.unrestricted_actions(prog))
+        ok, fails = [], 0
+        for a in acts:
+            if a.kind == "stop":
+                continue
+            r = store.apply(coder, prog, a)
+            if r.status == "ok":
+                ok.append((a, r.program))
+            else:
+                fails += 1
+        return ok, fails
+
+
+class GreedySearch(SearchStrategy):
+    """Best cost-model child each step; stop at the first local min."""
+
+    name = "greedy"
+
+    def search(self, task, *, coder, store, target=None, max_steps=8,
+               seed=0, curated=True) -> SearchOutcome:
+        tgt = hardware.resolve(target)
+        cur, cur_c = task, store.cost(task, tgt)
+        base = cur_c
+        steps = n_exp = n_fail = 0
+        for t in range(max_steps):
+            children, fails = self._children(store, coder, cur, curated)
+            n_fail += fails
+            n_exp += len(children)
+            best, best_c = None, cur_c
+            for _, ch in children:
+                c = store.cost(ch, tgt)
+                if c < best_c * GREEDY_REL_TOL:
+                    best, best_c = ch, c
+            if best is None:
+                break
+            cur, cur_c, steps = best, best_c, t + 1
+        return SearchOutcome(cur, cur_c, base, steps, n_exp, n_fail)
+
+
+class BeamSearch(SearchStrategy):
+    """Width-`w` frontier over macro actions with a greedy backbone.
+
+    Each depth expands every frontier program and keeps the `width`
+    cheapest *distinct* children (dedup by fingerprint across the whole
+    search — siblings frequently commute into the same program, and the
+    store's transposition property makes the dedup exact).  Children are
+    kept even when no child beats its parent, so the beam walks through
+    plateaus and sub-0.1% improvements where greedy stops.  At most
+    ``per_parent`` children of the same frontier state survive a depth:
+    without the cap the frontier collapses into `width` tile-variants of
+    one leader and prunes exactly the branches beam exists for (the
+    fusion-order traps — e.g. fusing a gelu upward into its producer
+    matmul forecloses the globally-better downward fusion into its
+    consumer matmul, which starts out looking worse).  The returned
+    program is the best of {beam-best, greedy-backbone best}, making
+    ``cost(beam) <= cost(greedy)`` an invariant rather than a hope.
+    """
+
+    name = "beam"
+
+    def __init__(self, width: int = 4, per_parent: int = 2):
+        self.width = width
+        self.per_parent = per_parent
+
+    def search(self, task, *, coder, store, target=None, max_steps=8,
+               seed=0, curated=True) -> SearchOutcome:
+        tgt = hardware.resolve(target)
+        backbone = GreedySearch().search(
+            task, coder=coder, store=store, target=tgt,
+            max_steps=max_steps, seed=seed, curated=curated)
+        base = backbone.baseline_s
+        best, best_c = backbone.program, backbone.cost_s
+        best_depth = backbone.steps
+        n_exp, n_fail = backbone.n_expanded, backbone.n_failures
+        frontier = [(base, task)]
+        seen = {task.fingerprint()}
+        for depth in range(max_steps):
+            pool = []
+            for pi, (_, prog) in enumerate(frontier):
+                children, fails = self._children(store, coder, prog,
+                                                 curated)
+                n_fail += fails
+                for _, ch in children:
+                    fp = ch.fingerprint()
+                    if fp in seen:
+                        continue
+                    seen.add(fp)
+                    n_exp += 1
+                    pool.append((store.cost(ch, tgt), fp, pi, ch))
+            if not pool:
+                break
+            pool.sort(key=lambda e: (e[0], e[1]))   # cost, then fp tiebreak
+            frontier, taken = [], {}
+            for c, _, pi, ch in pool:
+                if taken.get(pi, 0) >= self.per_parent:
+                    continue
+                taken[pi] = taken.get(pi, 0) + 1
+                frontier.append((c, ch))
+                if len(frontier) >= self.width:
+                    break
+            if frontier[0][0] < best_c:
+                best_c, best = frontier[0]
+                best_depth = depth + 1
+        return SearchOutcome(best, best_c, base, best_depth, n_exp,
+                             n_fail)
+
+
+class AnnealedSearch(SearchStrategy):
+    """Random-restart epsilon-greedy descent with annealed epsilon.
+
+    Restart 0 runs with eps=0 — an exact greedy replica, so the best
+    across restarts can never be worse than greedy on the same store.
+    Later restarts take a uniform valid child with probability eps
+    (escaping greedy's local minima), eps decaying geometrically per
+    restart; every visited state competes for the returned best.
+    """
+
+    name = "anneal"
+
+    def __init__(self, restarts: int = 4, eps: float = 0.5,
+                 decay: float = 0.6):
+        self.restarts = restarts
+        self.eps = eps
+        self.decay = decay
+
+    def search(self, task, *, coder, store, target=None, max_steps=8,
+               seed=0, curated=True) -> SearchOutcome:
+        tgt = hardware.resolve(target)
+        rng = np.random.default_rng(seed)
+        base = store.cost(task, tgt)
+        best, best_c, best_steps = task, base, 0
+        n_exp = n_fail = 0
+        for r in range(self.restarts):
+            eps = 0.0 if r == 0 else self.eps * self.decay ** (r - 1)
+            cur, cur_c = task, base
+            for t in range(max_steps):
+                children, fails = self._children(store, coder, cur,
+                                                 curated)
+                n_fail += fails
+                n_exp += len(children)
+                if not children:
+                    break
+                if eps > 0.0 and rng.random() < eps:
+                    _, nxt = children[rng.integers(len(children))]
+                    nxt_c = store.cost(nxt, tgt)
+                else:
+                    nxt, nxt_c = None, cur_c
+                    for _, ch in children:
+                        c = store.cost(ch, tgt)
+                        if c < nxt_c * GREEDY_REL_TOL:
+                            nxt, nxt_c = ch, c
+                    if nxt is None:
+                        break
+                cur, cur_c = nxt, nxt_c
+                if cur_c < best_c:
+                    best, best_c, best_steps = cur, cur_c, t + 1
+        return SearchOutcome(best, best_c, base, best_steps, n_exp,
+                             n_fail)
+
+
+STRATEGIES: dict[str, type[SearchStrategy]] = {
+    GreedySearch.name: GreedySearch,
+    BeamSearch.name: BeamSearch,
+    AnnealedSearch.name: AnnealedSearch,
+}
+
+
+def get_strategy(strategy: "SearchStrategy | str") -> SearchStrategy:
+    """str -> default-configured instance; instances pass through."""
+    if isinstance(strategy, SearchStrategy):
+        return strategy
+    try:
+        return STRATEGIES[strategy]()
+    except KeyError:
+        raise KeyError(f"unknown search strategy {strategy!r}; "
+                       f"registered: {sorted(STRATEGIES)}") from None

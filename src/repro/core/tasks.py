@@ -40,6 +40,16 @@ def _ms(kind="matmul"):
     return default_schedule(kind)
 
 
+def _ffn_chain(name, M, D, F, act, D2) -> KernelProgram:
+    """matmul -> bias -> activation -> matmul (KernelBench-L2 staple)."""
+    return chain_program(name, {"x": (M, D), "w1": (D, F), "b1": (F,),
+                                "w2": (F, D2)},
+                         [("h", "matmul", ("x", "w1")),
+                          ("hb", "bias", ("h", "b1")),
+                          ("hg", act, ("hb",)),
+                          ("y", "matmul", ("hg", "w2"))])
+
+
 def _mlp_block(name, M, D, F) -> KernelProgram:
     return chain_program(name, {"x": (M, D), "w1": (D, F), "b1": (F,),
                                 "w2": (F, D), "scale": (D,)},
@@ -162,6 +172,16 @@ def kb_level2() -> list[KernelProgram]:
                             ("gu", "mul", ("gs", "u")),
                             ("y", "matmul", ("gu", "wd"))]))
     t.append(_mlp_block("L2_mlp", 512, 1024, 4096))
+    # matmul->bias->activation->matmul chains at varied shapes — the
+    # dominant fused-subgraph family of real KernelBench L2.  The fusion
+    # ORDER is a genuine search decision here: the activation can fuse
+    # up into its producer matmul or down into its consumer, and the
+    # wrong (locally-best) choice forecloses the better one.
+    t.append(_ffn_chain("L2_mlp_silu", 512, 768, 3072, "silu", 768))
+    t.append(_ffn_chain("L2_mlp_gelu_proj", 512, 1024, 2048, "gelu",
+                        2048))
+    t.append(_ffn_chain("L2_mlp_relu_sq", 1024, 1024, 2048, "relu",
+                        1024))
     t.append(_moe_task("L2_moe_mm", 4, 256, 512, 1024))
     return t
 

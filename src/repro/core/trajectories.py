@@ -17,7 +17,6 @@ import dataclasses
 import numpy as np
 
 from repro.core import actions as A
-from repro.core import cost_model
 from repro.core.env import EnvConfig, KernelEnv, OfflineTree
 from repro.core.kernel_ir import KernelProgram
 from repro.core.micro_coding import StructuredMicroCoder

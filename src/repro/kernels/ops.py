@@ -11,7 +11,6 @@ MTMC pipeline uses to install tuned schedules.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -19,18 +18,48 @@ import jax.numpy as jnp
 
 from repro.models import layers
 
-# (kernel_name, shape_key) -> KernelSchedule (see repro.core.kernel_ir)
-_SCHEDULES: dict[tuple[str, str], Any] = {}
+# (kernel_name, shape_key, target_name) -> KernelSchedule; schedules are
+# tuned against one hardware target's cost model (repro.core.hardware),
+# so the registry keys them by target and dispatch consults the active
+# target (default: the registry default, tpu_v5e)
+_SCHEDULES: dict[tuple[str, str, str], Any] = {}
+_ACTIVE_TARGET: str | None = None   # None -> hardware.DEFAULT_TARGET
 _FORCE_REF = False          # tests can force the reference path
 _FORCE_PALLAS = False       # tests force interpret-mode pallas on CPU
 
 
-def set_schedule(kernel: str, key: str, schedule: Any) -> None:
-    _SCHEDULES[(kernel, key)] = schedule
+def _target_name(target: Any = None) -> str:
+    from repro.core import hardware
+    t = target if target is not None else _ACTIVE_TARGET
+    if t is None:
+        return hardware.DEFAULT_TARGET
+    return t if isinstance(t, str) else t.name
 
 
-def get_schedule(kernel: str, key: str, default: Any = None) -> Any:
-    return _SCHEDULES.get((kernel, key), default)
+def set_active_target(target: Any) -> None:
+    """Select which target's tuned schedules dispatch consults (the chip
+    this process is actually serving on).  Accepts a name, a
+    ``HardwareTarget``, or None to fall back to the registry default."""
+    global _ACTIVE_TARGET
+    _ACTIVE_TARGET = None if target is None else _target_name(target)
+
+
+def set_schedule(kernel: str, key: str, schedule: Any,
+                 target: Any = None) -> None:
+    _SCHEDULES[(kernel, key, _target_name(target))] = schedule
+
+
+def get_schedule(kernel: str, key: str, default: Any = None,
+                 target: Any = None) -> Any:
+    """Schedule for (kernel, key) on the given/active target, falling
+    back to the default target's entry (a v5e-tuned schedule is a sane
+    starting point on any chip; a target-specific install overrides)."""
+    from repro.core import hardware
+    tname = _target_name(target)
+    s = _SCHEDULES.get((kernel, key, tname))
+    if s is None and tname != hardware.DEFAULT_TARGET:
+        s = _SCHEDULES.get((kernel, key, hardware.DEFAULT_TARGET))
+    return default if s is None else s
 
 
 def use_pallas() -> bool:

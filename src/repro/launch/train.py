@@ -10,7 +10,6 @@ elastic re-mesh, stragglers) is wired here.  On this CPU container use
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

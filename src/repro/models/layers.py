@@ -10,7 +10,6 @@ builders, and forwards take per-layer slices.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

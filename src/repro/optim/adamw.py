@@ -6,7 +6,7 @@ PartitionSpecs shard it (ZeRO-style when FSDP rules are active).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,10 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.hardware import resolve as _resolve_target
 from repro.roofline.hlo_parse import collective_bytes
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s / chip
+# chip constants come from the hardware-target registry (core/hardware),
+# shared with the kernel-level cost model so whole-step and per-kernel
+# rooflines can never disagree about the chip
+PEAK_FLOPS = _resolve_target(None).matmul_flops("bf16")   # bf16 / chip
+HBM_BW = _resolve_target(None).hbm_bw                     # bytes/s / chip
 ICI_BW = 50e9              # bytes/s / link
 
 

@@ -8,14 +8,11 @@ decode through their own cache trees).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import api, makers
-from repro.models.layers import zeros_init
+from repro.models import api
 
 
 def make_serve_step(cfg: ModelConfig, *, rules=None):
@@ -108,11 +105,20 @@ class KernelService:
 
     def __init__(self, policy=None, *, mode: str = "greedy_cost",
                  max_steps: int = 8, workers: int = 0, store=None,
-                 max_programs: int = 200_000):
+                 max_programs: int = 200_000, target=None,
+                 strategy: str | None = None):
+        from repro.core import hardware
         from repro.core.engine import EvalEngine, TranspositionStore
         self.store = store if store is not None else TranspositionStore()
+        # default hardware target requests are priced against; a single
+        # service instance serves mixed-target traffic (per-request
+        # override) because the store keys costs by (program, target)
+        # and shares rewrites/oracle checks across targets
+        self.target = hardware.resolve(target)
         self._engine = EvalEngine(policy, store=self.store, mode=mode,
-                                  max_steps=max_steps, workers=workers)
+                                  max_steps=max_steps, workers=workers,
+                                  target=self.target.name,
+                                  strategy=strategy)
         # capacity bound: the store never invalidates for correctness
         # (all entries are pure functions of their keys) but a server
         # fed a stream of DISTINCT kernels grows without bound — drop
@@ -128,11 +134,32 @@ class KernelService:
             self._engine.store = self.store
             self.n_store_resets += 1
 
-    def optimize(self, task, seed: int | None = None):
-        """One request -> OptimizationResult (cached substrate)."""
+    def optimize(self, task, seed: int | None = None, target=None):
+        """One request -> OptimizationResult (cached substrate).
+
+        ``target`` prices this request against a different registered
+        chip; transitions/oracle entries are shared with every other
+        target's requests (only cost memos are per-target)."""
         self.n_requests += 1
         self._maybe_evict()
-        return self._engine.optimize(task, seed)
+        return self._engine.optimize(task, seed, target=target)
+
+    def optimize_install(self, task, kernel: str, key: str, *,
+                         seed: int | None = None, target=None):
+        """Optimize and install the winning schedule into the kernel
+        registry under the request's target
+        (``ops.set_schedule(kernel, key, sched, target)``) — the serving
+        path picks it up when that target is active."""
+        from repro.core import hardware
+        from repro.core.autotune import _extract_schedule
+        from repro.kernels import ops
+        res = self.optimize(task, seed, target=target)
+        sched = _extract_schedule(res.program, kernel)
+        if sched is not None and res.correct:
+            tgt = self.target if target is None else \
+                hardware.resolve(target)
+            ops.set_schedule(kernel, key, sched, target=tgt)
+        return res, sched
 
     def optimize_batch(self, tasks) -> dict:
         self.n_requests += len(tasks)
@@ -141,4 +168,5 @@ class KernelService:
 
     def stats(self) -> dict:
         return dict(self.store.stats_dict(), requests=self.n_requests,
-                    store_resets=self.n_store_resets)
+                    store_resets=self.n_store_resets,
+                    target=self.target.name)

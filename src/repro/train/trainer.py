@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig,
                                 auto_accum_steps)
 from repro.models import api
-from repro.models.layers import softmax_xent
 from repro.optim import adamw
 
 AUX_WEIGHT = 0.01

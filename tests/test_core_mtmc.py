@@ -1,18 +1,17 @@
 """Unit + property tests for the MTMC core (env, rewards, policy, cost)."""
 import jax
 import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.core import (Action, EnvConfig, KernelEnv, MacroPolicy,
-                        OfflineEnv, OfflineTree, PolicyConfig,
+                        OfflineEnv, PolicyConfig,
                         StructuredMicroCoder, candidate_actions,
                         program_cost)
 from repro.core import tasks as T
 from repro.core.actions import unrestricted_actions
 from repro.core.env import action_key
-from repro.core.policy import (action_words, build_candidate_batch,
-                               encode, region_slots, state_words, VOCAB)
+from repro.core.policy import (action_words, region_slots,
+                               state_words, VOCAB)
 from repro.core.trajectories import CollectConfig, collect, tree_stats
 
 

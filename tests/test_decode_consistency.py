@@ -5,8 +5,6 @@ token-by-token through its decode cache (KV / ring-buffer / wkv state /
 ssm state / conv state) must reproduce the full-sequence forward logits
 at every position.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -59,7 +57,6 @@ def test_decode_matches_forward_encdec():
     # build the decode cache: cross K/V from the encoder output
     enc_out = encdec.encode(cfg, params, enc, remat=False)
     cache = api.init_cache(cfg, 2, 16)
-    import jax.numpy as jnp_
     ck, cv = [], []
     for i in range(cfg.n_layers):
         p = jax.tree.map(lambda a: a[i], params["blocks"])

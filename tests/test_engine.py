@@ -1,6 +1,5 @@
 """Batched/cached evaluation engine: golden regression vs the serial
 path, cache effectiveness, live/offline environment parity, service."""
-import jax
 import numpy as np
 import pytest
 from _hyp import given, settings, strategies as st

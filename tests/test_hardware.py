@@ -1,0 +1,153 @@
+"""Hardware-target registry: pricing, store keying, schedule install."""
+import pytest
+
+from repro.core import (TranspositionStore, get_target, program_cost,
+                        register_target, registered_targets)
+from repro.core import hardware
+from repro.core import tasks as T
+from repro.kernels import ops
+from repro.kernels.schedule import KernelSchedule
+
+
+def test_three_targets_registered():
+    names = registered_targets()
+    for required in ("tpu_v5e", "tpu_v4", "gpu_a100"):
+        assert required in names
+
+
+def test_default_target_pricing_matches_v5e():
+    """No-target pricing must stay bit-identical to explicit v5e (the
+    seed model's constants) — default costs are the compatibility
+    contract for every store built before targets existed."""
+    for task in T.kb_level1() + T.kb_level2():
+        assert program_cost(task).total_s == \
+            program_cost(task, get_target("tpu_v5e")).total_s
+
+
+def test_cost_model_constants_come_from_registry():
+    from repro.core import cost_model
+    v5e = get_target("tpu_v5e")
+    assert cost_model.PEAK_FLOPS == v5e.matmul_flops("bf16")
+    assert cost_model.HBM_BW == v5e.hbm_bw
+    from repro.roofline import analysis
+    assert analysis.PEAK_FLOPS == v5e.matmul_flops("bf16")
+    assert analysis.HBM_BW == v5e.hbm_bw
+
+
+def test_targets_price_differently():
+    task = T.kb_level2()[0]
+    costs = {n: program_cost(task, n).total_s
+             for n in ("tpu_v5e", "tpu_v4", "gpu_a100")}
+    assert len(set(costs.values())) == 3
+    # v4 has strictly more FLOP/s and bandwidth than v5e at the same
+    # geometry, so everything is cheaper there
+    assert costs["tpu_v4"] < costs["tpu_v5e"]
+
+
+def test_resolve_accepts_name_instance_none():
+    v4 = get_target("tpu_v4")
+    assert hardware.resolve("tpu_v4") is v4
+    assert hardware.resolve(v4) is v4
+    assert hardware.resolve(None).name == hardware.DEFAULT_TARGET
+    with pytest.raises(KeyError):
+        hardware.resolve("tpu_v9000")
+
+
+def test_register_rejects_silent_overwrite():
+    t = get_target("tpu_v4")
+    with pytest.raises(ValueError):
+        register_target(t)
+    register_target(t, overwrite=True)   # explicit is allowed
+
+
+def test_store_costs_keyed_per_target():
+    store = TranspositionStore()
+    task = T.kb_level2()[0]
+    c_v5e = store.cost(task)
+    c_a100 = store.cost(task, "gpu_a100")
+    assert c_v5e != c_a100
+    assert store.cost(task) == c_v5e                 # hit, not clobbered
+    assert store.cost(task, "gpu_a100") == c_a100
+    fp = task.fingerprint()
+    assert store.cost_of(fp) == c_v5e
+    assert store.cost_of(fp, "gpu_a100") == c_a100
+    assert store.stats["cost_evals"] == 2
+
+
+def test_env_rewards_priced_on_target():
+    from repro.core import KernelEnv
+    task = T._attn_program("attn", 1, 256, 4, 64)
+    e1 = KernelEnv(task)
+    e2 = KernelEnv(task, target="gpu_a100")
+    assert e1.baseline_s != e2.baseline_s
+    assert e1.baseline_s == program_cost(task).total_s
+    assert e2.baseline_s == program_cost(task, "gpu_a100").total_s
+
+
+def test_mxu_efficiency_geometry():
+    v5e, a100 = get_target("tpu_v5e"), get_target("gpu_a100")
+    tiles = {"bm": 64, "bn": 64, "bk": 64}
+    # 64-tiles are lane-aligned on the GPU (lane 64) but only
+    # sublane-aligned on the TPU (lane 128): per-target optimal tilings
+    # genuinely differ
+    assert a100.mxu_efficiency(tiles) > v5e.mxu_efficiency(tiles)
+    assert v5e.mxu_efficiency({"bm": 128}) == \
+        a100.mxu_efficiency({"bm": 128})
+
+
+# ---------------------------------------------------------------------------
+# schedule install keyed by target
+# ---------------------------------------------------------------------------
+
+def test_ops_schedule_registry_target_keyed():
+    sched_v5e = KernelSchedule(blocks={"bm": 256})
+    sched_a100 = KernelSchedule(blocks={"bm": 64})
+    try:
+        ops.set_schedule("matmul", "_t_test", sched_v5e)
+        ops.set_schedule("matmul", "_t_test", sched_a100,
+                         target="gpu_a100")
+        assert ops.get_schedule("matmul", "_t_test") is sched_v5e
+        assert ops.get_schedule("matmul", "_t_test",
+                                target="gpu_a100") is sched_a100
+        # default-target entries back-fill targets with no install
+        assert ops.get_schedule("matmul", "_t_test",
+                                target="tpu_v4") is sched_v5e
+        # the active target steers no-argument dispatch lookups
+        ops.set_active_target("gpu_a100")
+        assert ops.get_schedule("matmul", "_t_test") is sched_a100
+    finally:
+        ops.set_active_target(None)
+        for k in [k for k in ops._SCHEDULES if k[1] == "_t_test"]:
+            del ops._SCHEDULES[k]
+
+
+def test_kernel_service_optimize_install_per_target():
+    from repro.serve.engine import KernelService
+    svc = KernelService(max_steps=6)
+    task = T.kb_level1()[0]          # L1_matmul_0: (512,512)x(512,512)
+    try:
+        res, sched = svc.optimize_install(task, "matmul", "_t_svc")
+        assert res.correct and sched is not None
+        assert ops.get_schedule("matmul", "_t_svc") is sched
+        res2, sched2 = svc.optimize_install(task, "matmul", "_t_svc",
+                                            target="gpu_a100")
+        assert res2.correct and sched2 is not None
+        assert ops.get_schedule("matmul", "_t_svc",
+                                target="gpu_a100") is sched2
+        assert svc.stats()["target"] == hardware.DEFAULT_TARGET
+    finally:
+        for k in [k for k in ops._SCHEDULES if k[1] == "_t_svc"]:
+            del ops._SCHEDULES[k]
+
+
+def test_service_mixed_target_requests_share_substrate():
+    from repro.serve.engine import KernelService
+    svc = KernelService(max_steps=6)
+    task = T.kb_level2()[0]
+    svc.optimize(task)
+    fresh = svc.stats()["fresh_applies"]
+    r = svc.optimize(task, target="gpu_a100")
+    assert r.correct
+    # the second target's request re-used every rewrite (cost memos
+    # fork per target; transitions and oracle checks do not)
+    assert svc.stats()["fresh_applies"] == fresh

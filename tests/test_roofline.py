@@ -7,8 +7,6 @@ the text-parsing layer on canned HLO snippets.)
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.roofline import hlo_parse as H
 

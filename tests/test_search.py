@@ -1,0 +1,109 @@
+"""Search-strategy properties: correctness and never-worse-than-greedy."""
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (MTMCPipeline, StructuredMicroCoder,
+                        TranspositionStore, get_strategy)
+from repro.core import tasks as T
+from repro.core.search import (AnnealedSearch, BeamSearch, GreedySearch,
+                               STRATEGIES)
+
+# one store for the whole module: strategies are designed to share
+# transition/cost/oracle memos, and the never-regress property is
+# stated "on the same store"
+STORE = TranspositionStore()
+CODER = StructuredMicroCoder()
+SUITE = T.kb_level1() + T.kb_level2() + T.kb_level3()
+
+
+def _greedy(task, target=None, max_steps=8):
+    return GreedySearch().search(task, coder=CODER, store=STORE,
+                                 target=target, max_steps=max_steps)
+
+
+# ---------------------------------------------------------------------------
+# the property the ISSUE names: every strategy's program passes the
+# oracle and costs no more than the greedy baseline on the same store
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(ti=st.integers(0, len(SUITE) - 1),
+       sname=st.sampled_from(sorted(STRATEGIES)),
+       seed=st.integers(0, 3),
+       target=st.sampled_from(["tpu_v5e", "tpu_v4", "gpu_a100"]))
+def test_strategy_never_regresses_and_stays_correct(ti, sname, seed,
+                                                    target):
+    task = SUITE[ti]
+    g = _greedy(task, target)
+    out = get_strategy(sname).search(task, coder=CODER, store=STORE,
+                                     target=target, max_steps=8,
+                                     seed=seed)
+    assert out.cost_s <= g.cost_s * (1 + 1e-12), (task.name, sname)
+    assert out.cost_s <= out.baseline_s * (1 + 1e-12)
+    assert STORE.check(task, out.program), (task.name, sname)
+
+
+def test_beam_strictly_improves_on_fusion_order_traps():
+    """The L2 ffn chains embed an up-vs-down fusion ordering decision
+    greedy gets wrong; beam must win them on the default target."""
+    wins = 0
+    for task in T.kb_level2():
+        if not task.name.startswith("L2_mlp"):
+            continue
+        g = _greedy(task)
+        b = BeamSearch().search(task, coder=CODER, store=STORE,
+                                max_steps=8)
+        wins += b.cost_s < g.cost_s
+    assert wins >= 3
+
+
+def test_greedy_matches_greedy_cost_mode():
+    """GreedySearch is the seed's greedy_cost descent, factored out:
+    same final modeled cost on every KB task."""
+    for task in SUITE:
+        res = MTMCPipeline(mode="greedy_cost", max_steps=8, store=STORE,
+                           validate=False).optimize(task)
+        out = _greedy(task)
+        assert abs(STORE.cost(res.program) - out.cost_s) <= \
+            1e-12 * max(out.cost_s, 1e-30), task.name
+
+
+def test_anneal_restart_zero_is_greedy():
+    task = T.kb_level2()[0]
+    a = AnnealedSearch(restarts=1).search(task, coder=CODER,
+                                          store=STORE, max_steps=8)
+    g = _greedy(task)
+    assert a.cost_s == pytest.approx(g.cost_s, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# pipeline / engine integration
+# ---------------------------------------------------------------------------
+
+def test_pipeline_strategy_param():
+    task = T.kb_level2()[0]
+    for sname in sorted(STRATEGIES):
+        r = MTMCPipeline(strategy=sname, max_steps=8,
+                         store=STORE).optimize(task)
+        assert r.correct and r.speedup >= 1.0 - 1e-12
+        assert r.task == task.name
+
+
+def test_pipeline_strategy_without_store_builds_one():
+    r = MTMCPipeline(strategy="beam", max_steps=4).optimize(
+        T.kb_level1()[0])
+    assert r.correct and r.speedup >= 1.0 - 1e-12
+
+
+def test_engine_strategy_and_target_config():
+    from repro.core import EvalEngine
+    eng = EvalEngine(None, store=STORE, mode="greedy_cost",
+                     strategy="beam", target="gpu_a100", max_steps=6)
+    m = eng.evaluate_suite(T.kb_level2()[:3])
+    assert m["accuracy"] == 1.0
+    assert m["mean_speedup"] >= 1.0 - 1e-12
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(KeyError):
+        get_strategy("dijkstra")

@@ -1,5 +1,4 @@
 """ShardingRules unit + property tests (divisibility, padding, specs)."""
-import jax
 import numpy as np
 import pytest
 from _hyp import given, settings, strategies as st

@@ -5,12 +5,11 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.configs.registry import get_config, reduced
 from repro.core import (Action, MTMCPipeline, StructuredMicroCoder,
-                        candidate_actions, program_cost, speedup)
+                        candidate_actions, program_cost)
 from repro.core import tasks as T
 from repro.core.kernel_ir import evaluate, make_inputs
 from repro.data.pipeline import host_batch
