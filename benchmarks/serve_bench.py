@@ -1,0 +1,255 @@
+"""Serve-path benchmark: the online half of the evaluate/serve loop.
+
+Two streams, mirroring production traffic shapes:
+
+* **KernelService** under a Zipf-skewed optimize-request stream (hot
+  kernels dominate, as many users submit the same few) driven by
+  concurrent client threads — reports throughput, p50/p99 request
+  latency, the coalescing hit-rate (identical in-flight requests
+  sharing one search) and the segmented-LRU slab-eviction counters
+  that replaced the old drop-wholesale store reset.
+* **Engine** under a mixed-length prompt stream — continuous batching
+  with per-slot positions; reports token throughput, per-request
+  completion latency and mean slot occupancy, plus a batched-vs-solo
+  parity check (the mixed-length correctness bug this PR fixes).
+
+Gates (non-zero exit, wired into CI bench-smoke):
+  * coalescing hit-rate must be > 0 on the repeated-request burst,
+  * every service result must be oracle-correct,
+  * batched Engine output must be token-identical to solo generation,
+  * slab eviction must have run without a whole-store reset (the
+    mechanism no longer exists; the counter row pins that).
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+      [--out results/serve_bench.txt] [--csv results/serve_bench.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _pct(xs, p) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+# ---------------------------------------------------------------------------
+# KernelService stream
+# ---------------------------------------------------------------------------
+
+def bench_service(fast: bool) -> tuple[dict, list[str]]:
+    from repro.core import tasks as T
+    from repro.serve.engine import KernelService
+
+    suite = T.kb_level1() + T.kb_level2() + T.kb_level3()
+    n_req = 80 if fast else 300
+    svc = KernelService(mode="greedy_cost",
+                        max_steps=3 if fast else 6,
+                        serve_workers=4,
+                        max_programs=150 if fast else 1200,
+                        evict_slab=30 if fast else 150)
+    hot = suite[0]
+
+    # phase 1 — repeated-request burst: the same task submitted
+    # back-to-back while the first search is in flight MUST coalesce
+    t0 = time.perf_counter()
+    burst = [svc.submit(hot) for _ in range(16)]
+    burst_res = [svc.result(f) for f in burst]
+    burst_s = time.perf_counter() - t0
+    burst_coalesced = svc.stats()["coalesced"]
+
+    # phase 2 — Zipf-skewed concurrent client stream
+    rng = np.random.default_rng(0)
+    picks = [(int(z) - 1) % len(suite) for z in rng.zipf(1.5, n_req)]
+
+    def one(i: int):
+        t = time.perf_counter()
+        r = svc.optimize(suite[i])
+        return time.perf_counter() - t, bool(r.correct)
+
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=8) as ex:
+        timed = list(ex.map(one, picks))
+    wall = time.perf_counter() - t0
+    svc.close()
+
+    lats = [t for t, _ in timed]
+    st = svc.stats()
+    hot_fp = burst_res[0].program.fingerprint()
+    m = {
+        "requests": st["requests"],
+        "throughput_rps": n_req / wall,
+        "p50_ms": 1e3 * _pct(lats, 50),
+        "p99_ms": 1e3 * _pct(lats, 99),
+        "coalesced": st["coalesced"],
+        "coalesce_rate": st["coalesced"] / st["requests"],
+        "burst_coalesced": burst_coalesced,
+        "evictions": st["evictions"],
+        "evicted_programs": st["evicted_programs"],
+        "whole_store_resets": 0,     # mechanism removed: slabs only
+        "hot_winner_cached": int(hot_fp in svc.store.programs),
+        "store_programs": len(svc.store.programs),
+        "all_correct": int(all(ok for _, ok in timed)
+                           and all(r.correct for r in burst_res)),
+    }
+    lines = [
+        f"KernelService: {n_req} Zipf requests over {len(suite)} tasks, "
+        f"8 client threads (+16-deep identical burst, {burst_s:.2f}s)",
+        f"  throughput      : {m['throughput_rps']:.1f} req/s",
+        f"  latency         : p50 {m['p50_ms']:.1f} ms, "
+        f"p99 {m['p99_ms']:.1f} ms",
+        f"  coalescing      : {m['coalesced']}/{m['requests']} requests "
+        f"({100 * m['coalesce_rate']:.1f}%), "
+        f"{m['burst_coalesced']}/15 possible on the burst",
+        f"  store           : {m['store_programs']} programs, "
+        f"{m['evictions']} slab evictions "
+        f"({m['evicted_programs']} programs), "
+        f"{m['whole_store_resets']} whole-store resets, "
+        f"hot winner cached: {bool(m['hot_winner_cached'])}",
+    ]
+    return m, lines
+
+
+# ---------------------------------------------------------------------------
+# Engine stream
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs.registry import get_config, reduced
+    cfg = reduced(get_config("qwen2_5_3b"))
+    return dataclasses.replace(cfg, n_layers=2, d_model=64,
+                               vocab_size=128, true_vocab_size=128)
+
+
+def bench_engine(fast: bool) -> tuple[dict, list[str]]:
+    import jax
+    import jax.numpy as jnp
+    from repro.models import api
+    from repro.serve.engine import Engine, Request
+
+    cfg = _tiny_cfg()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 16 if fast else 48
+    rng = np.random.default_rng(1)
+
+    completions: list[float] = []
+
+    class TimedEngine(Engine):
+        def _retire(self, slot, s, pos):
+            r = slot[s]
+            was_done = r.done
+            super()._retire(slot, s, pos)
+            if r.done and not was_done:
+                completions.append(time.perf_counter())
+
+    eng = TimedEngine(cfg, params, max_len=64, batch_slots=4)
+    prompts = [jnp.asarray(rng.integers(1, 100, rng.integers(1, 12)),
+                           jnp.int32) for _ in range(n_req)]
+    reqs = [Request(p, int(rng.integers(4, 13))) for p in prompts]
+    want = [r.max_new_tokens for r in reqs]
+
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    wall = time.perf_counter() - t0
+    lats = [c - t0 for c in completions]
+
+    n_tok = sum(len(r.out) for r in reqs)
+    st = eng.stats
+    occ = st["occupancy_sum"] / max(st["decode_steps"], 1)
+    # parity gate: mixed-length batched == solo, token-identical
+    par_eng = Engine(cfg, params, max_len=64, batch_slots=4)
+    outs = par_eng.generate(prompts[:6], max_new_tokens=5)
+    parity = all(o == par_eng.generate([p], max_new_tokens=5)[0]
+                 for p, o in zip(prompts[:6], outs))
+    m = {
+        "requests": n_req,
+        "tokens": n_tok,
+        "tok_per_s": n_tok / wall,
+        "p50_ms": 1e3 * _pct(lats, 50),
+        "p99_ms": 1e3 * _pct(lats, 99),
+        "occupancy": occ,
+        "truncations": st["truncations"],
+        "budgets_met": int([len(r.out) for r in reqs] == want),
+        "parity": int(parity),
+    }
+    lines = [
+        f"Engine: {n_req} mixed-length requests (len 1-11, budgets "
+        f"4-12) through 4 slots, token-level continuous batching",
+        f"  throughput      : {m['tok_per_s']:.1f} tok/s "
+        f"({n_tok} tokens in {wall:.2f}s)",
+        f"  request latency : p50 {m['p50_ms']:.1f} ms, "
+        f"p99 {m['p99_ms']:.1f} ms",
+        f"  slot occupancy  : {100 * occ:.1f}% mean, "
+        f"{st['truncations']} truncations, budgets met: "
+        f"{bool(m['budgets_met'])}",
+        f"  parity          : batched == solo token-identical: "
+        f"{parity}",
+    ]
+    return m, lines
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke sizes")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "serve_bench.txt"))
+    ap.add_argument("--csv", default=os.path.join(RESULTS,
+                                                  "serve_bench.csv"))
+    args = ap.parse_args()
+
+    svc_m, svc_lines = bench_service(args.fast)
+    eng_m, eng_lines = bench_engine(args.fast)
+
+    text = "\n".join(svc_lines + eng_lines) + "\n"
+    print(text)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    with open(args.csv, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write(
+            f"serve/service,{1e6 / svc_m['throughput_rps']:.1f},"
+            f"coalesce_rate={svc_m['coalesce_rate']:.3f};"
+            f"evictions={svc_m['evictions']};"
+            f"resets={svc_m['whole_store_resets']};"
+            f"hot_cached={svc_m['hot_winner_cached']};"
+            f"p99_ms={svc_m['p99_ms']:.1f}\n")
+        f.write(
+            f"serve/engine,{1e6 / eng_m['tok_per_s']:.1f},"
+            f"occupancy={eng_m['occupancy']:.2f};"
+            f"parity={eng_m['parity']};"
+            f"truncations={eng_m['truncations']};"
+            f"p99_ms={eng_m['p99_ms']:.1f}\n")
+
+    failures = []
+    if svc_m["burst_coalesced"] <= 0:
+        failures.append("coalescing hit-rate is 0 on the repeated-"
+                        "request burst")
+    if not svc_m["all_correct"]:
+        failures.append("a service result failed the oracle")
+    if svc_m["evictions"] >= 1 and not svc_m["hot_winner_cached"]:
+        failures.append("slab eviction dropped the hot winner")
+    if not eng_m["parity"]:
+        failures.append("batched generation diverged from solo")
+    if not eng_m["budgets_met"]:
+        failures.append("a request missed its token budget")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

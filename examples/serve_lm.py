@@ -1,4 +1,4 @@
-"""Serve a small LM with batched requests (prefill + slot-batched decode).
+"""Serve a small LM with token-level continuous batching.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -24,8 +24,10 @@ engine = Engine(cfg, params, max_len=64, batch_slots=4)
 prompts = [jnp.array(p, jnp.int32) for p in
            [[1, 5, 3], [2, 2], [9, 8, 7, 6], [4], [10, 11, 12],
             [3, 1, 4, 1, 5]]]
-print(f"serving {len(prompts)} requests in slot groups of 4 ...")
+print(f"serving {len(prompts)} requests through 4 slots ...")
 outs = engine.generate(prompts, max_new_tokens=8)
 for p, o in zip(prompts, outs):
     print(f"  prompt {list(map(int, p))} -> {o}")
-print("done (continuous-batching-lite: groups refill as slots free up)")
+occ = engine.stats["occupancy_sum"] / max(engine.stats["decode_steps"], 1)
+print(f"done (continuous batching: freed slots refill every step; "
+      f"mean occupancy {occ:.2f})")

@@ -90,11 +90,41 @@ class TranspositionStore:
                       "cost_evals": 0, "cost_hits": 0,
                       "check_evals": 0, "check_hits": 0,
                       "check_structural": 0,
-                      "oracle_runs": 0, "oracle_hits": 0}
+                      "oracle_runs": 0, "oracle_hits": 0,
+                      "evictions": 0, "evicted_programs": 0}
+        # segmented-LRU bookkeeping for capacity eviction: a logical
+        # clock of last use and a touch count per fingerprint (entries
+        # touched more than once sit in the protected segment and are
+        # evicted after the probationary, once-touched ones)
+        self._clock = 0
+        self._last_use: dict[str, int] = {}
+        self._freq: dict[str, int] = {}
+        # refcounts of oracle-memo keys reachable from live programs
+        # (outputs key by eval-fingerprint, inputs by input-spec repr,
+        # both shared across programs): maintained at register/evict
+        # time so eviction never scans the surviving programs
+        self._eval_live: dict[str, int] = {}
+        self._input_live: dict[str, int] = {}
 
     def _bump(self, key: str) -> None:
         with self._lock:
             self.stats[key] += 1
+
+    def _touch(self, fp: str) -> None:
+        with self._lock:
+            self._clock += 1
+            self._last_use[fp] = self._clock
+            self._freq[fp] = self._freq.get(fp, 0) + 1
+
+    def _register(self, fp: str, prog: KernelProgram) -> None:
+        """Intern ``prog`` under ``fp`` and refcount its oracle keys."""
+        with self._lock:
+            if fp in self.programs:
+                return
+            self.programs[fp] = prog
+            e, i = prog.eval_fingerprint(), repr(prog.inputs)
+            self._eval_live[e] = self._eval_live.get(e, 0) + 1
+            self._input_live[i] = self._input_live.get(i, 0) + 1
 
     # -- fingerprints --------------------------------------------------------
     def fingerprint(self, prog: KernelProgram) -> str:
@@ -103,8 +133,7 @@ class TranspositionStore:
     def intern(self, prog: KernelProgram, target=None) -> str:
         """Register a program and price it; returns its fingerprint."""
         fp = self.fingerprint(prog)
-        with self._lock:
-            self.programs.setdefault(fp, prog)
+        self._register(fp, prog)
         self.cost(prog, target)
         return fp
 
@@ -115,12 +144,18 @@ class TranspositionStore:
     def cost(self, prog: KernelProgram, target=None) -> float:
         tgt = hardware.resolve(target)
         key = (self.fingerprint(prog), tgt.name)
+        self._touch(key[0])
         c = self.costs.get(key)
         if c is not None:
             self._bump("cost_hits")
             return c
         self._bump("cost_evals")
         c = cost_model.program_cost(prog, tgt).total_s
+        # register task roots too (apply() only interns children):
+        # every priced fingerprint must live in ``programs`` so LRU
+        # eviction can reclaim it — and its edges/bookkeeping —
+        # instead of leaking root-keyed entries forever
+        self._register(key[0], prog)
         with self._lock:
             self.costs[key] = c
         return c
@@ -138,20 +173,28 @@ class TranspositionStore:
         if action.kind == "stop":
             return ApplyResult("ok", prog, "terminal")
         key = (self.fingerprint(prog), action_key(action))
+        self._touch(key[0])
         hit = self.edges.get(key)
         if hit is not None:
-            self._bump("apply_hits")
             status, child_fp, detail = hit
             if status != "ok":
+                self._bump("apply_hits")
                 return ApplyResult(status, None, detail)
             # rebuild what the live coder would have produced: cached
             # structure + the ACTUAL parent's identity and history (the
             # fingerprint excludes both, so the canonical program may
             # stem from a different task or route)
-            child = self.programs[child_fp].replace(
-                name=prog.name,
-                history=prog.history + (action.describe(),))
-            return ApplyResult(status, child, detail)
+            base = self.programs.get(child_fp)
+            if base is not None:
+                self._bump("apply_hits")
+                self._touch(child_fp)
+                child = base.replace(
+                    name=prog.name,
+                    history=prog.history + (action.describe(),))
+                return ApplyResult(status, child, detail)
+            # the edge's child was LRU-evicted from under it (slab
+            # eviction drops edges with their child, but a concurrent
+            # reader can observe the gap) — fall through and recompute
         self._bump("fresh_applies")
         res = coder.apply(prog, action)
         child_fp = None
@@ -161,8 +204,8 @@ class TranspositionStore:
             # pricing here would only duplicate cost-model work for
             # non-default-target searches
             child_fp = self.fingerprint(res.program)
-            with self._lock:
-                self.programs.setdefault(child_fp, res.program)
+            self._touch(child_fp)
+            self._register(child_fp, res.program)
         with self._lock:
             self.edges[key] = (res.status, child_fp, res.detail)
         return res
@@ -204,6 +247,8 @@ class TranspositionStore:
         structurally — the oracle would compare an array with itself.
         Everything else runs through the memoized oracle."""
         key = (self.fingerprint(task), self.fingerprint(prog), seed)
+        self._touch(key[0])
+        self._touch(key[1])
         hit = self.checks.get(key)
         if hit is not None:
             self._bump("check_hits")
@@ -227,6 +272,81 @@ class TranspositionStore:
         with self._lock:
             self.checks[key] = ok
         return ok
+
+    # -- capacity: segmented-LRU slab eviction ----------------------------------
+    def evict_lru(self, keep: int, *,
+                  protect: "set[str] | frozenset[str]" = frozenset()
+                  ) -> int:
+        """Evict the coldest programs down to ``keep``, dropping their
+        cost/edge/check/oracle entries in the same slab; returns the
+        number of programs evicted.
+
+        Order is segmented LRU: probationary entries (touched once)
+        leave before protected ones (touched 2+ times), each segment
+        oldest-last-use first — so a hot working set survives a stream
+        of distinct one-shot kernels.  ``protect`` fingerprints (e.g.
+        in-flight request roots) are never evicted.  The store's
+        "pure function of key" invariant is untouched: eviction only
+        *forgets* values, never mutates them, so a later request
+        recomputes the identical entry (DESIGN.md §10).
+        """
+        with self._lock:
+            n_over = len(self.programs) - keep
+            if n_over <= 0:
+                return 0
+            victims = sorted(
+                (fp for fp in self.programs if fp not in protect),
+                key=lambda fp: (self._freq.get(fp, 0) > 1,
+                                self._last_use.get(fp, 0)))
+            drop = set(victims[:n_over])
+            if not drop:
+                return 0
+            dead_eval, dead_inputs = set(), set()
+            for fp in drop:
+                prog = self.programs.pop(fp)
+                self._last_use.pop(fp, None)
+                self._freq.pop(fp, None)
+                for refs, key, dead in (
+                        (self._eval_live, prog.eval_fingerprint(),
+                         dead_eval),
+                        (self._input_live, repr(prog.inputs),
+                         dead_inputs)):
+                    refs[key] -= 1
+                    if refs[key] == 0:
+                        del refs[key]
+                        dead.add(key)
+            self.costs = {k: v for k, v in self.costs.items()
+                          if k[0] not in drop}
+            # an ok-edge hit reconstructs its child from
+            # ``self.programs`` — edges from OR to an evicted program
+            # go in the same slab (failure edges have no child and
+            # survive with their parent)
+            self.edges = {k: v for k, v in self.edges.items()
+                          if k[0] not in drop and v[1] not in drop}
+            self.checks = {k: v for k, v in self.checks.items()
+                           if k[0] not in drop and k[1] not in drop}
+            # oracle outputs/inputs key by eval-fingerprint / input
+            # spec, shared across programs: the refcounts maintained at
+            # register time say which keys just became unreachable, so
+            # no scan of the (much larger) surviving-program set runs
+            # under the lock
+            if dead_eval:
+                self.outputs = {k: v for k, v in self.outputs.items()
+                                if k[0] not in dead_eval}
+            if dead_inputs:
+                self.inputs = {k: v for k, v in self.inputs.items()
+                               if k[0] not in dead_inputs}
+            # LRU bookkeeping can hold fingerprints that were touched
+            # but never interned (e.g. a checked-but-never-priced
+            # task): sweep it down to live programs so it stays
+            # bounded by the cap too
+            self._last_use = {f: t for f, t in self._last_use.items()
+                              if f in self.programs}
+            self._freq = {f: c for f, c in self._freq.items()
+                          if f in self.programs}
+            self.stats["evictions"] += 1
+            self.stats["evicted_programs"] += len(drop)
+            return len(drop)
 
     # -- reporting -------------------------------------------------------------
     @property

@@ -124,9 +124,16 @@ class BeamSearch(SearchStrategy):
     """Width-`w` frontier over macro actions with a greedy backbone.
 
     Each depth expands every frontier program and keeps the `width`
-    cheapest *distinct* children (dedup by fingerprint across the whole
-    search — siblings frequently commute into the same program, and the
-    store's transposition property makes the dedup exact).  Children are
+    cheapest *distinct* children (dedup by fingerprint within the depth
+    — siblings frequently commute into the same program, and the
+    store's transposition property makes the dedup exact).  Only
+    programs the frontier actually admits (and therefore expands next
+    depth) are marked consumed: a child dropped by the width or
+    ``per_parent`` cap stays rediscoverable from a different parent at
+    a later depth, where its subtree may hold the global best —
+    marking every priced child used to foreclose those routes
+    permanently (regression-tested cap-collision graph in
+    ``tests/test_search.py``).  Children are
     kept even when no child beats its parent, so the beam walks through
     plateaus and sub-0.1% improvements where greedy stops.  At most
     ``per_parent`` children of the same frontier state survive a depth:
@@ -156,29 +163,32 @@ class BeamSearch(SearchStrategy):
         best_depth = backbone.steps
         n_exp, n_fail = backbone.n_expanded, backbone.n_failures
         frontier = [(base, task)]
-        seen = {task.fingerprint()}
+        expanded = {task.fingerprint()}   # programs the beam has expanded
         for depth in range(max_steps):
-            pool = []
+            pool, depth_fps = [], set()
             for pi, (_, prog) in enumerate(frontier):
                 children, fails = self._children(store, coder, prog,
                                                  curated)
                 n_fail += fails
                 for _, ch in children:
                     fp = ch.fingerprint()
-                    if fp in seen:
+                    if fp in expanded or fp in depth_fps:
                         continue
-                    seen.add(fp)
+                    depth_fps.add(fp)
                     n_exp += 1
                     pool.append((store.cost(ch, tgt), fp, pi, ch))
             if not pool:
                 break
             pool.sort(key=lambda e: (e[0], e[1]))   # cost, then fp tiebreak
             frontier, taken = [], {}
-            for c, _, pi, ch in pool:
+            for c, fp, pi, ch in pool:
                 if taken.get(pi, 0) >= self.per_parent:
                     continue
                 taken[pi] = taken.get(pi, 0) + 1
                 frontier.append((c, ch))
+                # only frontier-admitted programs are consumed; children
+                # the caps dropped may re-enter later via another parent
+                expanded.add(fp)
                 if len(frontier) >= self.width:
                     break
             if frontier[0][0] < best_c:

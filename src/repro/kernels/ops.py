@@ -96,11 +96,16 @@ def set_default_chunk(c: int) -> None:
 
 
 def attention(q, k, v, *, causal=True, window=0, q_offset=0,
-              bidir_prefix=0, chunk=None):
-    """Flash attention (Pallas on TPU) / chunked online-softmax ref."""
+              bidir_prefix=0, chunk=None, kv_mask=None):
+    """Flash attention (Pallas on TPU) / chunked online-softmax ref.
+
+    kv_mask (B,Sk) marks valid key positions (mixed-length left-padded
+    prefill); the Pallas kernel has no mask operand, so a masked call
+    takes the reference path."""
     if chunk is None:
         chunk = _DEFAULT_CHUNK
-    if use_pallas() and bidir_prefix == 0 and q.shape[1] >= 128:
+    if use_pallas() and bidir_prefix == 0 and kv_mask is None \
+            and q.shape[1] >= 128:
         from repro.kernels import flash_attention as fa
         sched = get_schedule("flash_attention", f"S{q.shape[1]}")
         return fa.flash_attention(q, k, v, causal=causal, window=window,
@@ -108,11 +113,11 @@ def attention(q, k, v, *, causal=True, window=0, q_offset=0,
                                   interpret=interpret())
     return _ref_attention(q, k, v, causal=causal, window=window,
                           q_offset=q_offset, bidir_prefix=bidir_prefix,
-                          chunk=chunk)
+                          chunk=chunk, kv_mask=kv_mask)
 
 
 def _ref_attention(q, k, v, *, causal, window, q_offset, bidir_prefix,
-                   chunk):
+                   chunk, kv_mask=None):
     if bidir_prefix:
         # PaliGemma-style prefix-LM mask: keys < prefix are always visible.
         scale = q.shape[-1] ** -0.5
@@ -126,15 +131,20 @@ def _ref_attention(q, k, v, *, causal, window, q_offset, bidir_prefix,
         if window:
             mask &= (kpos[None, :] > qpos[:, None] - window) | \
                 (kpos[None, :] < bidir_prefix)
+        if kv_mask is not None:
+            mask = mask[None] & kv_mask[:, None, :]
+            mask = mask[:, None, None]            # (B,1,1,Sq,Sk)
         scores = jnp.where(mask, scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
         return layers._gqa_out(probs, v)
     return layers.attention(q, k, v, causal=causal, window=window,
-                            q_offset=q_offset, chunk=chunk)
+                            q_offset=q_offset, chunk=chunk,
+                            kv_mask=kv_mask)
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, window=0):
-    return layers.decode_attention(q, k_cache, v_cache, pos, window=window)
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, start=None):
+    return layers.decode_attention(q, k_cache, v_cache, pos,
+                                   window=window, start=start)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Serving launcher.
+"""Serving launcher: continuous-batching demo over mixed-length prompts.
 
   python -m repro.launch.serve --arch qwen2_5_3b --reduced --requests 8
 """
@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config, reduced
 from repro.models import api
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, Request
 
 
 def main():
@@ -20,6 +20,10 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="optional EOS token id applied to every request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -30,14 +34,24 @@ def main():
                          f"{cfg.family} decodes via its serve_step "
                          f"(see launch/dryrun.py decode cells)")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_len=64, batch_slots=4)
+    engine = Engine(cfg, params, max_len=args.max_len,
+                    batch_slots=args.slots, eos_id=args.eos)
     key = jax.random.PRNGKey(1)
-    prompts = [jax.random.randint(jax.random.fold_in(key, i),
-                                  (3 + i % 4,), 1, 100, jnp.int32)
-               for i in range(args.requests)]
-    outs = engine.generate(prompts, max_new_tokens=args.max_new)
-    for i, o in enumerate(outs):
-        print(f"req{i}: {o}")
+    reqs = [Request(jax.random.randint(jax.random.fold_in(key, i),
+                                       (3 + i % 4,), 1, 100, jnp.int32),
+                    max_new_tokens=args.max_new + i % 3,
+                    eos_id=args.eos)
+            for i in range(args.requests)]
+    engine.run(reqs)
+    for i, r in enumerate(reqs):
+        trunc = " [truncated]" if r.truncated else ""
+        print(f"req{i} (len {len(r.prompt)}, budget "
+              f"{r.max_new_tokens}): {r.out}{trunc}")
+    st = engine.stats
+    occ = st["occupancy_sum"] / max(st["decode_steps"], 1)
+    print(f"steps={st['decode_steps']} tokens={st['decode_tokens']} "
+          f"prefills={st['prefills']} occupancy={occ:.2f} "
+          f"truncations={st['truncations']}")
 
 
 if __name__ == "__main__":

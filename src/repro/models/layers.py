@@ -92,17 +92,21 @@ def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int = 0,
               q_offset: int | jax.Array = 0,
-              chunk: int = 0) -> jax.Array:
+              chunk: int = 0, kv_mask: jax.Array | None = None) -> jax.Array:
     """Masked multi-head attention with GQA grouping.
 
     window > 0 => sliding-window mask (local attention).
     chunk > 0  => online-softmax over query chunks (memory-bounded: used
     for long prefill and as the XLA-level 'flash' fallback of the Pallas
     kernel).  q_offset is the absolute position of q[0] (decode/prefill).
+    kv_mask (B,Sk) bool marks which key/value positions are valid: pad
+    positions of a left-padded mixed-length batch are masked out so
+    shorter rows never attend to their padding.
     """
     if chunk and q.shape[1] > chunk and q.shape[1] % chunk == 0:
         return _chunked_attention(q, k, v, causal=causal, window=window,
-                                  q_offset=q_offset, chunk=chunk)
+                                  q_offset=q_offset, chunk=chunk,
+                                  kv_mask=kv_mask)
     scale = q.shape[-1] ** -0.5
     scores = _gqa_scores(q * scale, k)                  # (B,KV,G,Sq,Sk) f32
     sq, sk = scores.shape[-2], scores.shape[-1]
@@ -112,6 +116,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if causal:
         mask &= qpos[:, None] >= kpos[None, :]
     mask = _apply_window(mask, qpos, kpos, window)
+    if kv_mask is not None:
+        # (B,Sk) -> (B,1,1,Sq,Sk) against the (Sq,Sk) structural mask
+        mask = mask[None, None, None] & \
+            kv_mask[:, None, None, None, :]
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     return _gqa_out(probs, v)
@@ -129,7 +137,8 @@ def _apply_window(mask, qpos, kpos, window):
     return mask & wm
 
 
-def _chunked_attention(q, k, v, *, causal, window, q_offset, chunk):
+def _chunked_attention(q, k, v, *, causal, window, q_offset, chunk,
+                       kv_mask=None):
     b, sq, h, hd = q.shape
     nc = sq // chunk
     qc = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
@@ -138,7 +147,7 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, chunk):
         i, = carry
         off = q_offset + i * chunk
         o = attention(q_i, k, v, causal=causal, window=window,
-                      q_offset=off, chunk=0)
+                      q_offset=off, chunk=0, kv_mask=kv_mask)
         return (i + 1,), o
 
     _, out = jax.lax.scan(body, (jnp.int32(0),), qc)
@@ -146,23 +155,33 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, chunk):
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+                     pos: jax.Array, *, window: int = 0,
+                     start: jax.Array | None = None) -> jax.Array:
     """Single-step attention against a KV cache.
 
-    q: (B,1,H,hd); caches: (B,S,KV,hd); pos: scalar index of the new token.
+    q: (B,1,H,hd); caches: (B,S,KV,hd); pos: index of the new token —
+    a scalar shared by the whole batch, or a (B,) vector of per-row
+    positions (continuous batching: every slot decodes at its own
+    depth).  start (scalar or (B,)) masks cache positions below it
+    (left-padded prefills park garbage K/V there); freed/idle slots are
+    likewise fenced by their own pos, since rows never read each
+    other's cache lines.
     """
     scale = q.shape[-1] ** -0.5
     scores = _gqa_scores(q * scale, k_cache)            # (B,KV,G,1,S)
     s = k_cache.shape[1]
     kpos = jnp.arange(s)
-    mask = kpos <= pos
+    p = jnp.reshape(pos, (-1, 1))                       # (1,1) or (B,1)
+    mask = kpos <= p                                    # (1|B, S)
+    if start is not None:
+        mask &= kpos >= jnp.reshape(start, (-1, 1))
     if isinstance(window, int):
         if window:
-            mask &= kpos > (pos - window)
+            mask &= kpos > (p - window)
     else:
         w = jnp.asarray(window)
-        mask &= (kpos > (pos - w)) | (w == 0)
-    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+        mask &= (kpos > (p - w)) | (w == 0)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
     return _gqa_out(probs, v_cache)
 

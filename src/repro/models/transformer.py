@@ -178,7 +178,7 @@ def _pin_bf16(delta: jax.Array, rules) -> jax.Array:
 
 
 def make_block_fn(cfg: ModelConfig, *, rules=None, bidir_prefix=0,
-                  remat=True, collect_cache=False):
+                  remat=True, collect_cache=False, pad_mask=None):
 
     def block(x, scanned):
         p, idx = scanned
@@ -201,7 +201,7 @@ def make_block_fn(cfg: ModelConfig, *, rules=None, bidir_prefix=0,
             k = rules.constrain(k, ("batch", None, "kv_heads", None))
             v = rules.constrain(v, ("batch", None, "kv_heads", None))
         o = ops.attention(q, k, v, causal=True, window=window,
-                          bidir_prefix=bidir_prefix)
+                          bidir_prefix=bidir_prefix, kv_mask=pad_mask)
         x = x + _pin_bf16(linear(o.reshape(B, S, H * hd), p["wo"]),
                           rules)
         delta, aux = mlp_block(cfg, p, x, rules)
@@ -218,8 +218,13 @@ def make_block_fn(cfg: ModelConfig, *, rules=None, bidir_prefix=0,
 
 
 def forward(cfg: ModelConfig, params: dict, batch: dict, *, rules=None,
-            remat: bool = True, collect_cache: bool = False):
-    """batch: {'tokens': (B,S)[, 'prefix_embeds': (B,P,D)]}."""
+            remat: bool = True, collect_cache: bool = False,
+            pad_mask=None):
+    """batch: {'tokens': (B,S)[, 'prefix_embeds': (B,P,D)]}.
+
+    pad_mask (B,S) bool marks real (non-pad) tokens; pad key/value
+    positions are masked out of every attention so mixed-length
+    left-padded rows match their solo forward."""
     tokens = batch["tokens"]
     prefix_embeds = batch.get("prefix_embeds")
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -232,7 +237,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, rules=None,
     if rules is not None:
         x = rules.constrain(x, ("batch", None, None))
     block = make_block_fn(cfg, rules=rules, bidir_prefix=bidir,
-                          remat=remat, collect_cache=collect_cache)
+                          remat=remat, collect_cache=collect_cache,
+                          pad_mask=pad_mask)
     idxs = jnp.arange(cfg.n_layers)
     x, ys = jax.lax.scan(block, x, (params["blocks"], idxs))
     x = ops.rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
@@ -264,8 +270,15 @@ def cache_tree(cfg: ModelConfig, make, batch: int, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params: dict, cache: dict,
-                tokens: jax.Array, pos: jax.Array, *, rules=None):
-    """One-token decode: tokens (B,1), pos scalar -> (logits, new_cache)."""
+                tokens: jax.Array, pos: jax.Array, *, rules=None,
+                start: jax.Array | None = None):
+    """One-token decode: tokens (B,1) -> (logits, new_cache).
+
+    pos is the write/attend position of the new token — a scalar shared
+    by the whole batch (lockstep decode), or a (B,) vector of per-slot
+    positions (continuous batching: each slot is at its own depth).
+    start (scalar or (B,)) fences off cache positions below it, for
+    caches prefilled with a left-pad offset."""
     cdt = jnp.dtype(cfg.compute_dtype)
     B = tokens.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -274,7 +287,9 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
         x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
     if rules is not None:
         x = rules.constrain(x, ("batch", None, None))
-    positions = jnp.full((1,), pos)
+    pos = jnp.asarray(pos)
+    vector_pos = pos.ndim == 1
+    positions = pos[:, None] if vector_pos else jnp.full((1,), pos)
 
     def block(x, scanned):
         p, idx, ck, cv = scanned
@@ -288,14 +303,19 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
             k = rms_norm(k, p["k_norm"], cfg.norm_eps)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, pos, 0, 0))
+        if vector_pos:
+            ck = ck.at[jnp.arange(B), pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[jnp.arange(B), pos].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, pos, 0, 0))
         if rules is not None:
             ck = rules.constrain(ck, ("batch", "kv_seq", "kv_heads", None))
             cv = rules.constrain(cv, ("batch", "kv_seq", "kv_heads", None))
-        o = ops.decode_attention(q, ck, cv, pos, window=window)
+        o = ops.decode_attention(q, ck, cv, pos, window=window,
+                                 start=start)
         x = x + linear(o.reshape(B, 1, H * hd), p["wo"])
         delta, _ = mlp_block(cfg, p, x, rules)
         x = x + delta

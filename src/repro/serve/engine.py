@@ -1,15 +1,23 @@
-"""Serving engine: prefill + decode with slot-based continuous batching.
+"""Serving engine: prefill + token-level continuous-batching decode.
 
-``serve_step`` (one token for the whole batch against a KV cache) is the
-function the decode_* / long_* dry-run cells lower.  The Engine below runs
-real generation for the examples/tests (transformer families; rwkv/hymba
-decode through their own cache trees).
+``make_serve_step`` (one token for the whole batch against a KV cache)
+is the function the decode_* / long_* dry-run cells lower.  ``Engine``
+below runs real generation for the examples/tests (transformer
+families; rwkv/hymba decode through their own cache trees), and
+``KernelService`` is kernel-optimization-as-a-service on top of
+``core.engine`` with request coalescing and segmented-LRU store
+eviction.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures as cf
 import dataclasses
+import threading
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
@@ -18,19 +26,38 @@ from repro.models import api
 def make_serve_step(cfg: ModelConfig, *, rules=None):
     model = api.get_model(cfg)
 
-    def serve_step(params, cache, tokens, pos):
+    def serve_step(params, cache, tokens, pos, start=None):
+        # ``start`` fences cache positions below it (left-padded
+        # prefills); only the transformer families take it, and only
+        # when the caller passes one
+        kw = {} if start is None else {"start": start}
         return model.decode_step(cfg, params, cache, tokens, pos,
-                                 rules=rules)
+                                 rules=rules, **kw)
     return serve_step
 
 
-def prefill_transformer(cfg: ModelConfig, params, tokens, max_len: int):
-    """Run the prompt through forward(collect_cache) and build a cache."""
+def prefill_transformer(cfg: ModelConfig, params, tokens, max_len: int,
+                        lengths=None):
+    """Run the prompt through forward(collect_cache) and build a cache.
+
+    ``tokens`` is (B, S) with prompts right-aligned (left-padded).  For
+    mixed-length batches pass ``lengths`` (B,): pad positions are then
+    masked out of the prefill attention.  Without the mask, pad keys
+    and values both contaminate the prefill logits of shorter rows AND
+    sit live in cache positions ``0..S-1``, where an unfenced decode
+    attends to them — the classic mixed-length corruption.  Decode
+    after a masked prefill must fence the cache with
+    ``serve_step(..., start=S - lengths)``.
+    """
     from repro.models import transformer
-    logits, aux, (ks, vs) = transformer.forward(
-        cfg, params, {"tokens": tokens}, remat=False, collect_cache=True)
     B, S = tokens.shape
-    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    pad_mask = None
+    if lengths is not None:
+        lengths = jnp.asarray(lengths)
+        pad_mask = jnp.arange(S)[None, :] >= (S - lengths)[:, None]
+    logits, aux, (ks, vs) = transformer.forward(
+        cfg, params, {"tokens": tokens}, remat=False, collect_cache=True,
+        pad_mask=pad_mask)
     cache = api.init_cache(cfg, B, max_len)
     k = jax.lax.dynamic_update_slice(
         cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
@@ -43,54 +70,167 @@ def prefill_transformer(cfg: ModelConfig, params, tokens, max_len: int):
 class Request:
     prompt: jnp.ndarray           # (S,) int32
     max_new_tokens: int = 16
+    eos_id: int | None = None     # per-request EOS (None: never stops)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False       # hit max_len before max_new_tokens
 
 
 class Engine:
-    """Slot-based batched generation for dense transformer families."""
+    """Token-level continuous batching for dense transformer families.
+
+    One persistent KV cache of ``batch_slots`` rows; every request owns
+    one slot for its lifetime.  Each scheduler step (a) refills freed
+    slots from the queue — a joining request is prefilled solo (B=1,
+    right-padded to a power-of-two length bucket, so no left-pad ever
+    enters the cache) and its K/V rows are written into the slot — and
+    (b) runs ONE batched decode step with per-slot positions: slots at
+    different depths decode together, the per-slot attention mask
+    (``kpos <= pos[slot]``) fences each row to its own written cache
+    prefix, so freed/stale slot contents are never attended.  Requests
+    retire individually on their own EOS / token budget / cache-full
+    (reported via ``Request.truncated``) and their slot refills on the
+    very next step — no group barrier.  Per-slot decode is
+    mathematically independent across rows, so batched output is
+    token-identical to per-prompt solo generation (tier-1 parity test).
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 128,
-                 batch_slots: int = 4, greedy: bool = True):
+                 batch_slots: int = 4, greedy: bool = True,
+                 eos_id: int | None = None):
         assert cfg.family in ("dense", "moe", "vlm")
+        if not greedy:
+            raise NotImplementedError(
+                "only greedy decoding is implemented; sampling would "
+                "need per-slot RNG state threaded through run()")
         self.cfg, self.params = cfg, params
         self.max_len, self.slots = max_len, batch_slots
         self.greedy = greedy
-        self.serve_step = jax.jit(make_serve_step(cfg))
+        self.eos_id = eos_id
+        # the cache is rebound from the return value every step and
+        # never aliased, so donating it avoids an O(cache) copy per
+        # generated token
+        self.serve_step = jax.jit(make_serve_step(cfg),
+                                  donate_argnums=1)
 
+        def _prefill(params, toks):
+            from repro.models import transformer
+            logits, _, (ks, vs) = transformer.forward(
+                cfg, params, {"tokens": toks}, remat=False,
+                collect_cache=True)
+            return logits, ks, vs
+        self._prefill = jax.jit(_prefill)
+
+        def _insert(cache, ks, vs, slot):
+            # one fused in-place row write (the cache buffer is
+            # donated): un-jitted .at[].set here would copy the whole
+            # (L, slots, max_len, KV, hd) cache twice per admission
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], ks.astype(cache["k"].dtype),
+                (0, slot, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], vs.astype(cache["v"].dtype),
+                (0, slot, 0, 0, 0))
+            return {"k": k, "v": v}
+        self._insert = jax.jit(_insert, donate_argnums=0)
+        self.stats = {"prefills": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "completed": 0,
+                      "truncations": 0, "occupancy_sum": 0.0}
+
+    # -- public API ----------------------------------------------------------
     def generate(self, prompts: list[jnp.ndarray],
                  max_new_tokens: int = 16) -> list[list[int]]:
-        """Static batching within slot groups (continuous batching lite:
-        new prompts join as finished ones free their slot group)."""
-        results: list[list[int]] = []
-        queue = list(prompts)
-        while queue:
-            group = queue[:self.slots]
-            queue = queue[self.slots:]
-            results.extend(self._generate_group(group, max_new_tokens))
-        return results
+        """Continuous batching: queued prompts join the running batch as
+        slots free, one request at a time."""
+        reqs = [Request(p, max_new_tokens, self.eos_id) for p in prompts]
+        self.run(reqs)
+        return [r.out for r in reqs]
 
-    def _generate_group(self, prompts, max_new):
-        B = len(prompts)
-        S = max(len(p) for p in prompts)
-        toks = jnp.stack([jnp.pad(p, (S - len(p), 0)) for p in prompts])
-        logits, cache = prefill_transformer(self.cfg, self.params, toks,
-                                            self.max_len)
-        last = logits[:, -1]
-        outs = [[] for _ in range(B)]
-        pos = S
-        for _ in range(max_new):
-            nxt = jnp.argmax(last, -1).astype(jnp.int32) if self.greedy \
-                else None
-            for b in range(B):
-                outs[b].append(int(nxt[b]))
-            logits, cache = self.serve_step(
-                self.params, cache, nxt[:, None], jnp.int32(pos))
-            last = logits[:, -1]
-            pos += 1
-            if pos >= self.max_len:
-                break
-        return outs
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Drive every request to completion; returns the same list with
+        ``out``/``done``/``truncated`` filled in."""
+        B = self.slots
+        cache = api.init_cache(self.cfg, B, self.max_len)
+        queue = collections.deque(requests)
+        slot: list[Request | None] = [None] * B
+        pos = np.zeros(B, np.int64)       # next write position per slot
+        pending = np.zeros(B, np.int64)   # next input token per slot
+        while queue or any(r is not None for r in slot):
+            for s in range(B):
+                if slot[s] is not None or not queue:
+                    continue
+                r = queue.popleft()
+                if r.max_new_tokens <= 0:
+                    r.done = True
+                    self.stats["completed"] += 1
+                    continue
+                cache, first = self._admit(cache, s, r)
+                slot[s] = r
+                pos[s] = min(len(np.asarray(r.prompt)), self.max_len - 1)
+                pending[s] = first
+                r.out.append(first)
+                self._retire(slot, s, pos)
+            active = [s for s in range(B) if slot[s] is not None]
+            if not active:
+                continue
+            toks = jnp.asarray(pending[:, None], jnp.int32)
+            posv = jnp.asarray(np.minimum(pos, self.max_len - 1),
+                               jnp.int32)
+            logits, cache = self.serve_step(self.params, cache, toks,
+                                            posv)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(active)
+            self.stats["occupancy_sum"] += len(active) / B
+            for s in active:
+                pos[s] += 1
+                pending[s] = int(nxt[s])
+                slot[s].out.append(int(nxt[s]))
+                self._retire(slot, s, pos)
+        return requests
+
+    # -- scheduler internals -------------------------------------------------
+    def _admit(self, cache, s: int, r: Request):
+        """Solo-prefill ``r`` and write its K/V rows into slot ``s``.
+
+        The prompt is RIGHT-padded to a power-of-two bucket (bounded
+        recompiles): under causal attention the real tokens never see
+        the tail pad, and the pad K/V written past the prompt length
+        are overwritten by decode before any step attends that far —
+        so no mask is needed and the slot is bit-identical to a solo
+        prefill."""
+        p = np.asarray(r.prompt)
+        if len(p) >= self.max_len:        # leave room for >= 1 token
+            r.truncated = True
+            p = p[: self.max_len - 1]
+        n = len(p)
+        bucket = 1
+        while bucket < n:
+            bucket *= 2
+        bucket = min(bucket, self.max_len)
+        toks = jnp.asarray(np.pad(p, (0, bucket - n)), jnp.int32)[None]
+        logits, ks, vs = self._prefill(self.params, toks)
+        # the whole bucket row is written, pad K/V included: decode
+        # overwrites position p before any step attends p, so the tail
+        # pad (like a freed slot's stale lines) is never read
+        cache = self._insert(cache, ks, vs, jnp.int32(s))
+        self.stats["prefills"] += 1
+        return cache, int(jnp.argmax(logits[0, n - 1]))
+
+    def _retire(self, slot, s: int, pos) -> None:
+        r = slot[s]
+        if r.eos_id is not None and r.out and r.out[-1] == r.eos_id:
+            r.done = True
+        if len(r.out) >= r.max_new_tokens:
+            r.done = True
+        elif pos[s] >= self.max_len and not r.done:
+            # the cache is full mid-request: surface it instead of
+            # silently breaking the whole group (the old lockstep bug)
+            r.done = r.truncated = True
+            self.stats["truncations"] += 1
+        if r.done:
+            slot[s] = None
+            self.stats["completed"] += 1
 
 
 class KernelService:
@@ -100,13 +240,25 @@ class KernelService:
     or similar optimization requests (the common case in production —
     many users submitting the same hot kernels) hit cached rewrites,
     cost pricing and oracle checks instead of redoing the search
-    substrate.  Same cache the batched benchmark evaluator uses.
+    substrate.  Two production behaviours on top (DESIGN.md §10):
+
+    * **Request coalescing** — concurrent identical requests (same
+      ``(task fingerprint, target, seed)``) share ONE in-flight search
+      through a futures map: ``submit()`` returns the already-running
+      future instead of spawning a duplicate; ``stats()["coalesced"]``
+      counts the joins.
+    * **Segmented-LRU slab eviction** — past ``max_programs`` the store
+      evicts its coldest fingerprints (and their cost/edge/check/oracle
+      entries) in slabs instead of being dropped wholesale, so a hot
+      working set never cold-starts under sustained distinct-kernel
+      traffic.  In-flight request roots are never evicted.
     """
 
     def __init__(self, policy=None, *, mode: str = "greedy_cost",
                  max_steps: int = 8, workers: int = 0, store=None,
                  max_programs: int = 200_000, target=None,
-                 strategy: str | None = None):
+                 strategy: str | None = None, serve_workers: int = 4,
+                 evict_slab: int | None = None):
         from repro.core import hardware
         from repro.core.engine import EvalEngine, TranspositionStore
         self.store = store if store is not None else TranspositionStore()
@@ -121,28 +273,78 @@ class KernelService:
                                   strategy=strategy)
         # capacity bound: the store never invalidates for correctness
         # (all entries are pure functions of their keys) but a server
-        # fed a stream of DISTINCT kernels grows without bound — drop
-        # and recreate wholesale past the cap
+        # fed a stream of DISTINCT kernels grows without bound — evict
+        # the coldest slab past the cap (never the whole store)
         self.max_programs = max_programs
+        self.evict_slab = evict_slab if evict_slab is not None else \
+            max(1, max_programs // 8)
         self.n_requests = 0
-        self.n_store_resets = 0
+        self.n_coalesced = 0
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, cf.Future] = {}
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=max(1, serve_workers),
+            thread_name_prefix="kernel-svc")
 
+    # -- async request path --------------------------------------------------
+    def _key(self, task, seed, target) -> tuple:
+        from repro.core import hardware
+        tgt = self.target if target is None else hardware.resolve(target)
+        # None stays None (engine default seed): collapsing it onto an
+        # integer sentinel would coalesce it with a real seed request
+        return (task.fingerprint(), tgt.name,
+                None if seed is None else int(seed))
+
+    def submit(self, task, seed: int | None = None,
+               target=None) -> cf.Future:
+        """Enqueue one optimize request; returns a Future resolving to
+        its ``OptimizationResult``.  An identical in-flight request is
+        joined rather than re-searched (coalescing)."""
+        key = self._key(task, seed, target)
+        with self._lock:
+            fut = self._inflight.get(key)
+            self.n_requests += 1
+            if fut is not None:
+                self.n_coalesced += 1
+                return fut
+            fut = self._pool.submit(self._serve_one, key, task, seed,
+                                    target)
+            self._inflight[key] = fut
+            return fut
+
+    def result(self, fut: cf.Future, timeout: float | None = None):
+        return fut.result(timeout)
+
+    def _serve_one(self, key, task, seed, target):
+        try:
+            self._maybe_evict()
+            return self._engine.optimize(task, seed, target=target)
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    # -- capacity ------------------------------------------------------------
     def _maybe_evict(self) -> None:
-        if len(self.store.programs) > self.max_programs:
-            from repro.core.engine import TranspositionStore
-            self.store = TranspositionStore()
-            self._engine.store = self.store
-            self.n_store_resets += 1
+        if len(self.store.programs) <= self.max_programs:
+            return
+        with self._lock:
+            protect = {k[0] for k in self._inflight}
+        self.store.evict_lru(
+            keep=max(self.max_programs - self.evict_slab, 0),
+            protect=protect)
 
+    # -- sync entry points ---------------------------------------------------
     def optimize(self, task, seed: int | None = None, target=None):
         """One request -> OptimizationResult (cached substrate).
 
         ``target`` prices this request against a different registered
         chip; transitions/oracle entries are shared with every other
-        target's requests (only cost memos are per-target)."""
-        self.n_requests += 1
-        self._maybe_evict()
-        return self._engine.optimize(task, seed, target=target)
+        target's requests (only cost memos are per-target).  Runs
+        through ``submit`` so identical concurrent callers coalesce."""
+        return self.result(self.submit(task, seed, target))
 
     def optimize_install(self, task, kernel: str, key: str, *,
                          seed: int | None = None, target=None):
@@ -168,5 +370,6 @@ class KernelService:
 
     def stats(self) -> dict:
         return dict(self.store.stats_dict(), requests=self.n_requests,
-                    store_resets=self.n_store_resets,
+                    coalesced=self.n_coalesced,
+                    inflight=len(self._inflight),
                     target=self.target.name)

@@ -122,14 +122,69 @@ def test_store_hit_preserves_caller_identity():
     assert c1.fingerprint() == c2.fingerprint()
 
 
-def test_kernel_service_store_cap_resets():
+def test_kernel_service_slab_eviction_keeps_hot_entries():
+    """Past the cap the service evicts cold slabs, never the whole
+    store: the hot fingerprint (and its cached search substrate)
+    survives a sustained stream of distinct kernels."""
     from repro.serve.engine import KernelService
-    svc = KernelService(mode="greedy_cost", max_steps=2, max_programs=5)
-    first = svc.optimize(T.kb_level1()[0])          # interns > 5 programs
-    assert len(svc.store.programs) > 5
-    svc.optimize(T.kb_level1()[1])                  # triggers the reset
-    assert svc.stats()["store_resets"] >= 1
+    svc = KernelService(mode="greedy_cost", max_steps=2,
+                        max_programs=60, evict_slab=15, serve_workers=1)
+    hot = T.kb_level2()[0]
+    first = svc.optimize(hot)
     assert first.correct
+    hot_fp = first.program.fingerprint()            # the hot winner
+    for task in T.kb_level1() + T.kb_level3():      # distinct cold traffic
+        svc.optimize(hot)                           # keep the hot set warm
+        svc.optimize(task)
+    st = svc.stats()
+    assert st["evictions"] >= 1
+    assert st["evicted_programs"] >= 1
+    assert "store_resets" not in st                 # wholesale reset is gone
+    assert hot_fp in svc.store.programs             # hot survived the slabs
+    # the hot request's whole substrate survived too: a repeat is fully
+    # cached (zero fresh rewrites), unlike the old drop-wholesale reset
+    fresh = svc.stats()["fresh_applies"]
+    again = svc.optimize(hot)
+    assert svc.stats()["fresh_applies"] == fresh
+    assert again.speedup == first.speedup
+    # eviction (at request admission) keeps the store bounded: the cap
+    # is re-imposed before each search, never the whole store dropped
+    assert len(svc.store.programs) <= 60
+
+
+def test_kernel_service_coalesces_concurrent_identical_requests():
+    """N concurrent identical submits -> ONE fresh search, one shared
+    result object, stats counting the joins."""
+    import threading
+    from repro.serve.engine import KernelService
+    svc = KernelService(mode="greedy_cost", max_steps=3,
+                        serve_workers=4)
+    task = T.kb_level2()[0]
+    gate = threading.Event()
+    calls = []
+    inner = svc._engine.optimize
+
+    def gated_optimize(task, seed=None, target=None):
+        calls.append(1)
+        assert gate.wait(timeout=60)
+        return inner(task, seed, target=target)
+
+    svc._engine.optimize = gated_optimize
+    futs = [svc.submit(task) for _ in range(6)]     # all while in-flight
+    gate.set()
+    results = [svc.result(f, timeout=120) for f in futs]
+    assert len(calls) == 1                          # one fresh search
+    assert len({id(r) for r in results}) == 1       # shared result
+    assert results[0].correct
+    st = svc.stats()
+    assert st["coalesced"] == 5
+    assert st["requests"] == 6
+    assert st["inflight"] == 0
+    # after the in-flight window closes, an identical request is a new
+    # search against a warm store (cached substrate, not coalesced)
+    r2 = svc.optimize(task)
+    assert svc.stats()["coalesced"] == 5
+    assert r2.speedup == results[0].speedup
 
 
 def test_max_steps_zero_returns_baseline():

@@ -68,6 +68,61 @@ def test_greedy_matches_greedy_cost_mode():
             1e-12 * max(out.cost_s, 1e-30), task.name
 
 
+def test_beam_cap_collision_keeps_dropped_children_rediscoverable():
+    """Regression: ``BeamSearch`` marked every priced child as seen even
+    when the width/per_parent caps then dropped it from the frontier,
+    permanently blocking rediscovery of that program via another path
+    at a later depth.  On this crafted graph the global best sits in
+    the subtree of a depth-1 cap casualty that only a depth-3 detour
+    can re-reach:
+
+        R(10) -> A(5)   -> C(5.5) -> B      (rediscovery route)
+              -> B(6)   -> D(1)            (global best; B dropped at
+                                             depth 1 by width=1)
+    """
+    from repro.core import search as S
+    from repro.core.micro_coding import ApplyResult
+
+    class _Prog:
+        def __init__(self, name):
+            self.name = name
+
+        def fingerprint(self):
+            return self.name
+
+    costs = {"R": 10.0, "A": 5.0, "B": 6.0, "C": 5.5, "D": 1.0}
+    edges = {("R", "a"): "A", ("R", "b"): "B", ("A", "c"): "C",
+             ("C", "b2"): "B", ("B", "d"): "D"}
+    acts = {"R": ["a", "b"], "A": ["c"], "C": ["b2"], "B": ["d"],
+            "D": []}
+    progs = {n: _Prog(n) for n in costs}
+
+    class _Store:          # duck-typed: search only needs apply/cost
+        def apply(self, coder, prog, action):
+            child = edges.get((prog.name, action.region))
+            if child is None:
+                return ApplyResult("compile_error", None, "no edge")
+            return ApplyResult("ok", progs[child], "")
+
+        def cost(self, prog, target=None):
+            return costs[prog.name]
+
+    store = _Store()
+    real_cands = S.A.candidate_actions
+    S.A.candidate_actions = lambda prog: [
+        S.A.Action("tiling", r, ()) for r in acts[prog.name]]
+    try:
+        g = GreedySearch().search(progs["R"], coder=None, store=store,
+                                  max_steps=4)
+        b = BeamSearch(width=1, per_parent=2).search(
+            progs["R"], coder=None, store=store, max_steps=4)
+    finally:
+        S.A.candidate_actions = real_cands
+    assert g.cost_s == 5.0               # greedy stalls at A's plateau
+    assert b.cost_s == 1.0               # beam re-reaches B, finds D
+    assert b.program.name == "D"
+
+
 def test_anneal_restart_zero_is_greedy():
     task = T.kb_level2()[0]
     a = AnnealedSearch(restarts=1).search(task, coder=CODER,
