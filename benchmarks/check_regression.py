@@ -1,11 +1,20 @@
-"""CI accuracy gate: fail if any suite's execute-accuracy regressed.
+"""CI gate: fail when execute-accuracy or rank-correlation regressed.
 
-Compares a freshly produced ``benchmarks.csv`` against the committed
-baseline: for every row name present in BOTH files whose ``derived``
-column carries an ``acc=`` field, the new accuracy must be >= the
-baseline's (within a 1e-9 float-print slack).  Modeled speedups are
-deliberately NOT gated — they move whenever the cost model or search
-deepens; execute accuracy is the correctness contract.
+Compares a freshly produced CSV against the committed baseline, for
+every row name present in BOTH files:
+
+* ``acc=`` (execute accuracy): the new value must be >= the baseline's
+  within a 1e-9 float-print slack — accuracy is the correctness
+  contract and never gets measurement slack.
+* ``rho=`` (Spearman rank correlation between analytic cost and
+  measured runtime, ``benchmarks.measure_bench``): the new value must
+  be >= baseline - ``RHO_SLACK``.  Rank correlations come from real
+  wall-clock timings, so a generous slack absorbs machine noise while
+  a committed floor still catches a cost model or harness that stopped
+  tracking reality.
+
+Modeled speedups are deliberately NOT gated — they move whenever the
+cost model or search deepens.
 
   python -m benchmarks.check_regression <baseline.csv> <new.csv>
 """
@@ -15,9 +24,12 @@ import re
 import sys
 
 _ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
+_RHO = re.compile(r"(?:^|;)rho=(-?[0-9.]+)")
+
+RHO_SLACK = 0.3
 
 
-def parse_accuracies(path: str) -> dict[str, float]:
+def _parse(path: str, pattern: re.Pattern) -> dict[str, float]:
     out: dict[str, float] = {}
     with open(path) as f:
         for line in f:
@@ -27,33 +39,50 @@ def parse_accuracies(path: str) -> dict[str, float]:
             parts = line.split(",", 2)
             if len(parts) < 3:
                 continue
-            m = _ACC.search(parts[2])
+            m = pattern.search(parts[2])
             if m:
                 out[parts[0]] = float(m.group(1))
     return out
+
+
+def parse_accuracies(path: str) -> dict[str, float]:
+    return _parse(path, _ACC)
+
+
+def parse_rhos(path: str) -> dict[str, float]:
+    return _parse(path, _RHO)
+
+
+def _gate(kind: str, base: dict[str, float], new: dict[str, float],
+          slack: float) -> tuple[int, list[str]]:
+    shared = sorted(set(base) & set(new))
+    drops = [f"REGRESSION {n}: {kind} {base[n]:.3f} -> {new[n]:.3f} "
+             f"(slack {slack:g})"
+             for n in shared if new[n] < base[n] - slack]
+    print(f"compared {kind} on {len(shared)} rows "
+          f"({len(base) - len(shared)} baseline-only, "
+          f"{len(new) - len(shared)} new-only)")
+    return len(shared), drops
 
 
 def main(argv: list[str]) -> int:
     if len(argv) != 3:
         print(__doc__)
         return 2
-    base = parse_accuracies(argv[1])
-    new = parse_accuracies(argv[2])
-    shared = sorted(set(base) & set(new))
-    if not shared:
-        print(f"error: no comparable rows between {argv[1]} ({len(base)} "
-              f"acc rows) and {argv[2]} ({len(new)} acc rows)")
+    n_acc, acc_drops = _gate("acc", parse_accuracies(argv[1]),
+                             parse_accuracies(argv[2]), 1e-9)
+    n_rho, rho_drops = _gate("rho", parse_rhos(argv[1]),
+                             parse_rhos(argv[2]), RHO_SLACK)
+    if n_acc == 0 and n_rho == 0:
+        print(f"error: no comparable rows between {argv[1]} and "
+              f"{argv[2]}")
         return 2
-    drops = [(n, base[n], new[n]) for n in shared
-             if new[n] < base[n] - 1e-9]
-    print(f"compared execute-accuracy on {len(shared)} rows "
-          f"({len(base) - len(shared)} baseline-only, "
-          f"{len(new) - len(shared)} new-only)")
-    for name, b, n in drops:
-        print(f"REGRESSION {name}: acc {b:.3f} -> {n:.3f}")
+    drops = acc_drops + rho_drops
+    for msg in drops:
+        print(msg)
     if drops:
         return 1
-    print("no execute-accuracy regressions")
+    print("no execute-accuracy or rank-correlation regressions")
     return 0
 
 

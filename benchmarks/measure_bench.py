@@ -1,0 +1,244 @@
+"""Measured-execution benchmark: does measurement beat the model?
+
+For each hardware target, beam search produces the top-K candidate
+programs per task; every candidate is lowered through the Pallas kernel
+library (interpret mode on CPU — no TPU in this container) and timed by
+the ``measure.ExecutionHarness``.  Reported per target:
+
+* **rho (task-level)** — Spearman(analytic, measured) across the task
+  programs themselves, measured as XLA-jitted host callables: does the
+  roofline rank *work* correctly?  High and stable (both sides scale
+  with FLOPs/bytes), so this is the gated number.
+* **rho_cand (candidate-level)** — the same across all top-K schedule
+  variants in Pallas-interpret mode.  Low by construction on CPU: the
+  candidates sit on analytic-cost plateaus the TPU model prices
+  identically while interpret-mode grid overheads split them — exactly
+  the gap measured reranking exists to close.  Reported, not gated.
+* **rho_cal** — rho_cand after per-bottleneck calibration factors are
+  fit from the just-collected samples (``measure.calibrate``).
+* **winner-changed count**: tasks where the measured-reranked winner is
+  a *different program* than the analytic winner (it is never slower —
+  reranking returns the measured argmin), with the measured margin.
+* **DB warm pass**: every candidate re-measured against the on-disk DB
+  must hit (zero fresh timings) — the persistence the KernelService
+  warm start relies on.
+
+Gates (non-zero exit, wired into CI bench-smoke):
+  * per-target task-level Spearman >= RHO_FLOOR (the committed results
+    carry the reference value; benchmarks.check_regression additionally
+    compares the fresh ``rho=`` field against the committed CSV),
+  * the measured winner differs from the analytic winner on >= 1 task,
+  * the second (warm) pass performs zero fresh measurements.
+
+  PYTHONPATH=src python -m benchmarks.measure_bench [--fast]
+      [--out results/measure_bench.txt] [--csv results/measure_bench.csv]
+      [--db DIR]  (default: a temp dir; pass a path to persist samples)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+TARGETS = ("tpu_v5e", "gpu_a100")
+# absolute floor on the task-level Spearman: catches a cost model or
+# harness that stopped tracking reality (rho ~ 0) while leaving room
+# for wall-clock noise on a loaded CI box (observed run-to-run spread
+# on this suite: ~0.45-0.85); the committed rho is additionally gated
+# with slack by benchmarks.check_regression
+RHO_FLOOR = 0.30
+
+
+def _suite(fast: bool):
+    """Rerank suite: tasks whose candidates stay Pallas-interpret cheap."""
+    from repro.core import tasks as T
+    kb1, kb2 = T.kb_level1(), T.kb_level2()
+    by_name = {t.name: t for t in kb1 + kb2}
+    names = ["L1_matmul_0", "L1_rmsnorm", "L1_attention",
+             "L2_gemm_bias_relu"]
+    if not fast:
+        names += ["L1_matmul_1", "L2_norm_gemm", "L2_mlp_gelu_proj"]
+    return [by_name[n] for n in names]
+
+
+def _rank_suite(fast: bool):
+    """Task-level rank suite: a work-size spread for the gated rho.
+
+    Same 15 tasks in fast and full mode: each is timed ONCE as an
+    XLA-jitted host callable (cheap), and the gated Spearman's run-to-
+    run variance shrinks with the point count — a 10-point rho swings
+    too much for a CI gate on a noisy box."""
+    from repro.core import tasks as T
+    by_name = {t.name: t for t in T.kb_level1() + T.kb_level2()
+               + T.tb_t()}
+    names = ["L1_matmul_0", "L1_matmul_1", "L1_matmul_2", "L1_matmul_3",
+             "L1_softmax", "L1_rmsnorm", "L1_relu", "L1_attention",
+             "L2_gemm_bias_relu", "L2_swiglu", "L2_mlp", "L2_norm_gemm",
+             "T_gemm_0", "T_layernormish", "T_softmax_wide"]
+    return [by_name[n] for n in names]
+
+
+def run(fast: bool, db_dir: str) -> tuple[list[str], list[str],
+                                          list[str]]:
+    from repro.core.engine import TranspositionStore
+    from repro.core.micro_coding import StructuredMicroCoder
+    from repro.core.search import BeamSearch
+    from repro.measure.calibrate import fit_calibration, spearman
+    from repro.measure.db import MeasureDB
+    from repro.measure.harness import ExecutionHarness, MeasureConfig
+
+    top_k = 6 if fast else 8
+    cfg = MeasureConfig(repeats=3 if fast else 5, warmup=1)
+    db = MeasureDB(db_dir)
+    harness = ExecutionHarness(db=db, cfg=cfg)
+    # separate harness for the task-level rank metric: XLA-jitted host
+    # execution (its own env fingerprint, so samples never mix)
+    xla_harness = ExecutionHarness(
+        db=db, cfg=MeasureConfig(repeats=3 if fast else 5, warmup=1,
+                                 mode="xla"))
+    store = TranspositionStore()
+    coder = StructuredMicroCoder()
+    suite = _suite(fast)
+    rank_suite = _rank_suite(fast)
+
+    # task-level measured times are target-independent (the host backend
+    # executes the same callable whichever chip the analytic side prices
+    # for): time each task ONCE and pair it with per-target analytic
+    # costs below, instead of re-timing the suite per target
+    from repro.core import cost_model
+    rank_times = {t.name: xla_harness.measure(t, t,
+                                              target=TARGETS[0]).time_s
+                  for t in rank_suite}
+
+    rows: list[str] = []
+    lines: list[str] = []
+    failures: list[str] = []
+    for target in TARGETS:
+        # task-level rank correlation (gated): XLA-compiled host
+        # runtimes vs analytic cost across a work-size spread
+        rank_pairs = [(cost_model.program_cost(t, target).total_s,
+                       rank_times[t.name]) for t in rank_suite]
+        rho_task = spearman([a for a, _ in rank_pairs],
+                            [m for _, m in rank_pairs])
+
+        pairs = []              # (analytic_s, measured_s, sample)
+        n_changed = 0
+        task_lines = []
+        for task in suite:
+            out = BeamSearch().search(task, coder=coder, store=store,
+                                      target=target,
+                                      max_steps=3 if fast else 5)
+            cands = list(out.candidates[:top_k])
+            meas = []
+            for c, p in cands:
+                s = harness.measure(task, p, target=target)
+                pairs.append((c, s.time_s, s))
+                meas.append((s.time_s, p.fingerprint(), c, p))
+            meas.sort(key=lambda e: (e[0], e[1]))
+            m_t, m_fp, _, _ = meas[0]
+            a_best = min(cands, key=lambda e: (e[0], e[1].fingerprint()))
+            a_fp = a_best[1].fingerprint()
+            a_t = next(t for t, fp, _, _ in meas if fp == a_fp)
+            changed = m_fp != a_fp
+            n_changed += changed
+            task_lines.append(
+                f"    {task.name:<22s} analytic-pick {a_t * 1e3:8.2f} ms"
+                f"  measured-pick {m_t * 1e3:8.2f} ms  "
+                f"{'WINNER CHANGED x%.2f' % (a_t / max(m_t, 1e-12)) if changed else 'same winner'}")
+
+        rho = spearman([a for a, _, _ in pairs],
+                       [m for _, m, _ in pairs])
+        # calibrated analytic: each sample rescaled by the factor of
+        # its (target, bottleneck) bucket — the correction
+        # CalibratedCostModel applies per fused group during search
+        fit = fit_calibration(s for _, _, s in pairs)
+        fm = fit.factor_map
+        rho_cal = spearman(
+            [c * fm.get((target, s.bottleneck), 1.0)
+             for c, _, s in pairs],
+            [m for _, m, _ in pairs])
+        lines.append(
+            f"{target}: {len(rank_suite)} tasks (xla) + {len(suite)} "
+            f"tasks x top-{top_k} candidates ({len(pairs)} measured, "
+            f"mode {pairs[0][2].mode})")
+        lines.extend(task_lines)
+        lines.append(
+            f"    Spearman(analytic, measured): task-level {rho_task:.3f}"
+            f" (gated), candidate-level {rho:.3f} "
+            f"(calibrated: {rho_cal:.3f}); winner changed on "
+            f"{n_changed}/{len(suite)} tasks")
+        rows.append(
+            f"measure/{target},"
+            f"{1e6 * float(np.mean([m for _, m, _ in pairs])):.1f},"
+            f"rho={rho_task:.3f};rho_cand={rho:.3f};"
+            f"rho_cal={rho_cal:.3f};"
+            f"winner_changed={n_changed};cands={len(pairs)}")
+        if rho_task < RHO_FLOOR:
+            failures.append(f"{target}: task-level Spearman "
+                            f"{rho_task:.3f} < floor {RHO_FLOOR}")
+        if n_changed < 1:
+            failures.append(
+                f"{target}: measured reranking never changed a winner")
+
+    # warm pass: everything must come back from the DB, zero timings
+    before = harness.stats_dict()["measured"]
+    warm_hits = 0
+    for target in TARGETS:
+        for task in suite:
+            out = BeamSearch().search(task, coder=coder, store=store,
+                                      target=target,
+                                      max_steps=3 if fast else 5)
+            for _, p in out.candidates[:top_k]:
+                harness.measure(task, p, target=target)
+                warm_hits += 1
+    fresh = harness.stats_dict()["measured"] - before
+    lines.append(f"warm pass: {warm_hits} lookups, {fresh} fresh "
+                 f"timings (db {db.n_samples} samples on disk)")
+    rows.append(f"measure/db_warm,{0.0:.1f},"
+                f"fresh={fresh};lookups={warm_hits};"
+                f"samples={db.n_samples}")
+    if fresh != 0:
+        failures.append(f"warm pass re-measured {fresh} programs "
+                        "(DB persistence broken)")
+    return rows, lines, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "measure_bench.txt"))
+    ap.add_argument("--csv", default=os.path.join(RESULTS,
+                                                  "measure_bench.csv"))
+    ap.add_argument("--db", default=None,
+                    help="measurement-DB dir (default: fresh temp dir)")
+    args = ap.parse_args()
+
+    db_dir = args.db or tempfile.mkdtemp(prefix="measure_bench_db_")
+    try:
+        rows, lines, failures = run(args.fast, db_dir)
+    finally:
+        if args.db is None:       # only reap the dir we created
+            import shutil
+            shutil.rmtree(db_dir, ignore_errors=True)
+
+    text = "\n".join(lines) + "\n"
+    print(text)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    with open(args.csv, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(rows) + "\n")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -83,6 +83,11 @@ def bench_service(fast: bool) -> tuple[dict, list[str]]:
     lats = [t for t, _ in timed]
     st = svc.stats()
     hot_fp = burst_res[0].program.fingerprint()
+
+    # phase 3 — measured-mode spot check: a small measured service with
+    # an on-disk DB; the restarted service must warm-start from it
+    meas = _measured_spot_check()
+
     m = {
         "requests": st["requests"],
         "throughput_rps": n_req / wall,
@@ -98,6 +103,7 @@ def bench_service(fast: bool) -> tuple[dict, list[str]]:
         "store_programs": len(svc.store.programs),
         "all_correct": int(all(ok for _, ok in timed)
                            and all(r.correct for r in burst_res)),
+        **{f"measured_{k}": v for k, v in meas.items()},
     }
     lines = [
         f"KernelService: {n_req} Zipf requests over {len(suite)} tasks, "
@@ -113,8 +119,59 @@ def bench_service(fast: bool) -> tuple[dict, list[str]]:
         f"({m['evicted_programs']} programs), "
         f"{m['whole_store_resets']} whole-store resets, "
         f"hot winner cached: {bool(m['hot_winner_cached'])}",
+        f"  measured mode   : {m['measured_measured']} timed, "
+        f"db {m['measured_db_hits']} hits / "
+        f"{m['measured_db_misses']} misses, "
+        f"{m['measured_warm_starts']} warm starts on restart, "
+        f"reranked: {bool(m['measured_reranked'])}",
     ]
     return m, lines
+
+
+def _measured_spot_check() -> dict:
+    """Measured service + on-disk DB: counters for the stats row and the
+    restart warm-start path (full coverage lives in measure_bench /
+    tests; this keeps the serve-side counters honest in CI).  Sizes are
+    fixed — already spot-check small in both CI and full runs."""
+    import shutil
+    import tempfile
+
+    from repro.core import tasks as T
+    from repro.measure.harness import MeasureConfig
+    from repro.serve.engine import KernelService
+
+    task = T.kb_level1()[0]
+    db_dir = tempfile.mkdtemp(prefix="serve_bench_measure_db_")
+    cfg = MeasureConfig(repeats=2, warmup=1)
+    try:
+        svc = KernelService(strategy="beam", measure=True,
+                            measure_db=db_dir, rerank_top_k=3,
+                            measure_cfg=cfg, max_steps=3)
+        r1 = svc.optimize(task)
+        st1 = svc.stats()
+        svc.close()
+        # a fresh process image of the service against the same DB dir:
+        # the repeat request must warm-start (no search, no timing)
+        svc2 = KernelService(strategy="beam", measure=True,
+                             measure_db=db_dir, rerank_top_k=3,
+                             measure_cfg=cfg, max_steps=3)
+        r2 = svc2.optimize(task)
+        st2 = svc2.stats()
+        svc2.close()
+    finally:
+        shutil.rmtree(db_dir, ignore_errors=True)
+    return {
+        "measured": st1["measured"],
+        "db_hits": st1["db_hits"],
+        "db_misses": st1["db_misses"],
+        "warm_starts": st2["warm_starts"],
+        "reranked": int(r1.reranked),
+        "warm_fp_match": int(r1.program.fingerprint()
+                             == r2.program.fingerprint()),
+        "warm_searchless": int(st2["fresh_applies"] == 0
+                               and st2["measured"] == 0),
+        "correct": int(r1.correct and r2.correct),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +284,12 @@ def main() -> None:
             f"hot_cached={svc_m['hot_winner_cached']};"
             f"p99_ms={svc_m['p99_ms']:.1f}\n")
         f.write(
+            f"serve/measured,{svc_m['measured_measured']:.1f},"
+            f"db_hits={svc_m['measured_db_hits']};"
+            f"db_misses={svc_m['measured_db_misses']};"
+            f"warm_starts={svc_m['measured_warm_starts']};"
+            f"warm_searchless={svc_m['measured_warm_searchless']}\n")
+        f.write(
             f"serve/engine,{1e6 / eng_m['tok_per_s']:.1f},"
             f"occupancy={eng_m['occupancy']:.2f};"
             f"parity={eng_m['parity']};"
@@ -245,6 +308,13 @@ def main() -> None:
         failures.append("batched generation diverged from solo")
     if not eng_m["budgets_met"]:
         failures.append("a request missed its token budget")
+    if not svc_m["measured_correct"]:
+        failures.append("a measured-mode result failed the oracle")
+    if not (svc_m["measured_warm_starts"] >= 1
+            and svc_m["measured_warm_searchless"]
+            and svc_m["measured_warm_fp_match"]):
+        failures.append("measured-mode restart did not warm-start from "
+                        "the on-disk DB")
     for msg in failures:
         print(f"FAIL: {msg}")
     if failures:

@@ -63,7 +63,8 @@ def model_kernel_tasks(cfg: ModelConfig, shape: ShapeConfig,
 
 def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
                        pipeline: MTMCPipeline | None = None,
-                       target=None, strategy: str | None = None) -> dict:
+                       target=None, strategy: str | None = None,
+                       measurer=None, rerank_top_k: int = 0) -> dict:
     """Runs MTMC per hot kernel; installs schedules; returns report.
 
     ``target`` selects the hardware target the schedules are tuned
@@ -71,16 +72,24 @@ def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
     (``ops.set_schedule(..., target=...)``) — tuning for several chips
     fills independent slots and ``ops.set_active_target`` picks at
     serve time.  ``strategy`` optionally swaps the default greedy
-    descent for a search strategy ("beam", "anneal").
+    descent for a search strategy ("beam", "anneal").  ``measurer``
+    (a ``measure.ExecutionHarness``) + ``rerank_top_k`` > 0 turn on
+    measured reranking: the installed schedule is the one whose program
+    actually ran fastest, not the analytic pick (DESIGN.md §11).
     """
     if pipeline is not None and (target is not None
-                                 or strategy is not None):
+                                 or strategy is not None
+                                 or measurer is not None
+                                 or rerank_top_k):
         raise ValueError("pass either an explicit pipeline or "
-                         "target/strategy overrides, not both (the "
-                         "pipeline already fixes its own)")
+                         "target/strategy/measurer/rerank_top_k "
+                         "overrides, not both (the pipeline already "
+                         "fixes its own)")
     pipeline = pipeline or MTMCPipeline(mode="greedy_cost",
                                         validate=False, max_steps=6,
-                                        target=target, strategy=strategy)
+                                        target=target, strategy=strategy,
+                                        measurer=measurer,
+                                        rerank_top_k=rerank_top_k)
     report = {}
     for kname, (task, kernel, key) in model_kernel_tasks(cfg,
                                                          shape).items():
@@ -90,7 +99,9 @@ def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
             ops.set_schedule(kernel, key, sched, target=pipeline.target)
         report[kname] = {"speedup": res.speedup, "correct": res.correct,
                          "schedule": sched, "trace": res.trace,
-                         "target": pipeline.target.name}
+                         "target": pipeline.target.name,
+                         "measured_s": res.measured_s,
+                         "reranked": res.reranked}
     return report
 
 

@@ -72,7 +72,14 @@ class TranspositionStore:
     computation is benign: last-write-wins with identical values.
     """
 
-    def __init__(self):
+    def __init__(self, cost_model=None):
+        # optional pluggable pricing (duck-typed ``program_cost``, e.g.
+        # measure.CalibratedCostModel).  The cost memo keys stay
+        # ``(fp, target)`` — they do NOT encode the model — so a store
+        # is bound to one cost model for its whole lifetime; swapping
+        # models means a fresh store, exactly like a cost-model code
+        # change (DESIGN.md §8/§11)
+        self.cost_model = cost_model
         self._lock = threading.RLock()
         self.programs: dict[str, KernelProgram] = {}
         # (fp, target_name) -> program_cost(prog, target).total_s
@@ -150,7 +157,9 @@ class TranspositionStore:
             self._bump("cost_hits")
             return c
         self._bump("cost_evals")
-        c = cost_model.program_cost(prog, tgt).total_s
+        model = self.cost_model if self.cost_model is not None \
+            else cost_model
+        c = model.program_cost(prog, tgt).total_s
         # register task roots too (apply() only interns children):
         # every priced fingerprint must live in ``programs`` so LRU
         # eviction can reclaim it — and its edges/bookkeeping —
@@ -373,6 +382,7 @@ class EngineConfig:
     seed_stride: int = 0   # per-task seed = seed + stride * task_index
     target: str | None = None     # hardware target name (None = default)
     strategy: str | None = None   # search strategy name (None = mode loop)
+    rerank_top_k: int = 0  # measured reranking depth (needs a measurer)
 
 
 class EvalEngine:
@@ -385,12 +395,15 @@ class EvalEngine:
 
     def __init__(self, policy=None, *,
                  store: TranspositionStore | None = None,
-                 cfg: EngineConfig | None = None, **kw):
+                 cfg: EngineConfig | None = None, measurer=None, **kw):
         self.policy = policy
         if cfg is not None and kw:
             raise TypeError("pass either cfg or keyword options, not both")
         self.cfg = cfg or EngineConfig(**kw)
         self.store = store if store is not None else TranspositionStore()
+        # optional measure.ExecutionHarness: pipelines rerank their
+        # top-K survivors by measured time (cfg.rerank_top_k)
+        self.measurer = measurer
 
     def pipeline(self, seed: int | None = None,
                  target=None) -> MTMCPipeline:
@@ -400,7 +413,9 @@ class EvalEngine:
                             seed=c.seed if seed is None else seed,
                             validate=c.validate, store=self.store,
                             target=c.target if target is None else target,
-                            strategy=c.strategy)
+                            strategy=c.strategy,
+                            measurer=self.measurer,
+                            rerank_top_k=c.rerank_top_k)
 
     def optimize(self, task: KernelProgram, seed: int | None = None,
                  target=None):

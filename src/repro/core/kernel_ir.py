@@ -389,6 +389,66 @@ def _eval_op_np(n: OpNode, a: list[np.ndarray]) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# serialization (measurement DB winner records, offline artifacts)
+# ---------------------------------------------------------------------------
+
+def program_to_json(prog: KernelProgram) -> dict:
+    """JSON-safe dict; ``program_from_json`` round-trips it to a program
+    with an IDENTICAL fingerprint (tuple/int/bool structure is restored
+    exactly — the fingerprint hashes ``repr`` of these fields).
+
+    Attr values must be JSON scalars: a tuple-valued attr would come
+    back as a list and silently change the fingerprint, so it is
+    refused loudly here instead (extend both functions together if an
+    op ever needs a structured attr)."""
+    for n in prog.nodes:
+        for k, v in n.attrs:
+            if not isinstance(v, (str, int, float, bool, type(None))):
+                raise TypeError(
+                    f"attr {k}={v!r} on node {n.name!r} is not a JSON "
+                    "scalar; round-trip would not preserve the "
+                    "fingerprint")
+    return {
+        "name": prog.name,
+        "inputs": [[n, {"shape": list(s.shape), "dtype": s.dtype}]
+                   for n, s in prog.inputs],
+        "nodes": [{"name": n.name, "op": n.op, "inputs": list(n.inputs),
+                   "attrs": [[k, v] for k, v in n.attrs]}
+                  for n in prog.nodes],
+        "outputs": list(prog.outputs),
+        "fusion_groups": [list(g) for g in prog.fusion_groups],
+        "schedules": [[root, {"blocks": [[k, int(v)] for k, v in s.blocks],
+                              "loop_order": list(s.loop_order),
+                              "pipeline_depth": int(s.pipeline_depth),
+                              "epilogue": s.epilogue,
+                              "flags": list(s.flags)}]
+                      for root, s in prog.schedules],
+        "history": list(prog.history),
+    }
+
+
+def program_from_json(d: dict) -> KernelProgram:
+    return KernelProgram(
+        name=d["name"],
+        inputs=tuple((n, TensorSpec(tuple(int(x) for x in s["shape"]),
+                                    s["dtype"]))
+                     for n, s in d["inputs"]),
+        nodes=tuple(OpNode(n["name"], n["op"], tuple(n["inputs"]),
+                           tuple((k, v) for k, v in n["attrs"]))
+                    for n in d["nodes"]),
+        outputs=tuple(d["outputs"]),
+        fusion_groups=tuple(tuple(g) for g in d["fusion_groups"]),
+        schedules=tuple(
+            (root, KernelSchedule(
+                blocks=tuple((k, int(v)) for k, v in s["blocks"]),
+                loop_order=tuple(s["loop_order"]),
+                pipeline_depth=int(s["pipeline_depth"]),
+                epilogue=s["epilogue"], flags=tuple(s["flags"])))
+            for root, s in d["schedules"]),
+        history=tuple(d["history"]))
+
+
+# ---------------------------------------------------------------------------
 # builders
 # ---------------------------------------------------------------------------
 

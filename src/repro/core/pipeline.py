@@ -43,10 +43,21 @@ class OptimizationResult:
     steps: int
     n_failures: int               # compile/validation failures en route
     trace: tuple[str, ...]
+    # measured-execution fields (None unless a measurer reranked the
+    # search's top-K survivors — DESIGN.md §11)
+    measured_s: float | None = None           # winner's measured time
+    measured_baseline_s: float | None = None  # task's measured time
+    reranked: bool = False        # measured winner != analytic winner
 
     @property
     def accuracy(self) -> bool:   # benchmark "execute accuracy"
         return self.correct
+
+    @property
+    def measured_speedup(self) -> float | None:
+        if self.measured_s is None or self.measured_baseline_s is None:
+            return None
+        return self.measured_baseline_s / max(self.measured_s, 1e-12)
 
 
 class MTMCPipeline:
@@ -54,7 +65,9 @@ class MTMCPipeline:
                  mode: str = "policy", curated: bool = True,
                  max_steps: int = 8, seed: int = 0,
                  validate: bool = True, store=None, target=None,
-                 strategy: "S.SearchStrategy | str | None" = None):
+                 strategy: "S.SearchStrategy | str | None" = None,
+                 cost_model_override=None, measurer=None,
+                 rerank_top_k: int = 0):
         self.policy = policy
         self.mode = mode
         self.curated = curated
@@ -72,6 +85,24 @@ class MTMCPipeline:
         # single mode-driven rollout
         self.strategy = (None if strategy is None
                          else S.get_strategy(strategy))
+        # optional pluggable pricing (e.g. measure.CalibratedCostModel,
+        # duck-typed: program_cost/total_s).  A store is bound to ONE
+        # cost model — its (fp, target) memo does not encode the model
+        # — so a mismatched pair would silently mix price systems
+        self.cost_model = cost_model_override
+        if (store is not None and cost_model_override is not None
+                and getattr(store, "cost_model", None)
+                is not cost_model_override):
+            raise ValueError(
+                "store and cost_model_override disagree: build the "
+                "TranspositionStore with cost_model=<the same object> "
+                "(DESIGN.md §11)")
+        # optional measured-execution reranking (measure/harness.py):
+        # after the search, the top ``rerank_top_k`` candidate programs
+        # are actually executed and timed, and the measured winner is
+        # returned instead of the analytic one
+        self.measurer = measurer
+        self.rerank_top_k = int(rerank_top_k)
         self._coder = StructuredMicroCoder()
 
     # -- cached primitives ---------------------------------------------------
@@ -83,6 +114,8 @@ class MTMCPipeline:
     def _cost(self, prog) -> float:
         if self.store is not None:
             return self.store.cost(prog, self.target)
+        if self.cost_model is not None:
+            return self.cost_model.total_s(prog, self.target)
         return cost_model.program_cost(prog, self.target).total_s
 
     # -- action selection ----------------------------------------------------
@@ -120,9 +153,15 @@ class MTMCPipeline:
                         target=self.target)
         state = env.reset()
         best = state
-        best_s = env.baseline_s
+        # price the baseline through _cost, not env.baseline_s: with a
+        # cost_model_override and no store the env prices analytically,
+        # and mixing the two systems would corrupt best-tracking and
+        # the reported speedup ratio (they agree whenever a store is
+        # shared, since the store holds the pipeline's model)
+        base_s = best_s = self._cost(task)
         best_steps = 0
         n_fail = 0
+        visited = [(best_s, state)]
         for t in range(self.max_steps):
             cands = env.candidates()
             key, sub = jax.random.split(key)
@@ -132,16 +171,23 @@ class MTMCPipeline:
                 n_fail += 1
             state = res.program
             s = self._cost(state)
+            visited.append((s, state))
             if s < best_s:
                 best, best_s, best_steps = state, s, t + 1
             if act.kind == "stop" or res.done:
                 break
+        best, best_s, meas, meas_base, reranked = self._maybe_rerank(
+            task, S.top_candidates(visited), best, best_s)
+        if reranked:
+            best_steps = len(best.history) - len(task.history)
         correct = self._check(task, best)
         # steps/trace describe the BEST program (the one returned and
         # graded), not wherever the episode happened to wander afterwards
         return OptimizationResult(
             task.name, best, correct,
-            env.baseline_s / best_s, best_steps, n_fail, best.history)
+            base_s / best_s, best_steps, n_fail, best.history,
+            measured_s=meas, measured_baseline_s=meas_base,
+            reranked=reranked)
 
     def _search(self, task: KernelProgram) -> OptimizationResult:
         """Strategy-driven exploration (core.search) sharing the
@@ -152,16 +198,23 @@ class MTMCPipeline:
         store = self.store
         if store is None:
             from repro.core.engine import TranspositionStore
-            store = TranspositionStore()
+            store = TranspositionStore(cost_model=self.cost_model)
         out = self.strategy.search(
             task, coder=self._coder, store=store, target=self.target,
             max_steps=self.max_steps, seed=self.seed,
             curated=self.curated)
+        best, best_s, meas, meas_base, reranked = self._maybe_rerank(
+            task, out.candidates, out.program, out.cost_s)
+        steps = out.steps if not reranked else \
+            len(best.history) - len(task.history)
         correct = True if not self.validate else \
-            store.check(task, out.program)
+            store.check(task, best)
         return OptimizationResult(
-            task.name, out.program, correct, out.speedup, out.steps,
-            out.n_failures, out.program.history)
+            task.name, best, correct,
+            out.baseline_s / max(best_s, 1e-12), steps,
+            out.n_failures, best.history,
+            measured_s=meas, measured_baseline_s=meas_base,
+            reranked=reranked)
 
     def _single_pass(self, task, rng, key) -> OptimizationResult:
         """'w/o Hier': commit to a full plan against the INITIAL state and
@@ -188,6 +241,44 @@ class MTMCPipeline:
         correct = (n_fail == 0) and self._check(task, prog)
         return OptimizationResult(task.name, prog, correct, base / cur,
                                   n, n_fail, prog.history)
+
+    def _maybe_rerank(self, task, candidates, best, best_s):
+        """Measured reranking of the search's top-K survivors.
+
+        Measures the task (measured baseline) and the ``rerank_top_k``
+        cheapest distinct candidates (analytic best included), then
+        returns the measured-cheapest candidate that passes the oracle:
+        ``(program, analytic_cost_s, measured_s, measured_baseline_s,
+        reranked)``.  No measurer / empty candidates -> the analytic
+        best, unchanged.  Measurement failures (ineligible lowering in
+        ``mode="pallas"``) skip that candidate rather than the request.
+        """
+        if self.measurer is None or self.rerank_top_k <= 0 \
+                or not candidates:
+            return best, best_s, None, None, False
+        from repro.measure.harness import MeasureError
+        cands = list(candidates[:self.rerank_top_k])
+        if all(p.fingerprint() != best.fingerprint()
+               for _, p in cands):
+            cands.append((best_s, best))
+        try:
+            base_t = self.measurer.measure(
+                task, task, target=self.target).time_s
+        except MeasureError:
+            base_t = None
+        timed = []
+        for _, p in cands:
+            try:
+                m = self.measurer.measure(task, p, target=self.target)
+            except MeasureError:
+                continue
+            timed.append((m.time_s, p.fingerprint(), p))
+        timed.sort(key=lambda e: (e[0], e[1]))
+        best_fp = best.fingerprint()
+        for t, fp, p in timed:
+            if fp == best_fp or self._check(task, p):
+                return (p, self._cost(p), t, base_t, fp != best_fp)
+        return best, best_s, None, base_t, False
 
     def _check(self, task: KernelProgram, prog: KernelProgram) -> bool:
         if not self.validate:

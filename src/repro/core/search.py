@@ -47,6 +47,13 @@ from repro.core.kernel_ir import KernelProgram
 GREEDY_REL_TOL = 0.999
 
 
+# distinct candidate programs a strategy reports for measured reranking
+# (the "top-K survivors" of the search); a small constant — candidates
+# hold live program references, and measured rerankers only ever look
+# at the cheapest handful
+MAX_CANDIDATES = 32
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchOutcome:
     program: KernelProgram
@@ -55,10 +62,26 @@ class SearchOutcome:
     steps: int                   # actions applied along the winning path
     n_expanded: int              # ok-children materialized
     n_failures: int              # compile/validation failures en route
+    # cheapest-first distinct (modeled cost, program) survivors the
+    # strategy visited — always includes ``program`` and the task
+    # itself; the measured-execution reranking stage (DESIGN.md §11)
+    # times the top K of these
+    candidates: tuple = ()
 
     @property
     def speedup(self) -> float:
         return self.baseline_s / max(self.cost_s, 1e-12)
+
+
+def top_candidates(entries, cap: int = MAX_CANDIDATES) -> tuple:
+    """Cheapest-first distinct (cost, program), fingerprint-deduped."""
+    best: dict[str, tuple[float, KernelProgram]] = {}
+    for c, p in entries:
+        fp = p.fingerprint()
+        if fp not in best or c < best[fp][0]:
+            best[fp] = (c, p)
+    ranked = sorted(best.items(), key=lambda kv: (kv[1][0], kv[0]))
+    return tuple(v for _, v in ranked[:cap])
 
 
 class SearchStrategy:
@@ -105,6 +128,7 @@ class GreedySearch(SearchStrategy):
         cur, cur_c = task, store.cost(task, tgt)
         base = cur_c
         steps = n_exp = n_fail = 0
+        visited = [(cur_c, cur)]
         for t in range(max_steps):
             children, fails = self._children(store, coder, cur, curated)
             n_fail += fails
@@ -117,7 +141,9 @@ class GreedySearch(SearchStrategy):
             if best is None:
                 break
             cur, cur_c, steps = best, best_c, t + 1
-        return SearchOutcome(cur, cur_c, base, steps, n_exp, n_fail)
+            visited.append((cur_c, cur))
+        return SearchOutcome(cur, cur_c, base, steps, n_exp, n_fail,
+                             top_candidates(visited))
 
 
 class BeamSearch(SearchStrategy):
@@ -164,6 +190,7 @@ class BeamSearch(SearchStrategy):
         n_exp, n_fail = backbone.n_expanded, backbone.n_failures
         frontier = [(base, task)]
         expanded = {task.fingerprint()}   # programs the beam has expanded
+        visited = list(backbone.candidates) or [(base, task)]
         for depth in range(max_steps):
             pool, depth_fps = [], set()
             for pi, (_, prog) in enumerate(frontier):
@@ -186,6 +213,7 @@ class BeamSearch(SearchStrategy):
                     continue
                 taken[pi] = taken.get(pi, 0) + 1
                 frontier.append((c, ch))
+                visited.append((c, ch))
                 # only frontier-admitted programs are consumed; children
                 # the caps dropped may re-enter later via another parent
                 expanded.add(fp)
@@ -195,7 +223,7 @@ class BeamSearch(SearchStrategy):
                 best_c, best = frontier[0]
                 best_depth = depth + 1
         return SearchOutcome(best, best_c, base, best_depth, n_exp,
-                             n_fail)
+                             n_fail, top_candidates(visited))
 
 
 class AnnealedSearch(SearchStrategy):
@@ -223,6 +251,7 @@ class AnnealedSearch(SearchStrategy):
         base = store.cost(task, tgt)
         best, best_c, best_steps = task, base, 0
         n_exp = n_fail = 0
+        visited = [(base, task)]
         for r in range(self.restarts):
             eps = 0.0 if r == 0 else self.eps * self.decay ** (r - 1)
             cur, cur_c = task, base
@@ -245,10 +274,11 @@ class AnnealedSearch(SearchStrategy):
                     if nxt is None:
                         break
                 cur, cur_c = nxt, nxt_c
+                visited.append((cur_c, cur))
                 if cur_c < best_c:
                     best, best_c, best_steps = cur, cur_c, t + 1
         return SearchOutcome(best, best_c, base, best_steps, n_exp,
-                             n_fail)
+                             n_fail, top_candidates(visited))
 
 
 STRATEGIES: dict[str, type[SearchStrategy]] = {

@@ -18,8 +18,10 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
 
 import argparse      # noqa: E402
 import json          # noqa: E402
-import time          # noqa: E402
 import traceback     # noqa: E402
+
+# jax-free by design (measure/timing.py) — safe before jax init
+from repro.measure.timing import stopwatch  # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -76,7 +78,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     rules = rules_override or rules_for(mesh, shape.kind, fsdp, opts)
     cfg = normalize_for_mesh(cfg0, rules.tp)
     run = run or RunConfig(gather_once=("gather_once" in opts))
-    t0 = time.time()
+    sw = stopwatch().start()
 
     if shape.kind == "train":
         params = api.abstract_params(cfg)
@@ -130,10 +132,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                spec["pos"])
         extra = {}
 
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = sw.lap()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = sw.lap()
     meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
             "chips": chips, "lower_s": round(t_lower, 1),
             "compile_s": round(t_compile, 1), **extra}

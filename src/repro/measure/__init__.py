@@ -1,0 +1,32 @@
+"""Measured execution: profile-guided reranking, cost-model calibration,
+and a persistent measurement DB (DESIGN.md §11).
+
+``timing`` is dependency-free (imported by ``launch/dryrun.py`` BEFORE
+jax initializes, so it must stay jax-clean); the jax-importing
+submodules are loaded lazily on attribute access.
+"""
+from repro.measure.timing import (robust_time_s, stopwatch,  # noqa: F401
+                                  time_thunk)
+
+_LAZY = {
+    "ExecutionHarness": "repro.measure.harness",
+    "LoweredProgram": "repro.measure.harness",
+    "MeasureConfig": "repro.measure.harness",
+    "MeasureError": "repro.measure.harness",
+    "lower_program": "repro.measure.harness",
+    "MeasureDB": "repro.measure.db",
+    "MeasureSample": "repro.measure.db",
+    "env_fingerprint": "repro.measure.db",
+    "Calibration": "repro.measure.calibrate",
+    "CalibratedCostModel": "repro.measure.calibrate",
+    "fit_calibration": "repro.measure.calibrate",
+    "spearman": "repro.measure.calibrate",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(name)
+    import importlib
+    return getattr(importlib.import_module(mod), name)

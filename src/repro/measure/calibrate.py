@@ -1,0 +1,202 @@
+"""Cost-model calibration from measured samples.
+
+The analytic roofline and a real backend disagree by systematic,
+*bottleneck-shaped* factors: compute-bound kernels miss peak by one
+ratio (issue width, MXU padding the efficiency table doesn't capture),
+memory-bound ones by another (achievable vs datasheet bandwidth,
+prefetch depth).  So the correction is fit **per target, per
+bottleneck class**: for every DB sample whose dominant group bottleneck
+is class ``b`` on target ``t``, model
+
+    log(measured) = log(analytic) + log(c[t, b])
+
+and solve the log-space least squares — which for a pure scale term is
+the mean log-residual, ``c = exp(mean(log m - log a))``.  Scale-only by
+construction: a monotone per-class correction can re-rank programs
+*across* bottleneck classes (that is the point — the analytic model's
+compute/memory balance is what measurement corrects) but never within
+one, and when measurements equal analytic predictions every factor is
+exactly 1.0 and the calibrated model is bit-identical to the analytic
+one (property-tested in ``tests/test_measure.py``).
+
+``CalibratedCostModel`` is a drop-in for the analytic pricing used by
+``core/search.py``: hand it to ``TranspositionStore(cost_model=...)``
+(or ``MTMCPipeline(cost_model_override=...)`` for the uncached path)
+and every strategy searches under calibrated costs.  A store is bound to ONE cost
+model for its lifetime — the cost memo keys ``(fp, target)`` do not
+encode the model, so swapping models means a fresh store, exactly like
+a cost-model code change (DESIGN.md §8/§11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Iterable
+
+from repro.core import cost_model, hardware
+from repro.core.cost_model import GroupCost, ProgramCost
+from repro.core.kernel_ir import KernelProgram
+from repro.measure.db import MeasureSample
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-(target, bottleneck) multiplicative corrections + fit stats."""
+
+    factors: tuple[tuple[tuple[str, str], float], ...]
+    n_samples: tuple[tuple[tuple[str, str], int], ...]
+    residual_rms: float = 0.0      # log-space RMS after correction
+
+    @property
+    def factor_map(self) -> dict[tuple[str, str], float]:
+        return dict(self.factors)
+
+    def factor(self, target: str, bottleneck: str) -> float:
+        # identity for unseen buckets: the compute-vs-memory balance is
+        # the one cross-class statement calibration corrects, so a
+        # class with zero samples must keep the analytic value rather
+        # than borrow the OTHER class's correction on no evidence
+        return self.factor_map.get((target, bottleneck), 1.0)
+
+    # -- persistence (lives next to the MeasureDB it was fit from) ----------
+    def to_json(self) -> dict:
+        return {"factors": [[list(k), v] for k, v in self.factors],
+                "n_samples": [[list(k), n] for k, n in self.n_samples],
+                "residual_rms": self.residual_rms}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Calibration":
+        return cls(
+            factors=tuple((tuple(k), float(v))
+                          for k, v in d["factors"]),
+            n_samples=tuple((tuple(k), int(n))
+                            for k, n in d["n_samples"]),
+            residual_rms=float(d.get("residual_rms", 0.0)))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "Calibration":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def fit_calibration(samples: Iterable[MeasureSample], *,
+                    min_samples: int = 2,
+                    allow_mixed_envs: bool = False) -> Calibration:
+    """Log-space least-squares scale fit per (target, bottleneck).
+
+    Buckets with fewer than ``min_samples`` valid samples keep the
+    identity factor (too little evidence to move the model).  Samples
+    with non-positive analytic or measured time are skipped (a log
+    model cannot express them; they indicate a broken measurement).
+
+    Samples spanning more than one environment fingerprint are refused
+    unless ``allow_mixed_envs=True``: wall times from incomparable
+    environments (interpret-mode CPU vs compiled TPU, different jax
+    versions, different timing rigor) differ by regime, and averaging
+    their log-residuals into one factor would mis-price everything —
+    filter with ``MeasureDB.iter_samples(env_fp=...)`` first.
+    """
+    buckets: dict[tuple[str, str], list[float]] = {}
+    envs: set[str] = set()
+    for s in samples:
+        if s.analytic_s <= 0.0 or s.time_s <= 0.0:
+            continue
+        envs.add(s.env_fp)
+        if len(envs) > 1 and not allow_mixed_envs:
+            raise ValueError(
+                f"samples span {len(envs)} environment fingerprints "
+                f"({sorted(envs)}); filter by env_fp (MeasureDB."
+                "iter_samples(env_fp=...)) or pass "
+                "allow_mixed_envs=True")
+        buckets.setdefault((s.target, s.bottleneck), []).append(
+            math.log(s.time_s) - math.log(s.analytic_s))
+    factors, counts, sq = [], [], []
+    for key in sorted(buckets):
+        resid = buckets[key]
+        counts.append((key, len(resid)))
+        if len(resid) < min_samples:
+            factors.append((key, 1.0))
+            sq.extend(r * r for r in resid)
+            continue
+        mean = sum(resid) / len(resid)
+        factors.append((key, math.exp(mean)))
+        sq.extend((r - mean) ** 2 for r in resid)
+    rms = math.sqrt(sum(sq) / len(sq)) if sq else 0.0
+    return Calibration(tuple(factors), tuple(counts), rms)
+
+
+class CalibratedCostModel:
+    """Analytic roofline with measured per-bottleneck corrections.
+
+    Drop-in for ``cost_model.program_cost`` wherever pricing is
+    pluggable (``TranspositionStore(cost_model=...)``,
+    ``MTMCPipeline(cost_model_override=...)``): each group's time is
+    scaled by the calibration factor of its (target, bottleneck) bucket
+    and the program total re-summed.  Identity calibration reproduces
+    the analytic model exactly.
+    """
+
+    def __init__(self, calibration: Calibration):
+        self.calibration = calibration
+
+    def program_cost(self, prog: KernelProgram,
+                     target=None) -> ProgramCost:
+        tgt = hardware.resolve(target)
+        base = cost_model.program_cost(prog, tgt)
+        groups = tuple(self._scale(g, tgt.name) for g in base.groups)
+        return ProgramCost(sum(g.time_s for g in groups), groups,
+                           tgt.name)
+
+    def total_s(self, prog: KernelProgram, target=None) -> float:
+        return self.program_cost(prog, target).total_s
+
+    def _scale(self, g: GroupCost, target: str) -> GroupCost:
+        c = self.calibration.factor(target, g.bottleneck)
+        if c == 1.0:
+            return g
+        return dataclasses.replace(g, time_s=g.time_s * c,
+                                   compute_s=g.compute_s * c,
+                                   memory_s=g.memory_s * c)
+
+
+# ---------------------------------------------------------------------------
+# rank statistics (measure_bench, tests)
+# ---------------------------------------------------------------------------
+
+def spearman(xs: Iterable[float], ys: Iterable[float]) -> float:
+    """Spearman rank correlation (average ranks for ties)."""
+    xs, ys = list(xs), list(ys)
+    if len(xs) != len(ys):
+        raise ValueError("length mismatch")
+    n = len(xs)
+    if n < 2:
+        return 0.0
+    rx, ry = _ranks(xs), _ranks(ys)
+    mx = sum(rx) / n
+    my = sum(ry) / n
+    num = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    dx = math.sqrt(sum((a - mx) ** 2 for a in rx))
+    dy = math.sqrt(sum((b - my) ** 2 for b in ry))
+    if dx == 0.0 or dy == 0.0:
+        return 0.0
+    return num / (dx * dy)
+
+
+def _ranks(xs: list[float]) -> list[float]:
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        r = (i + j) / 2.0 + 1.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = r
+        i = j + 1
+    return ranks

@@ -1,0 +1,254 @@
+"""Persistent, content-addressed measurement database.
+
+Every measured sample is keyed by the full provenance of the number:
+
+    (task_fp, program_fp, target, env_fp)
+
+``task_fp``/``program_fp`` are the kernel-IR fingerprints (what was
+measured), ``target`` is the hardware target the *analytic* side was
+priced against (which search produced the candidate and which
+calibration bucket the sample feeds), and ``env_fp`` fingerprints the
+execution environment the wall-clock number came from: jax backend +
+version, measurement mode (compiled vs pallas-interpret), and the
+target's frozen constants.  A sample is a pure function of its key —
+the DB never invalidates entries; a changed environment simply hashes
+to a different ``env_fp`` and misses (the same rule the
+``TranspositionStore`` uses for cost-model changes, DESIGN.md §8/§11).
+
+Layout on disk (JSON, one file per entry, atomic writes)::
+
+    <root>/samples/<sha16>.json   — MeasureSample
+    <root>/winners/<sha16>.json   — winning program per (task, target,
+                                    env): the KernelService warm-start
+                                    record (DESIGN.md §11)
+
+The DB survives process restarts: a restarted ``KernelService`` pointed
+at the same directory answers repeat requests from ``winners/`` without
+re-running the search, and ``calibrate.fit_calibration`` fits correction
+factors from ``samples/`` accumulated across sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureSample:
+    """One measured program: robust wall time + analytic context."""
+
+    task_fp: str
+    prog_fp: str
+    target: str               # hardware-target name the search priced on
+    env_fp: str               # environment fingerprint (see env_fingerprint)
+    time_s: float             # trimmed-median measured seconds
+    samples: tuple[float, ...]   # raw repeat times (post-warmup)
+    n_rejected: int           # MAD-outlier rejections
+    mode: str                 # "xla" | "pallas" | "pallas_interpret"
+    analytic_s: float         # cost_model.program_cost(...).total_s
+    bottleneck: str           # dominant group bottleneck: compute|memory
+    env: tuple[tuple[str, str], ...] = ()   # the fingerprinted env, readable
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["samples"] = list(self.samples)
+        d["env"] = [list(kv) for kv in self.env]
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "MeasureSample":
+        return cls(task_fp=d["task_fp"], prog_fp=d["prog_fp"],
+                   target=d["target"], env_fp=d["env_fp"],
+                   time_s=float(d["time_s"]),
+                   samples=tuple(float(x) for x in d["samples"]),
+                   n_rejected=int(d["n_rejected"]), mode=d["mode"],
+                   analytic_s=float(d["analytic_s"]),
+                   bottleneck=d["bottleneck"],
+                   env=tuple((k, v) for k, v in d.get("env", [])))
+
+
+# bump whenever kernel or lowering semantics change in a way that moves
+# wall times without touching jax/backend/target (e.g. a rewritten
+# Pallas kernel, a new group-lowering rule): old samples then miss
+# instead of silently ranking today's programs by yesterday's timings
+MEASURE_SCHEMA = 1
+
+
+def env_fingerprint(target=None, mode: str = "auto",
+                    rigor: tuple = ()
+                    ) -> tuple[str, tuple[tuple[str, str], ...]]:
+    """(12-hex fingerprint, readable env) of the measurement environment.
+
+    Covers what changes what a wall-clock sample *means*: the jax
+    backend actually executing (cpu/tpu/gpu), the jax version (compiler
+    changes move timings), the measurement mode, the measurement-schema
+    version (``MEASURE_SCHEMA`` — bumped on kernel/lowering semantic
+    changes), the timing ``rigor`` (warmup/repeats/trim settings: a
+    2-repeat spot sample must not masquerade as a 10-repeat one), and
+    the target name AND a hash of its frozen constants (editing a
+    registered target's numbers re-keys its samples instead of silently
+    mixing them — same rule as the cost-memo invalidation, DESIGN.md
+    §9).
+    """
+    import jax
+
+    from repro.core import hardware
+    tgt = hardware.resolve(target)
+    env = (
+        ("backend", str(jax.default_backend())),
+        ("jax", str(jax.__version__)),
+        ("mode", mode),
+        ("rigor", repr(tuple(rigor))),
+        ("schema", str(MEASURE_SCHEMA)),
+        ("target", tgt.name),
+        ("target_sha", hashlib.sha1(
+            repr(tgt).encode()).hexdigest()[:8]),
+    )
+    fp = hashlib.sha1(repr(env).encode()).hexdigest()[:12]
+    return fp, env
+
+
+def _key16(*parts: str) -> str:
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
+
+
+class MeasureDB:
+    """On-disk sample + winner store with an in-memory read cache.
+
+    Thread-safe; writes are atomic (tmp file + ``os.replace``) so a
+    crashed process never leaves a truncated JSON entry behind.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._samples_dir = os.path.join(self.path, "samples")
+        self._winners_dir = os.path.join(self.path, "winners")
+        os.makedirs(self._samples_dir, exist_ok=True)
+        os.makedirs(self._winners_dir, exist_ok=True)
+        self._lock = threading.RLock()
+        # bounded read caches: entries always live on disk, so clearing
+        # on overflow only costs a re-read — a long-lived service under
+        # distinct-kernel traffic must not grow memory without bound
+        self._cache_cap = 4096
+        self._cache: dict[str, MeasureSample] = {}
+        self._winner_cache: dict[str, dict] = {}
+
+    # -- samples -------------------------------------------------------------
+    def sample_key(self, task_fp: str, prog_fp: str, target: str,
+                   env_fp: str) -> str:
+        return _key16(task_fp, prog_fp, target, env_fp)
+
+    def get(self, task_fp: str, prog_fp: str, target: str,
+            env_fp: str) -> MeasureSample | None:
+        key = self.sample_key(task_fp, prog_fp, target, env_fp)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                return hit
+        d = self._read(os.path.join(self._samples_dir, key + ".json"))
+        if d is None:
+            return None
+        s = MeasureSample.from_json(d)
+        with self._lock:
+            self._cache_insert(self._cache, key, s)
+        return s
+
+    def put(self, sample: MeasureSample) -> None:
+        key = self.sample_key(sample.task_fp, sample.prog_fp,
+                              sample.target, sample.env_fp)
+        self._write(os.path.join(self._samples_dir, key + ".json"),
+                    sample.to_json())
+        with self._lock:
+            self._cache_insert(self._cache, key, sample)
+
+    def iter_samples(self, *, target: str | None = None,
+                     env_fp: str | None = None) -> Iterator[MeasureSample]:
+        for fn in sorted(os.listdir(self._samples_dir)):
+            if not fn.endswith(".json"):
+                continue
+            d = self._read(os.path.join(self._samples_dir, fn))
+            if d is None:
+                continue
+            s = MeasureSample.from_json(d)
+            if target is not None and s.target != target:
+                continue
+            if env_fp is not None and s.env_fp != env_fp:
+                continue
+            yield s
+
+    # -- winners (KernelService warm-start records) --------------------------
+    def winner_key(self, task_fp: str, target: str, env_fp: str) -> str:
+        return _key16("winner", task_fp, target, env_fp)
+
+    def put_winner(self, task_fp: str, target: str, env_fp: str,
+                   record: dict) -> None:
+        """``record`` must be JSON-safe and carry a ``program`` entry
+        (``kernel_ir.program_to_json``) — enough to answer a repeat
+        request in a fresh process without re-searching."""
+        key = self.winner_key(task_fp, target, env_fp)
+        self._write(os.path.join(self._winners_dir, key + ".json"),
+                    record)
+        with self._lock:
+            self._cache_insert(self._winner_cache, key, record)
+
+    def get_winner(self, task_fp: str, target: str,
+                   env_fp: str) -> dict | None:
+        key = self.winner_key(task_fp, target, env_fp)
+        with self._lock:
+            hit = self._winner_cache.get(key)
+            if hit is not None:
+                return hit
+        d = self._read(os.path.join(self._winners_dir, key + ".json"))
+        if d is not None:
+            with self._lock:
+                self._cache_insert(self._winner_cache, key, d)
+        return d
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _cache_insert(self, cache: dict, key: str, value) -> None:
+        """Caller holds the lock.  Overflow clears: disk is canonical."""
+        if len(cache) >= self._cache_cap:
+            cache.clear()
+        cache[key] = value
+
+    @property
+    def n_samples(self) -> int:
+        return sum(fn.endswith(".json")
+                   for fn in os.listdir(self._samples_dir))
+
+    @property
+    def n_winners(self) -> int:
+        return sum(fn.endswith(".json")
+                   for fn in os.listdir(self._winners_dir))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._winner_cache.clear()
+            for d in (self._samples_dir, self._winners_dir):
+                for fn in os.listdir(d):
+                    if fn.endswith(".json"):
+                        os.remove(os.path.join(d, fn))
+
+    # -- file IO -------------------------------------------------------------
+    @staticmethod
+    def _read(path: str) -> dict | None:
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    @staticmethod
+    def _write(path: str, payload: dict) -> None:
+        # unique tmp per writer: concurrent writers of the same key each
+        # replace atomically (identical payloads — keys are content
+        # addresses), never tripping over a shared tmp file
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)

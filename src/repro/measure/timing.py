@@ -1,0 +1,109 @@
+"""Shared wall-clock timing helpers (monotonic, robust statistics).
+
+One clock for the whole repo: ``stopwatch`` replaces the ad-hoc
+``time.time()`` deltas that used to live in ``launch/dryrun.py`` (wall
+clocks can step backwards under NTP; ``perf_counter`` cannot), and the
+measured-execution harness (``measure/harness.py``) builds its
+warmup / repeat / outlier-rejection loop from the same primitives so
+dry-run compile timings and kernel measurements are comparable.
+
+This module is deliberately dependency-free (no jax import): dryrun.py
+must set XLA_FLAGS before anything touches jax, so the timing helpers
+it calls cannot transitively import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class Stopwatch:
+    """Monotonic elapsed-seconds recorder (``perf_counter`` based).
+
+    Use as a context manager::
+
+        with stopwatch() as sw:
+            compiled = lowered.compile()
+        meta["compile_s"] = sw.s
+    """
+
+    t0: float = 0.0
+    s: float = 0.0
+
+    def __enter__(self) -> "Stopwatch":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.s = time.perf_counter() - self.t0
+
+    # phase-timing API (dryrun's lower -> compile sequence):
+    #   sw = stopwatch().start(); ...; t_lower = sw.lap(); ...;
+    #   t_compile = sw.lap()
+    def start(self) -> "Stopwatch":
+        self.t0 = time.perf_counter()
+        return self
+
+    def lap(self) -> float:
+        now = time.perf_counter()
+        self.s = now - self.t0
+        self.t0 = now
+        return self.s
+
+
+def stopwatch() -> Stopwatch:
+    return Stopwatch()
+
+
+def time_thunk(thunk: Callable[[], object], *, warmup: int = 1,
+               repeats: int = 5) -> list[float]:
+    """Raw per-call wall times of ``thunk`` after ``warmup`` calls.
+
+    ``thunk`` must synchronize its own work (e.g. call
+    ``jax.block_until_ready`` on its outputs) — this module stays
+    jax-free, so it cannot do that for the caller.
+    """
+    for _ in range(max(0, warmup)):
+        thunk()
+    samples: list[float] = []
+    for _ in range(max(1, repeats)):
+        with stopwatch() as sw:
+            thunk()
+        samples.append(sw.s)
+    return samples
+
+
+def robust_time_s(samples: list[float], *, trim: float = 0.2,
+                  mad_k: float = 4.0) -> tuple[float, int]:
+    """(trimmed-median seconds, n_rejected) over raw samples.
+
+    Two-stage robustness, matching what kernel-timing harnesses do in
+    practice: (1) reject outliers farther than ``mad_k`` scaled MADs
+    from the median (GC pauses, a concurrent process stealing the
+    core), then (2) take the median of the central ``1 - 2*trim``
+    fraction of the survivors.  With few samples both stages degrade
+    gracefully to the plain median.
+    """
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError("no samples")
+    med = _median(xs)
+    mad = _median([abs(x - med) for x in xs])
+    if mad > 0.0:
+        lim = mad_k * 1.4826 * mad   # 1.4826: MAD -> sigma for normals
+        kept = [x for x in xs if abs(x - med) <= lim]
+    else:
+        kept = xs
+    if not kept:        # pathological: everything "rejected"
+        kept = xs
+    k = int(len(kept) * max(0.0, min(trim, 0.45)))
+    core = kept[k:len(kept) - k] or kept
+    return _median(core), len(xs) - len(kept)
+
+
+def _median(xs: list[float]) -> float:
+    n = len(xs)
+    m = n // 2
+    return xs[m] if n % 2 else 0.5 * (xs[m - 1] + xs[m])

@@ -1,0 +1,497 @@
+"""Measured-execution subsystem (measure/*, DESIGN.md §11).
+
+Covers: timing statistics, program JSON round-trip, MeasureDB
+round-trip + env-fingerprint invalidation + cross-instance persistence,
+the calibration identity property (fit on measurements that equal the
+analytic predictions must never reorder programs), harness lowering
+fidelity and DB caching, measured reranking through MTMCPipeline with
+an injected runner, and the KernelService restart warm start.
+"""
+import os
+
+import pytest
+
+from repro.core import cost_model, tasks as T
+from repro.core.engine import TranspositionStore
+from repro.core.kernel_ir import (chain_program, program_from_json,
+                                  program_to_json)
+from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.pipeline import MTMCPipeline
+from repro.core.search import BeamSearch
+from repro.measure.calibrate import (CalibratedCostModel, Calibration,
+                                     fit_calibration, spearman)
+from repro.measure.db import MeasureDB, MeasureSample, env_fingerprint
+from repro.measure.harness import (ExecutionHarness, MeasureConfig,
+                                   MeasureError, lower_program)
+from repro.measure.timing import robust_time_s, stopwatch, time_thunk
+
+from tests._hyp import given, settings, strategies as st
+
+FIXTURE_DB = os.path.join(os.path.dirname(__file__), "fixtures",
+                          "measure_db")
+
+
+def _tiny_matmul(name="tiny_mm"):
+    return chain_program(name, {"a": (256, 256), "b": (256, 256)},
+                         [("y", "matmul", ("a", "b"))])
+
+
+def _tiny_fused():
+    return chain_program("tiny_fused",
+                         {"a": (256, 256), "b": (256, 256),
+                          "bias0": (256,)},
+                         [("y0", "matmul", ("a", "b")),
+                          ("y1", "bias", ("y0", "bias0")),
+                          ("y", "relu", ("y1",))])
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def test_robust_time_rejects_outliers_and_trims():
+    clean = [1.0, 1.01, 0.99, 1.02, 0.98]
+    t, n_rej = robust_time_s(clean + [50.0])
+    assert n_rej == 1
+    assert 0.98 <= t <= 1.02
+    # all-equal samples: MAD is 0, nothing rejected, exact median
+    t2, n2 = robust_time_s([2.0, 2.0, 2.0])
+    assert (t2, n2) == (2.0, 0)
+
+
+def test_stopwatch_and_laps_are_monotonic():
+    with stopwatch() as sw:
+        pass
+    assert sw.s >= 0.0
+    sw = stopwatch().start()
+    a = sw.lap()
+    b = sw.lap()
+    assert a >= 0.0 and b >= 0.0
+
+
+def test_time_thunk_counts_calls():
+    calls = []
+    samples = time_thunk(lambda: calls.append(1), warmup=2, repeats=3)
+    assert len(samples) == 3 and len(calls) == 5
+
+
+def test_spearman_basics():
+    assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    assert abs(spearman([1, 1, 1], [1, 2, 3])) < 1e-12   # ties
+
+
+# ---------------------------------------------------------------------------
+# program JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_program_json_roundtrip_preserves_fingerprint():
+    coder = StructuredMicroCoder()
+    progs = [T.kb_level1()[0], T.kb_level2()[0],
+             T._attn_program("rt_attn", 2, 256, 4, 64)]
+    # include a schedule-rewritten program so non-default schedules and
+    # history survive the trip too
+    from repro.core import actions as A
+    r = coder.apply(progs[0], A.Action(
+        "tiling", progs[0].fusion_groups[0][0],
+        (("bk", 128), ("bm", 256), ("bn", 128))))
+    assert r.status == "ok"
+    progs.append(r.program)
+    for p in progs:
+        q = program_from_json(program_to_json(p))
+        assert q.fingerprint() == p.fingerprint()
+        assert q.eval_fingerprint() == p.eval_fingerprint()
+        assert q.history == p.history
+
+
+# ---------------------------------------------------------------------------
+# MeasureDB
+# ---------------------------------------------------------------------------
+
+def _sample(task_fp="t0", prog_fp="p0", target="tpu_v5e",
+            env_fp="e0", time_s=1e-3, analytic_s=2e-3,
+            bottleneck="compute"):
+    return MeasureSample(task_fp=task_fp, prog_fp=prog_fp,
+                         target=target, env_fp=env_fp, time_s=time_s,
+                         samples=(time_s, time_s * 1.01), n_rejected=0,
+                         mode="xla", analytic_s=analytic_s,
+                         bottleneck=bottleneck,
+                         env=(("backend", "cpu"),))
+
+
+def test_db_roundtrip_and_env_invalidation(tmp_path):
+    db = MeasureDB(str(tmp_path / "db"))
+    s = _sample()
+    db.put(s)
+    assert db.get("t0", "p0", "tpu_v5e", "e0") == s
+    # a changed environment fingerprint is a MISS, not a stale hit
+    assert db.get("t0", "p0", "tpu_v5e", "DIFFERENT") is None
+    assert db.get("t0", "p0", "gpu_a100", "e0") is None
+    # a second instance on the same directory sees the entry (restart)
+    db2 = MeasureDB(str(tmp_path / "db"))
+    assert db2.get("t0", "p0", "tpu_v5e", "e0") == s
+    assert db2.n_samples == 1
+
+
+def test_db_winner_roundtrip(tmp_path):
+    db = MeasureDB(str(tmp_path / "db"))
+    task = _tiny_matmul()
+    rec = {"task": task.name, "program": program_to_json(task),
+           "speedup": 1.5, "steps": 2, "measured_s": 1e-3,
+           "measured_baseline_s": 2e-3, "reranked": True}
+    db.put_winner(task.fingerprint(), "tpu_v5e", "e0", rec)
+    db2 = MeasureDB(str(tmp_path / "db"))
+    got = db2.get_winner(task.fingerprint(), "tpu_v5e", "e0")
+    assert got is not None
+    assert program_from_json(got["program"]).fingerprint() == \
+        task.fingerprint()
+    assert db2.get_winner(task.fingerprint(), "tpu_v5e", "e1") is None
+
+
+def test_env_fingerprint_keys_on_mode_and_target():
+    fp_a, env = env_fingerprint("tpu_v5e", "auto")
+    fp_x, _ = env_fingerprint("tpu_v5e", "xla")
+    fp_g, _ = env_fingerprint("gpu_a100", "auto")
+    assert len({fp_a, fp_x, fp_g}) == 3
+    assert dict(env)["target"] == "tpu_v5e"
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_fixture_db_fits_exact_factors():
+    """The committed CI fixture DB carries 2x compute / 3x memory
+    residuals; the log-space fit must recover them exactly."""
+    db = MeasureDB(FIXTURE_DB)
+    fit = fit_calibration(db.iter_samples(target="tpu_v5e"))
+    f = fit.factor_map
+    assert f[("tpu_v5e", "compute")] == pytest.approx(2.0, rel=1e-9)
+    assert f[("tpu_v5e", "memory")] == pytest.approx(3.0, rel=1e-9)
+    assert fit.residual_rms == pytest.approx(0.0, abs=1e-9)
+
+
+def test_calibration_json_roundtrip(tmp_path):
+    fit = Calibration(factors=((("tpu_v5e", "compute"), 2.0),
+                               (("tpu_v5e", "memory"), 0.5)),
+                      n_samples=((("tpu_v5e", "compute"), 4),
+                                 (("tpu_v5e", "memory"), 3)),
+                      residual_rms=0.1)
+    path = str(tmp_path / "cal.json")
+    fit.save(path)
+    assert Calibration.load(path) == fit
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
+def test_identity_calibration_never_reorders(seed, n):
+    """Property: fit on samples where measured == analytic yields the
+    identity correction, so CalibratedCostModel ranks programs exactly
+    like the analytic model (the §11 safety property: measurement that
+    agrees with the model must not change any search decision)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    samples = []
+    for i in range(n):
+        a = float(10.0 ** rng.uniform(-6, -2))
+        samples.append(_sample(
+            task_fp=f"t{i}", prog_fp=f"p{i}", time_s=a, analytic_s=a,
+            bottleneck=rng.choice(["compute", "memory"])))
+    fit = fit_calibration(samples)
+    assert all(v == pytest.approx(1.0, rel=1e-12)
+               for _, v in fit.factors)
+    cal = CalibratedCostModel(fit)
+    progs = [T.kb_level1()[0], T.kb_level2()[0],
+             _tiny_matmul(), _tiny_fused()]
+    for tgt in ("tpu_v5e", "gpu_a100"):
+        analytic = [cost_model.program_cost(p, tgt).total_s
+                    for p in progs]
+        calibrated = [cal.total_s(p, tgt) for p in progs]
+        assert calibrated == pytest.approx(analytic, rel=1e-12)
+        assert sorted(range(len(progs)), key=lambda i: analytic[i]) == \
+            sorted(range(len(progs)), key=lambda i: calibrated[i])
+
+
+def test_calibrated_model_rescales_per_bottleneck():
+    fit = Calibration(factors=((("tpu_v5e", "compute"), 2.0),
+                               (("tpu_v5e", "memory"), 1.0)),
+                      n_samples=())
+    cal = CalibratedCostModel(fit)
+    prog = _tiny_matmul()
+    base = cost_model.program_cost(prog, "tpu_v5e")
+    got = cal.program_cost(prog, "tpu_v5e")
+    for g0, g1 in zip(base.groups, got.groups):
+        want = 2.0 if g0.bottleneck == "compute" else 1.0
+        assert g1.time_s == pytest.approx(g0.time_s * want)
+    # unseen target falls back to identity
+    other = cal.program_cost(prog, "gpu_a100")
+    assert other.total_s == pytest.approx(
+        cost_model.program_cost(prog, "gpu_a100").total_s)
+
+
+def test_store_accepts_calibrated_cost_model():
+    fit = Calibration(factors=((("tpu_v5e", "compute"), 2.0),
+                               (("tpu_v5e", "memory"), 2.0)),
+                      n_samples=())
+    cal = CalibratedCostModel(fit)
+    store = TranspositionStore(cost_model=cal)
+    prog = _tiny_matmul()
+    assert store.cost(prog, "tpu_v5e") == pytest.approx(
+        2.0 * cost_model.program_cost(prog, "tpu_v5e").total_s)
+    # a pipeline wired with a DIFFERENT model than its store must refuse
+    with pytest.raises(ValueError):
+        MTMCPipeline(store=TranspositionStore(),
+                     cost_model_override=cal)
+
+
+# ---------------------------------------------------------------------------
+# harness lowering + measurement
+# ---------------------------------------------------------------------------
+
+def test_lowering_covers_pallas_groups_and_matches_oracle():
+    h = ExecutionHarness(cfg=MeasureConfig(repeats=2, warmup=1))
+    fused = _tiny_fused()
+    low = lower_program(fused, mode="auto")
+    assert low.n_pallas == 1          # the matmul group
+    s = h.measure(fused, fused)
+    assert s.time_s > 0.0 and s.mode.startswith("pallas")
+    assert h.stats["verify_fallbacks"] == 0   # lowering == oracle
+    assert s.analytic_s == pytest.approx(
+        cost_model.program_cost(fused).total_s)
+    assert s.bottleneck in ("compute", "memory")
+
+
+def test_lowering_xla_mode_and_pallas_mode_errors():
+    soft = chain_program("soft", {"x": (64, 64)},
+                         [("y", "softmax", ("x",))])
+    low = lower_program(soft, mode="xla")
+    assert low.mode == "xla" and low.n_pallas == 0
+    with pytest.raises(MeasureError):
+        lower_program(soft, mode="pallas")   # nothing pallas-eligible
+
+
+def test_harness_db_caching_and_env_keying(tmp_path):
+    db = MeasureDB(str(tmp_path / "db"))
+    h = ExecutionHarness(db=db, cfg=MeasureConfig(repeats=2, warmup=0))
+    task = _tiny_matmul()
+    s1 = h.measure(task, task)
+    s2 = h.measure(task, task)
+    assert s2 == s1
+    assert h.stats["measured"] == 1
+    assert h.stats["db_hits"] == 1 and h.stats["db_misses"] == 1
+    # a fresh harness on the same DB (same env) also hits
+    h2 = ExecutionHarness(db=db,
+                          cfg=MeasureConfig(repeats=2, warmup=0))
+    assert h2.measure(task, task) == s1
+    assert h2.stats == {"measured": 0, "db_hits": 1, "db_misses": 0,
+                        "verify_fallbacks": 0}
+    # a different MODE fingerprints differently -> fresh measurement
+    h3 = ExecutionHarness(db=db, cfg=MeasureConfig(repeats=2, warmup=0,
+                                                   mode="xla"))
+    h3.measure(task, task)
+    assert h3.stats["db_misses"] == 1 and h3.stats["measured"] == 1
+
+
+def test_injected_runner_bypasses_execution():
+    h = ExecutionHarness(runner=lambda task, prog, tgt: 42.0)
+    s = h.measure(_tiny_matmul(), _tiny_matmul())
+    assert s.time_s == 42.0 and s.mode == "injected"
+
+
+# ---------------------------------------------------------------------------
+# measured reranking through the pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_reranks_to_measured_winner():
+    task = _tiny_fused()
+    store = TranspositionStore()
+    coder = StructuredMicroCoder()
+    out = BeamSearch().search(task, coder=coder, store=store)
+    assert len(out.candidates) >= 3
+    # force a specific non-best candidate to "run fastest"
+    want = out.candidates[2][1]
+    want_fp = want.fingerprint()
+
+    def runner(task_, prog, tgt):
+        return 1e-3 if prog.fingerprint() == want_fp else 1e-2
+
+    h = ExecutionHarness(runner=runner)
+    pipe = MTMCPipeline(strategy="beam", store=store, measurer=h,
+                        rerank_top_k=4)
+    res = pipe.optimize(task)
+    assert res.reranked
+    assert res.program.fingerprint() == want_fp
+    assert res.correct
+    assert res.measured_s == pytest.approx(1e-3)
+    assert res.measured_baseline_s == pytest.approx(1e-2)
+    assert res.measured_speedup == pytest.approx(10.0)
+    # candidates of every strategy include the analytic winner + task
+    fps = {p.fingerprint() for _, p in out.candidates}
+    assert out.program.fingerprint() in fps
+    assert task.fingerprint() in fps
+
+
+def test_rerank_noop_without_measurer():
+    task = _tiny_fused()
+    store = TranspositionStore()
+    a = MTMCPipeline(strategy="beam", store=store).optimize(task)
+    assert not a.reranked and a.measured_s is None \
+        and a.measured_speedup is None
+
+
+# ---------------------------------------------------------------------------
+# KernelService: measured mode + restart warm start
+# ---------------------------------------------------------------------------
+
+def test_service_measured_warm_start_across_restart(tmp_path):
+    from repro.serve.engine import KernelService
+    task = _tiny_fused()
+    db_dir = str(tmp_path / "svc_db")
+    cfg = MeasureConfig(repeats=2, warmup=0)
+    svc = KernelService(strategy="beam", measure=True,
+                        measure_db=db_dir, rerank_top_k=3,
+                        measure_cfg=cfg, max_steps=3)
+    r1 = svc.optimize(task)
+    st1 = svc.stats()
+    svc.close()
+    assert r1.correct and r1.measured_s is not None
+    assert st1["measured"] > 0 and st1["warm_starts"] == 0
+
+    # "restart": a fresh service (fresh store, fresh engine) on the
+    # same DB directory answers the repeat request WITHOUT re-running
+    # the search or any measurement
+    svc2 = KernelService(strategy="beam", measure=True,
+                         measure_db=db_dir, rerank_top_k=3,
+                         measure_cfg=cfg, max_steps=3)
+    r2 = svc2.optimize(task)
+    st2 = svc2.stats()
+    svc2.close()
+    assert r2.correct
+    assert r2.program.fingerprint() == r1.program.fingerprint()
+    assert st2["warm_starts"] == 1
+    assert st2["fresh_applies"] == 0      # no search ran
+    assert st2["measured"] == 0           # no timing ran
+    assert r2.speedup == pytest.approx(r1.speedup)
+
+
+def test_warm_start_is_seed_scoped(tmp_path):
+    """A winner recorded for seed=0 must not answer a seed=7 request:
+    seeds are distinct questions (the coalescing key already refuses to
+    merge them, and anneal-style strategies are seed-dependent)."""
+    from repro.serve.engine import KernelService
+    task = _tiny_fused()
+    db_dir = str(tmp_path / "svc_db")
+    cfg = MeasureConfig(repeats=2, warmup=0)
+    svc = KernelService(strategy="beam", measure=True,
+                        measure_db=db_dir, rerank_top_k=2,
+                        measure_cfg=cfg, max_steps=2)
+    svc.optimize(task, seed=0)
+    svc.close()
+    svc2 = KernelService(strategy="beam", measure=True,
+                         measure_db=db_dir, rerank_top_k=2,
+                         measure_cfg=cfg, max_steps=2)
+    svc2.optimize(task, seed=7)       # different question: fresh search
+    st = svc2.stats()
+    svc2.close()
+    assert st["warm_starts"] == 0 and st["fresh_applies"] > 0
+    # ... while the SAME seed does warm-start
+    svc3 = KernelService(strategy="beam", measure=True,
+                         measure_db=db_dir, rerank_top_k=2,
+                         measure_cfg=cfg, max_steps=2)
+    svc3.optimize(task, seed=0)
+    assert svc3.stats()["warm_starts"] == 1
+    svc3.close()
+
+
+def test_warm_start_is_search_config_scoped(tmp_path):
+    """A winner recorded at max_steps=2 must not answer a max_steps=4
+    restart: a deeper search is a different question, and env_fp only
+    covers the MEASUREMENT configuration."""
+    from repro.serve.engine import KernelService
+    task = _tiny_fused()
+    db_dir = str(tmp_path / "svc_db")
+    cfg = MeasureConfig(repeats=2, warmup=0)
+    svc = KernelService(strategy="beam", measure=True,
+                        measure_db=db_dir, rerank_top_k=2,
+                        measure_cfg=cfg, max_steps=2)
+    svc.optimize(task)
+    svc.close()
+    svc2 = KernelService(strategy="beam", measure=True,
+                         measure_db=db_dir, rerank_top_k=2,
+                         measure_cfg=cfg, max_steps=4)
+    svc2.optimize(task)
+    st = svc2.stats()
+    svc2.close()
+    assert st["warm_starts"] == 0 and st["fresh_applies"] > 0
+
+
+def test_fit_calibration_refuses_mixed_envs():
+    a = _sample(task_fp="ta", prog_fp="pa", env_fp="env_one")
+    b = _sample(task_fp="tb", prog_fp="pb", env_fp="env_two")
+    with pytest.raises(ValueError):
+        fit_calibration([a, b])
+    fit = fit_calibration([a, b], allow_mixed_envs=True)
+    assert fit.factors        # explicit opt-in still fits
+
+
+def test_program_json_refuses_non_scalar_attrs():
+    from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec
+    bad = KernelProgram(
+        name="bad", inputs=(("x", TensorSpec((4, 4))),),
+        nodes=(OpNode("y", "relu", ("x",), (("perm", (0, 1)),)),),
+        outputs=("y",), fusion_groups=(("y",),), schedules=())
+    with pytest.raises(TypeError):
+        program_to_json(bad)
+
+
+def test_service_ignores_stale_winner_that_fails_oracle(tmp_path):
+    """A winners/ record that no longer passes the live oracle (repo
+    semantics changed under an unchanged env fingerprint) must fall
+    through to a fresh search, not be served as correct=False forever."""
+    from repro.serve.engine import KernelService
+    task = _tiny_matmul()
+    db_dir = str(tmp_path / "svc_db")
+    cfg = MeasureConfig(repeats=2, warmup=0)
+    svc = KernelService(strategy="beam", measure=True,
+                        measure_db=db_dir, rerank_top_k=2,
+                        measure_cfg=cfg, max_steps=2)
+    # poison the winner record with a program computing something else
+    wrong = chain_program("tiny_mm", {"a": (256, 256), "b": (256, 256)},
+                          [("y", "relu", ("a",))])
+    key = svc._winner_db_key(task, None, None)
+    svc.harness.db.put_winner(*key, {
+        "task": task.name, "program": program_to_json(wrong),
+        "speedup": 9.9, "steps": 1, "measured_s": 1e-6,
+        "measured_baseline_s": 1e-6, "reranked": True})
+    res = svc.optimize(task)
+    st = svc.stats()
+    svc.close()
+    assert res.correct
+    assert res.program.eval_fingerprint() == task.eval_fingerprint()
+    assert st["warm_starts"] == 0
+    assert st["fresh_applies"] > 0        # a real search ran
+    # ... and the fresh result overwrote the stale record
+    db = MeasureDB(db_dir)
+    fixed = db.get_winner(*key)
+    assert program_from_json(fixed["program"]).eval_fingerprint() == \
+        task.eval_fingerprint()
+
+
+def test_service_stats_expose_measure_counters_without_measurer():
+    from repro.serve.engine import KernelService
+    svc = KernelService(max_steps=1)
+    st = svc.stats()
+    svc.close()
+    assert st["measured"] == 0 and st["db_hits"] == 0 \
+        and st["db_misses"] == 0 and st["warm_starts"] == 0
+
+
+def test_fixture_db_winner_loads():
+    """The committed fixture's winner record round-trips into a program
+    with the live task's fingerprint (serialization stability)."""
+    db = MeasureDB(FIXTURE_DB)
+    task = T.kb_level1()[0]
+    rec = db.get_winner(task.fingerprint(), "tpu_v5e", "fixture000000")
+    assert rec is not None
+    assert program_from_json(rec["program"]).fingerprint() == \
+        task.fingerprint()
