@@ -12,6 +12,11 @@ every row name present in BOTH files:
   wall-clock timings, so a generous slack absorbs machine noise while
   a committed floor still catches a cost model or harness that stopped
   tracking reality.
+* ``rules_improved_frac=`` (``benchmarks.table9_rules``): the fraction
+  of tasks where the extended rewrite-rule registry strictly improves
+  the classic search.  Fully analytic and deterministic, so it gets no
+  slack: a registry or cost-model change that silently neuters the
+  extension rules fails CI.
 
 Modeled speedups are deliberately NOT gated — they move whenever the
 cost model or search deepens.
@@ -25,6 +30,7 @@ import sys
 
 _ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
 _RHO = re.compile(r"(?:^|;)rho=(-?[0-9.]+)")
+_RULES = re.compile(r"(?:^|;)rules_improved_frac=([0-9.]+)")
 
 RHO_SLACK = 0.3
 
@@ -53,6 +59,10 @@ def parse_rhos(path: str) -> dict[str, float]:
     return _parse(path, _RHO)
 
 
+def parse_rules_improved(path: str) -> dict[str, float]:
+    return _parse(path, _RULES)
+
+
 def _gate(kind: str, base: dict[str, float], new: dict[str, float],
           slack: float) -> tuple[int, list[str]]:
     shared = sorted(set(base) & set(new))
@@ -73,16 +83,20 @@ def main(argv: list[str]) -> int:
                              parse_accuracies(argv[2]), 1e-9)
     n_rho, rho_drops = _gate("rho", parse_rhos(argv[1]),
                              parse_rhos(argv[2]), RHO_SLACK)
-    if n_acc == 0 and n_rho == 0:
+    n_rules, rules_drops = _gate(
+        "rules_improved_frac", parse_rules_improved(argv[1]),
+        parse_rules_improved(argv[2]), 1e-9)
+    if n_acc == 0 and n_rho == 0 and n_rules == 0:
         print(f"error: no comparable rows between {argv[1]} and "
               f"{argv[2]}")
         return 2
-    drops = acc_drops + rho_drops
+    drops = acc_drops + rho_drops + rules_drops
     for msg in drops:
         print(msg)
     if drops:
         return 1
-    print("no execute-accuracy or rank-correlation regressions")
+    print("no execute-accuracy, rank-correlation or rule-ablation "
+          "regressions")
     return 0
 
 

@@ -5,7 +5,7 @@ from the roofline cost model for the selected hardware target (this
 container has no TPU); accuracy is real (every optimized program is
 executed and checked against the task oracle on CPU).
 
-  PYTHONPATH=src python -m benchmarks.run [--tables 3,4,5,6,7,8]
+  PYTHONPATH=src python -m benchmarks.run [--tables 3,4,5,6,7,8,9]
                                           [--retrain] [--fast]
 
 Run from the repo root (or put the repo root on PYTHONPATH): the
@@ -22,7 +22,7 @@ from .common import RESULTS, cached_policy
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="3,4,5,6,7,8")
+    ap.add_argument("--tables", default="3,4,5,6,7,8,9")
     ap.add_argument("--retrain", action="store_true")
     ap.add_argument("--fast", action="store_true",
                     help="fewer PPO iters (CI smoke)")
@@ -63,6 +63,9 @@ def main() -> None:
     if "8" in tables:
         from . import table8_targets
         emit(table8_targets.run(policy))
+    if "9" in tables:
+        from . import table9_rules
+        emit(table9_rules.run(policy))
 
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "benchmarks.csv"), "w") as f:

@@ -10,14 +10,15 @@ from __future__ import annotations
 import numpy as np
 
 from .common import STORE
-from repro.core import MTMCPipeline, program_cost
+from repro.core import MTMCPipeline, program_cost, rules
 from repro.core import tasks as T
+
+_XLA_KINDS = (rules.FusionRule.kind, rules.StopRule.kind)
 
 
 class _FusionOnlyPipeline(MTMCPipeline):
     def _select(self, prog, cands, key, rng):
-        cands = [c for c in cands
-                 if c.kind in ("fusion", "stop")] or cands
+        cands = [c for c in cands if c.kind in _XLA_KINDS] or cands
         return super()._select(prog, cands, key, rng)
 
 

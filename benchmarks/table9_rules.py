@@ -1,0 +1,49 @@
+"""Table 9 — rewrite-rule registry ablation: classic vs extended space.
+
+The registry refactor's payoff claim, measured: the same greedy search
+over the same tasks, once with the classic four rules and once with the
+extended registry (``dtype`` bf16-compute and ``split_k`` skinny-M
+rules registered through ``core/rules.py`` alone).  Emitted per task:
+modeled time under each space and whether the extended space strictly
+improved; the summary row's ``rules_improved_frac`` is gated by
+``check_regression.py`` (a rules/cost-model change that stops the
+extended space from winning fails CI), as is every row's execute
+accuracy — the extra rules must never cost correctness.
+"""
+from __future__ import annotations
+
+from .common import STORE, WORKERS
+from repro.core import EvalEngine, program_cost
+from repro.core import tasks as T
+
+# strict-improvement margin, matching the searches' GREEDY_REL_TOL
+_REL_TOL = 0.999
+
+
+def run(policy=None) -> list[str]:
+    suite = T.ext_tasks() + T.kb_level2() + T.tb_t()
+    results = {}
+    for name, ext in (("classic", False), ("extended", True)):
+        eng = EvalEngine(None, store=STORE, mode="greedy_cost",
+                         strategy="greedy", extended=ext, max_steps=8,
+                         workers=WORKERS)
+        results[name] = eng.evaluate_suite(suite)["results"]
+    rows, wins, n_acc = [], 0, 0
+    for task, rc, rx in zip(suite, results["classic"],
+                            results["extended"]):
+        cc = program_cost(rc.program).total_s * 1e6
+        cx = program_cost(rx.program).total_s * 1e6
+        win = int(cx < cc * _REL_TOL)
+        wins += win
+        ok = rc.correct and rx.correct
+        n_acc += ok
+        rows.append(f"table9/rules/{task.name},{cx:.1f},"
+                    f"acc={1.0 if ok else 0.0:.2f};"
+                    f"classic_us={cc:.1f};extended_us={cx:.1f};"
+                    f"improved={win}")
+    n = len(suite)
+    rows.append(f"table9/rules/summary,0.0,"
+                f"acc={n_acc / n:.2f};"
+                f"rules_improved_frac={wins / n:.3f};"
+                f"improved={wins}/{n}")
+    return rows

@@ -5,8 +5,10 @@ optimization actions (Tiling / Fusion / Pipeline / Reordering x region).
 Micro Coding: stepwise structured rewrites of the kernel IR with
 compile/correctness feedback.  See DESIGN.md.
 """
+from repro.core import rules                              # noqa: F401
 from repro.core.actions import Action, candidate_actions  # noqa: F401
 from repro.core.cost_model import program_cost, speedup   # noqa: F401
+from repro.core.rules import RewriteRule, register_rule   # noqa: F401
 from repro.core.engine import (EngineConfig, EvalEngine,  # noqa: F401
                                TranspositionStore)
 from repro.core.env import EnvConfig, KernelEnv, OfflineEnv, OfflineTree  # noqa: F401

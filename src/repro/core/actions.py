@@ -2,79 +2,38 @@
 
 An action = (optimization type, code region, parameter) — exactly the
 paper's "(Optimization Type, Code Region)" with the concrete knob value.
-``candidate_actions`` performs the dataflow analysis that determines
-syntactically/semantically valid regions: fusion candidates are adjacent
-producer/consumer group pairs; tiling/pipeline/reorder target existing
-fused kernels.
+What kinds exist, how their candidates are enumerated, when they are
+legal and how they rewrite the IR all live in the declarative rewrite-
+rule registry (``core/rules.py``); this module keeps the ``Action``
+record itself plus the dataflow helper the fusion rule enumerates from.
 
-The curated space ("w/ AS" in Table 7) only proposes hardware-meaningful
-values (MXU-aligned tiles, realistic pipeline depths, accumulator-legal
-loop orders first).  ``unrestricted_actions`` is the "w/o AS" ablation: it
-also proposes misaligned tiles, bogus regions and illegal fusions — the
-way an unconstrained LLM does.
+``candidate_actions`` is the curated space ("w/ AS" in Table 7): only
+hardware-meaningful values, with tile presets derived from the active
+``HardwareTarget``'s lane/sublane geometry and VMEM capacity.
+``unrestricted_actions`` is the "w/o AS" ablation: it also proposes
+misaligned tiles, bogus regions and illegal fusions — the way an
+unconstrained LLM does.  ``extended=True`` adds the non-default rules
+(``dtype``, ``split_k``) to either space.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 from repro.core.kernel_ir import KernelProgram
-
-TILE_PRESETS = {
-    "matmul": [{"bm": m, "bn": n, "bk": k}
-               for m, n, k in [(128, 128, 128), (256, 128, 128),
-                               (128, 256, 128), (256, 256, 128),
-                               (512, 128, 128), (128, 128, 256),
-                               (512, 256, 128), (256, 256, 256),
-                               (64, 64, 64)]],
-    "flash_attention": [{"bq": q, "bk": k}
-                        for q, k in [(128, 128), (256, 128), (128, 256),
-                                     (256, 256), (512, 128), (64, 64),
-                                     (512, 256), (1024, 128)]],
-    "rmsnorm": [{"rows": r} for r in (128, 256, 512, 1024)],
-    "rwkv6_scan": [{"chunk": c} for c in (16, 32, 64, 128)],
-    "ssm_scan": [{"chunk": c} for c in (16, 32, 64, 128)],
-    "grouped_matmul": [{"bc": c, "bf": f, "bd": d}
-                       for c, f, d in [(128, 128, 128), (256, 128, 128),
-                                       (128, 256, 128), (256, 256, 128),
-                                       (512, 128, 128)]],
-}
-
-BAD_TILES = [{"bm": 96, "bn": 80, "bk": 56}, {"bm": 8192, "bn": 8192,
-             "bk": 8192}, {"bq": 100, "bk": 60}, {"chunk": 7},
-             {"bm": 33, "bn": 100, "bk": 17}]
-
-LOOP_ORDERS = [("m", "n", "k"), ("n", "m", "k"),
-               ("m", "k", "n"), ("k", "m", "n")]
-PIPELINE_DEPTHS = (1, 2, 3, 4)
 
 
 @dataclasses.dataclass(frozen=True)
 class Action:
-    kind: str          # tiling | fusion | pipeline | reorder | stop
+    kind: str          # a registered rule kind (core/rules.py) | stop
     region: str        # group root node name ("" for stop)
     param: tuple = ()  # knob payload, hashable
 
     def describe(self) -> str:
-        if self.kind == "stop":
-            return "stop optimization"
-        p = dict(self.param) if self.param and isinstance(
-            self.param[0], tuple) else self.param
-        return f"{self.kind} @ {self.region} -> {p}"
+        from repro.core import rules
+        return rules.describe(self)
 
 
 STOP = Action("stop", "")
-
-
-def _sched_kind_of_group(prog: KernelProgram,
-                         group: tuple[str, ...]) -> str:
-    from repro.core.kernel_ir import _sched_kind
-    nm = prog.node_map
-    for name in group:
-        k = _sched_kind(nm[name].op)
-        if k != "elementwise":
-            return k
-    return "elementwise"
 
 
 def fusion_candidates(prog: KernelProgram) -> list[tuple[str, str]]:
@@ -92,36 +51,16 @@ def fusion_candidates(prog: KernelProgram) -> list[tuple[str, str]]:
     return sorted(set(pairs))
 
 
-def candidate_actions(prog: KernelProgram) -> list[Action]:
-    acts: list[Action] = []
-    for g in prog.fusion_groups:
-        root = prog.group_root(g)
-        kind = _sched_kind_of_group(prog, g)
-        for preset in TILE_PRESETS.get(kind, []):
-            acts.append(Action("tiling", root,
-                               tuple(sorted(preset.items()))))
-        if kind in ("matmul", "grouped_matmul"):
-            for order in LOOP_ORDERS:
-                acts.append(Action("reorder", root, order))
-        if kind != "elementwise":
-            for d in PIPELINE_DEPTHS:
-                acts.append(Action("pipeline", root, (d,)))
-    for a, b in fusion_candidates(prog):
-        acts.append(Action("fusion", a, (b,)))
-    acts.append(STOP)
-    return acts
+def candidate_actions(prog: KernelProgram, target=None,
+                      extended: bool = False) -> list[Action]:
+    from repro.core import rules
+    return rules.candidate_actions(prog, target=target,
+                                   extended=extended)
 
 
-def unrestricted_actions(prog: KernelProgram) -> list[Action]:
+def unrestricted_actions(prog: KernelProgram, target=None,
+                         extended: bool = False) -> list[Action]:
     """'w/o AS' ablation: adds invalid-prone proposals."""
-    acts = candidate_actions(prog)
-    names = [n.name for n in prog.nodes]
-    for g in prog.fusion_groups:
-        root = prog.group_root(g)
-        for bad in BAD_TILES:
-            acts.append(Action("tiling", root,
-                               tuple(sorted(bad.items()))))
-    # bogus fusions between arbitrary non-adjacent nodes
-    for a, b in itertools.islice(itertools.combinations(names, 2), 12):
-        acts.append(Action("fusion", a, (b,)))
-    return acts
+    from repro.core import rules
+    return rules.unrestricted_actions(prog, target=target,
+                                      extended=extended)

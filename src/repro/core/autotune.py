@@ -106,8 +106,8 @@ def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def _extract_schedule(prog, kernel_kind: str):
-    from repro.core.actions import _sched_kind_of_group
+    from repro.core.kernel_ir import sched_kind_of_group
     for g in prog.fusion_groups:
-        if _sched_kind_of_group(prog, g) == kernel_kind:
+        if sched_kind_of_group(prog, g) == kernel_kind:
             return prog.schedule_for(g)
     return None

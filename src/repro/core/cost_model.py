@@ -19,6 +19,20 @@ chip.  The default target is tpu_v5e with the §Roofline constants
 the original single-target model.  The model is deterministic — the RL
 reward is hardware-grounded without a GPU/TPU attached (DESIGN.md §2,
 deviation 2).
+
+Rewrite rules contribute pricing through registry hooks (DESIGN.md
+§12) rather than edits here: matmul FLOPs are bucketed by each node's
+*compute dtype* (a rule hook; default = the program's storage dtype,
+exactly the old single-bucket behavior) and priced by the target's
+per-dtype FLOP/s table, and each rule may adjust a matmul node's HBM
+traffic (``rules.matmul_price`` — e.g. split-K's stream-occupancy term
+and partial-sum bytes).  Hooks may refine the base model (the
+occupancy term prices every skinny-M matmul, split or not — that is
+the under-modeled physics the split_k action then buys back), but all
+of them are exactly neutral on every pre-registry program: no task,
+train program or benchmark rewrite has a skinny matmul or a rule
+marker, so committed prices are unchanged to the bit
+(regression-tested).
 """
 from __future__ import annotations
 
@@ -26,7 +40,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import hardware
+from repro.core import hardware, rules
 from repro.core.hardware import HardwareTarget
 from repro.core.kernel_ir import KernelProgram, TensorSpec
 
@@ -72,7 +86,17 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
     in_specs = prog.input_specs
     internal = set(group)
 
-    mxu = vpu = 0.0
+    # matmul FLOPs bucketed by compute dtype: the bucket is the node's
+    # rule-declared compute dtype when set (rules.compute_dtype_of),
+    # else the program's storage dtype — the old single-bucket model
+    prog_dtype = prog.inputs[0][1].dtype if prog.inputs else "bf16"
+    mxu_by: dict[str, float] = {}
+
+    def add_mxu(node, flops):
+        dt = rules.compute_dtype_of(node) or prog_dtype
+        mxu_by[dt] = mxu_by.get(dt, 0.0) + flops
+
+    vpu = 0.0
     hbm_in = hbm_out = 0.0
     reorder_penalty = 0.0
 
@@ -85,14 +109,20 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
             a, b = shapes_of(n.inputs, shapes, in_specs)
             M = int(np.prod(a.shape[:-1]))
             K, N = a.shape[-1], b.shape[-1]
-            mxu += 2.0 * M * K * N
+            add_mxu(n, 2.0 * M * K * N)
             bm = tiles.get("bm", 128)
             bn = tiles.get("bn", 128)
             bk = tiles.get("bk", 128)
+            node_hbm = 0.0
             if n.inputs[0] not in internal:
-                hbm_in += a.bytes * max(1, N // max(bn, 1))
+                node_hbm += a.bytes * max(1, N // max(bn, 1))
             if n.inputs[1] not in internal:
-                hbm_in += b.bytes * max(1, M // max(bm, 1))
+                node_hbm += b.bytes * max(1, M // max(bm, 1))
+            # registry pricing hooks (neutral on classic programs):
+            # stream-occupancy scaling, partial-sum traffic, reduces
+            adj = rules.matmul_price(n, sched, out, M, N, K, tiles, tgt)
+            hbm_in += node_hbm * adj.hbm_scale + adj.hbm_extra
+            vpu += adj.vpu_extra
             order = sched.loop_order or ("m", "n", "k")
             if order[-1] != "k":
                 reorder_penalty += 2.0 * M * N * 4 * max(1, K // bk)
@@ -100,7 +130,7 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
             a, b = shapes_of(n.inputs, shapes, in_specs)
             E, C, D = a.shape
             F = b.shape[-1]
-            mxu += 2.0 * E * C * D * F
+            add_mxu(n, 2.0 * E * C * D * F)
             bc = tiles.get("bc", 128)
             bf = tiles.get("bf", 128)
             if n.inputs[0] not in internal:
@@ -117,7 +147,7 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
                 B, H, Sq, Sk = a.shape
                 hd = b.shape[-1]
                 M, K, N = Sq, Sk, hd
-            mxu += 2.0 * B * H * M * K * N
+            add_mxu(n, 2.0 * B * H * M * K * N)
             bm = tiles.get("bm", 128)
             bn = tiles.get("bn", 128)
             if n.inputs[0] not in internal:
@@ -128,7 +158,7 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
             q, k = shapes_of(n.inputs[:2], shapes, in_specs)
             B, Sq, H, hd = q.shape
             Sk = k.shape[1]
-            mxu += 4.0 * B * Sq * Sk * H * hd
+            add_mxu(n, 4.0 * B * Sq * Sk * H * hd)
             vpu += 6.0 * B * Sq * Sk * H          # softmax chain
             bq = tiles.get("bq", 128)
             for inp in n.inputs[:1]:
@@ -145,7 +175,7 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
             B = x.shape[0]
             # intra-chunk pairwise work + inter-chunk state matmuls
             vpu += 3.0 * B * T * c * feat
-            mxu += 4.0 * B * T * feat * 64
+            add_mxu(n, 4.0 * B * T * feat * 64)
             for inp in n.inputs:
                 if inp not in internal and (
                         inp in shapes or inp in in_specs):
@@ -169,9 +199,13 @@ def group_cost(prog: KernelProgram, group: tuple[str, ...],
     for name in consumers:
         hbm_out += shapes[name].bytes
 
+    mxu = sum(mxu_by.values())
     eff = tgt.mxu_efficiency(tiles) if mxu else 1.0
-    dtype = prog.inputs[0][1].dtype if prog.inputs else "bf16"
-    compute_s = mxu / (tgt.matmul_flops(dtype) * eff) \
+    # each compute-dtype bucket is priced at the target's per-dtype
+    # peak (HardwareTarget.matmul_flops); with a single storage-dtype
+    # bucket this reduces exactly to the old expression
+    compute_s = sum(f / (tgt.matmul_flops(dt) * eff)
+                    for dt, f in mxu_by.items()) \
         + vpu / tgt.vector_flops
     memory_s = (hbm_in + hbm_out + reorder_penalty) / tgt.hbm_bw
     if sched.pipeline_depth >= 2:

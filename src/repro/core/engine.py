@@ -52,9 +52,8 @@ import dataclasses
 import threading
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import cost_model, hardware
+from repro.core import cost_model, hardware, rules
 from repro.core.env import action_key
 from repro.core.kernel_ir import (KernelProgram, evaluate, evaluate_np,
                                   make_inputs_np)
@@ -179,7 +178,7 @@ class TranspositionStore:
         history-independent (StructuredMicroCoder is); the child's
         ``history`` is reconstructed from the actual parent, so a cache
         hit is bit-identical to a live rewrite."""
-        if action.kind == "stop":
+        if rules.is_terminal(action):
             return ApplyResult("ok", prog, "terminal")
         key = (self.fingerprint(prog), action_key(action))
         self._touch(key[0])
@@ -254,7 +253,12 @@ class TranspositionStore:
         Schedule-only rewrites (equal eval-fingerprints: same op graph,
         different tilings/pipelining/loop orders) are accepted
         structurally — the oracle would compare an array with itself.
-        Everything else runs through the memoized oracle."""
+        Everything else runs through the memoized oracle, at the
+        per-output tolerances the program's rewrite rules declare (a
+        reduced-precision rewrite relaxes only the outputs its marked
+        nodes reach; the relaxation is a pure function of the program,
+        so the memo key stays sound)."""
+        per_tol = rules.output_tolerances(prog, rtol, atol)
         key = (self.fingerprint(task), self.fingerprint(prog), seed)
         self._touch(key[0])
         self._touch(key[1])
@@ -270,9 +274,8 @@ class TranspositionStore:
             try:
                 a = self.oracle_outputs(task, seed)
                 b = self.oracle_outputs(prog, seed)
-                ok = all(x.shape == y.shape and bool(
-                    jnp.allclose(x, y, rtol=rtol, atol=atol))
-                    for x, y in zip(a, b))
+                ok = rules.outputs_match(a, b, rtol, atol,
+                                         per_output=per_tol)
             except Exception:
                 # report failure but do NOT cache it: a transient oracle
                 # error (interrupted compile, resource exhaustion) must
@@ -375,6 +378,7 @@ class TranspositionStore:
 class EngineConfig:
     mode: str = "policy"
     curated: bool = True
+    extended: bool = False  # include non-default registry rules
     max_steps: int = 8
     seed: int = 0
     validate: bool = True
@@ -409,6 +413,7 @@ class EvalEngine:
                  target=None) -> MTMCPipeline:
         c = self.cfg
         return MTMCPipeline(self.policy, mode=c.mode, curated=c.curated,
+                            extended_rules=c.extended,
                             max_steps=c.max_steps,
                             seed=c.seed if seed is None else seed,
                             validate=c.validate, store=self.store,

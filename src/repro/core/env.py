@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import actions as A
-from repro.core import cost_model, hardware
+from repro.core import cost_model, hardware, rules
 from repro.core.kernel_ir import KernelProgram
 from repro.core.micro_coding import MicroCoder, StructuredMicroCoder
 
@@ -35,6 +35,7 @@ class EnvConfig:
     decay_per_step: float = 0.1       # positive-reward decay
     decay_floor: float = 0.3
     curated_actions: bool = True      # False = "w/o AS" ablation
+    extended_rules: bool = False      # True = non-default registry rules too
 
 
 @dataclasses.dataclass
@@ -55,10 +56,12 @@ class KernelEnv:
     """
 
     def __init__(self, task: KernelProgram, coder: MicroCoder | None = None,
-                 cfg: EnvConfig = EnvConfig(), store=None, target=None):
+                 cfg: EnvConfig | None = None, store=None, target=None):
         self.task = task
         self.coder = coder or StructuredMicroCoder()
-        self.cfg = cfg
+        # None -> fresh config: a dataclass-instance default would be
+        # one SHARED mutable object across every env ever constructed
+        self.cfg = cfg if cfg is not None else EnvConfig()
         self.store = store
         # the chip rewards are priced against (None = registry default);
         # rewrite legality stays target-independent (DESIGN.md §9)
@@ -84,9 +87,10 @@ class KernelEnv:
     def candidates(self, state: KernelProgram | None = None
                    ) -> list[A.Action]:
         state = state or self.state
-        if self.cfg.curated_actions:
-            return A.candidate_actions(state)
-        return A.unrestricted_actions(state)
+        enum = (A.candidate_actions if self.cfg.curated_actions
+                else A.unrestricted_actions)
+        return enum(state, target=self.target,
+                    extended=self.cfg.extended_rules)
 
     def _decay(self) -> float:
         return max(self.cfg.decay_floor,
@@ -96,7 +100,7 @@ class KernelEnv:
         cfg = self.cfg
         self.t += 1
         done = self.t >= cfg.max_steps
-        if action.kind == "stop":
+        if rules.is_terminal(action):
             final = self.baseline_s / self.prev_s
             r = 0.25 * max(0.0, final - 1.0)
             return StepResult(self.state, r, True,
@@ -176,7 +180,7 @@ class OfflineTree:
         else:
             res = coder.apply(node.program, action)
         child = self._intern(res.program) if res.status == "ok" and \
-            action.kind != "stop" else None
+            not rules.is_terminal(action) else None
         node.children[k] = (child, res.status)
         return node.children[k]
 
@@ -203,9 +207,9 @@ class OfflineEnv:
     paper's environment design.
     """
 
-    def __init__(self, tree: OfflineTree, cfg: EnvConfig = EnvConfig()):
+    def __init__(self, tree: OfflineTree, cfg: EnvConfig | None = None):
         self.tree = tree
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else EnvConfig()
         self.baseline_s = tree.nodes[tree.root].cost_s
 
     def reset(self) -> str:
@@ -220,7 +224,7 @@ class OfflineEnv:
     def candidates(self) -> list[A.Action]:
         acts = [a for a, _ in
                 self.tree.materialized_actions(self.fp)]
-        if not any(a.kind == "stop" for a in acts):
+        if not any(rules.is_terminal(a) for a in acts):
             acts.append(A.STOP)
         return acts
 
@@ -229,7 +233,7 @@ class OfflineEnv:
         self.t += 1
         done = self.t >= cfg.max_steps
         decay = max(cfg.decay_floor, 1.0 - cfg.decay_per_step * self.t)
-        if action.kind == "stop":
+        if rules.is_terminal(action):
             final = self.baseline_s / self.prev_s
             r = 0.25 * max(0.0, final - 1.0)
             return StepResult(self.program(), r, True,

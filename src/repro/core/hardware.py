@@ -33,6 +33,9 @@ import dataclasses
 GIB = 2 ** 30
 MIB = 2 ** 20
 
+# IR dtype string -> datasheet table key (matmul_flops_by_dtype)
+_DTYPE_TABLE_KEYS = {"bfloat16": "bf16", "float16": "fp16"}
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareTarget:
@@ -52,8 +55,16 @@ class HardwareTarget:
     launch_s: float = 1.5e-6     # per-kernel dispatch overhead
 
     def matmul_flops(self, dtype: str = "bf16") -> float:
+        """Peak matmul FLOP/s for a dtype.  IR dtype names are
+        normalized to the table's datasheet keys ("bfloat16" -> "bf16")
+        so a rule-declared compute dtype prices against its real entry;
+        anything else without an entry — notably f32 storage — falls
+        back to the first (native mixed-precision) rate, the seed
+        model's deliberate "priced at the matrix unit's native rate
+        regardless of storage dtype" semantics."""
         d = dict(self.matmul_flops_by_dtype)
-        return d.get(dtype, self.matmul_flops_by_dtype[0][1])
+        key = _DTYPE_TABLE_KEYS.get(dtype, dtype)
+        return d.get(key, self.matmul_flops_by_dtype[0][1])
 
     def mxu_efficiency(self, tiles: dict[str, int]) -> float:
         """Achievable fraction of peak for a tile dict: full-rate when

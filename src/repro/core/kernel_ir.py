@@ -142,20 +142,29 @@ class KernelProgram:
 
     # ---- shape inference -------------------------------------------------
     def shapes(self) -> dict[str, TensorSpec]:
-        env: dict[str, TensorSpec] = dict(self.inputs)
-        for n in self.nodes:
-            env[n.name] = infer_shape(n, env)
-        return env
+        # memoized like fingerprint(): enumeration and pricing call this
+        # per group per visit, and the program is immutable.  A shallow
+        # copy is returned so a caller mutating its dict cannot corrupt
+        # the cache (specs themselves are frozen).
+        env = self.__dict__.get("_shapes")
+        if env is None:
+            env = dict(self.inputs)
+            for n in self.nodes:
+                env[n.name] = infer_shape(n, env)
+            object.__setattr__(self, "_shapes", env)
+        return dict(env)
 
 
 def infer_shape(n: OpNode, env: Mapping[str, TensorSpec]) -> TensorSpec:
     a = env[n.inputs[0]]
     if n.op == "matmul":
         b = env[n.inputs[1]]
-        return TensorSpec(a.shape[:-1] + (b.shape[-1],), a.dtype)
+        return TensorSpec(a.shape[:-1] + (b.shape[-1],),
+                          n.attr("out_dtype", a.dtype))
     if n.op == "grouped_matmul":
         b = env[n.inputs[1]]
-        return TensorSpec((a.shape[0], a.shape[1], b.shape[-1]), a.dtype)
+        return TensorSpec((a.shape[0], a.shape[1], b.shape[-1]),
+                          n.attr("out_dtype", a.dtype))
     if n.op in ("row_max", "row_sum"):
         return TensorSpec(a.shape[:-1] + (1,), a.dtype)
     if n.op == "attention":
@@ -207,16 +216,40 @@ def evaluate(prog: KernelProgram, inputs: Mapping[str, jax.Array]
     return [env[o] for o in prog.outputs]
 
 
+def _matmul_dtypes(n: OpNode):
+    """(compute_dtype, out_dtype) attrs of a matmul-family node — set by
+    the ``dtype`` rewrite rule (core/rules.py): compute in the reduced
+    dtype with float32 accumulation, store the output in ``out_dtype``."""
+    return n.attr("compute_dtype"), n.attr("out_dtype")
+
+
 def _eval_op(n: OpNode, a: list[jax.Array]) -> jax.Array:
     op = n.op
     if op == "matmul":
-        return jnp.matmul(a[0], a[1])
+        cd, od = _matmul_dtypes(n)
+        x, w = a
+        if cd:
+            out = jnp.matmul(x.astype(cd), w.astype(cd),
+                             preferred_element_type=jnp.float32)
+        else:
+            out = jnp.matmul(x, w)
+        return out.astype(od) if od else out
     if op == "grouped_matmul":
-        return jnp.einsum("ecd,edf->ecf", a[0], a[1])
+        cd, od = _matmul_dtypes(n)
+        x, w = a
+        if cd:
+            out = jnp.einsum("ecd,edf->ecf", x.astype(cd), w.astype(cd),
+                             preferred_element_type=jnp.float32)
+        else:
+            out = jnp.einsum("ecd,edf->ecf", x, w)
+        return out.astype(od) if od else out
     if op == "bias" or op == "add":
-        return a[0] + a[1]
+        # result keeps the first operand's dtype (a bf16 activation plus
+        # an f32 bias stays bf16 — mixed only via the dtype rule; pure
+        # f32 programs are unaffected)
+        return (a[0] + a[1]).astype(a[0].dtype)
     if op == "mul":
-        return a[0] * a[1]
+        return (a[0] * a[1]).astype(a[0].dtype)
     if op == "relu":
         return jax.nn.relu(a[0])
     if op == "gelu":
@@ -344,17 +377,46 @@ def _np_attention(n: OpNode, q, k, v) -> np.ndarray:
     return out.reshape(b, sq, kv * g, -1).astype(q.dtype)
 
 
+def _np_dtype(name: str):
+    """np dtype for an IR dtype string; bfloat16 needs ml_dtypes (ships
+    with jax).  NotImplementedError -> caller falls back to the jitted
+    jnp oracle, same as for the chunked scans."""
+    if name == "bfloat16":
+        try:
+            import ml_dtypes
+        except ImportError:  # pragma: no cover - ml_dtypes ships w/ jax
+            raise NotImplementedError("bfloat16 mirror needs ml_dtypes")
+        return ml_dtypes.bfloat16
+    return np.dtype(name)
+
+
+def _np_matmul_cast(n: OpNode, x: np.ndarray, w: np.ndarray):
+    """Mirror the dtype rule's reduced-precision compute: round the
+    operands through the compute dtype, accumulate in float32."""
+    cd, od = _matmul_dtypes(n)
+    if cd:
+        t = _np_dtype(cd)
+        x = x.astype(t).astype(np.float32)
+        w = w.astype(t).astype(np.float32)
+    return x, w, od
+
+
 def _eval_op_np(n: OpNode, a: list[np.ndarray]) -> np.ndarray:
     op = n.op
     if op == "matmul":
-        return np.matmul(a[0], a[1])
+        x, w, od = _np_matmul_cast(n, a[0], a[1])
+        out = np.matmul(x, w)
+        return out.astype(_np_dtype(od)) if od else out
     if op == "grouped_matmul":
-        return np.einsum("ecd,edf->ecf", a[0], a[1],
-                         optimize=True)
+        x, w, od = _np_matmul_cast(n, a[0], a[1])
+        out = np.einsum("ecd,edf->ecf", x, w, optimize=True)
+        return out.astype(_np_dtype(od)) if od else out
     if op in ("bias", "add"):
-        return a[0] + a[1]
+        return (a[0].astype(np.float32)
+                + a[1].astype(np.float32)).astype(a[0].dtype)
     if op == "mul":
-        return a[0] * a[1]
+        return (a[0].astype(np.float32)
+                * a[1].astype(np.float32)).astype(a[0].dtype)
     if op == "relu":
         return np.maximum(a[0], 0)
     if op == "gelu":       # jax.nn.gelu(approximate=True)
@@ -364,7 +426,8 @@ def _eval_op_np(n: OpNode, a: list[np.ndarray]) -> np.ndarray:
         return y.astype(a[0].dtype)
     if op == "silu":
         x = a[0]
-        return x / (1.0 + np.exp(-x.astype(np.float32))).astype(x.dtype)
+        with np.errstate(over="ignore"):   # exp(|x|) -> inf is exact here
+            return x / (1.0 + np.exp(-x.astype(np.float32))).astype(x.dtype)
     if op == "square":
         return np.square(a[0])
     if op == "softmax":
@@ -460,7 +523,7 @@ def chain_program(name: str, inputs: dict[str, tuple[int, ...]],
     nodes = tuple(OpNode(nm, op, ins) for nm, op, ins in ops)
     outs = outputs or (nodes[-1].name,)
     groups = tuple((n.name,) for n in nodes)
-    scheds = tuple((n.name, default_schedule(_sched_kind(n.op)))
+    scheds = tuple((n.name, default_schedule(sched_kind(n.op)))
                    for n in nodes)
     return KernelProgram(
         name=name,
@@ -468,9 +531,24 @@ def chain_program(name: str, inputs: dict[str, tuple[int, ...]],
         nodes=nodes, outputs=outs, fusion_groups=groups, schedules=scheds)
 
 
-def _sched_kind(op: str) -> str:
+def sched_kind(op: str) -> str:
+    """Kernel-library schedule family implementing ``op`` (public API —
+    the rewrite-rule registry, micro-coding and the measure harness all
+    key behavior on it)."""
     return {"matmul": "matmul", "attention": "flash_attention",
             "qk_scores": "matmul", "av": "matmul",
             "rmsnorm": "rmsnorm", "rwkv_chunk": "rwkv6_scan",
             "ssm_chunk": "ssm_scan",
             "grouped_matmul": "grouped_matmul"}.get(op, "elementwise")
+
+
+def sched_kind_of_group(prog: KernelProgram,
+                        group: tuple[str, ...]) -> str:
+    """Schedule family of a fusion group: its first non-elementwise
+    anchor's kind, else elementwise."""
+    nm = prog.node_map
+    for name in group:
+        k = sched_kind(nm[name].op)
+        if k != "elementwise":
+            return k
+    return "elementwise"

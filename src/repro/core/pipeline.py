@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.core import actions as A
-from repro.core import cost_model, hardware, search as S
+from repro.core import cost_model, hardware, rules, search as S
 from repro.core.env import EnvConfig, KernelEnv
 from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
 from repro.core.micro_coding import StructuredMicroCoder
@@ -63,6 +63,7 @@ class OptimizationResult:
 class MTMCPipeline:
     def __init__(self, policy: MacroPolicy | None = None, *,
                  mode: str = "policy", curated: bool = True,
+                 extended_rules: bool = False,
                  max_steps: int = 8, seed: int = 0,
                  validate: bool = True, store=None, target=None,
                  strategy: "S.SearchStrategy | str | None" = None,
@@ -71,6 +72,9 @@ class MTMCPipeline:
         self.policy = policy
         self.mode = mode
         self.curated = curated
+        # True adds the non-default registry rules (dtype, split_k) to
+        # the proposal space; False keeps the classic four
+        self.extended_rules = extended_rules
         self.max_steps = max_steps
         self.seed = seed
         self.validate = validate
@@ -129,7 +133,7 @@ class MTMCPipeline:
         if self.mode == "greedy_cost":
             best, best_c = A.STOP, self._cost(prog)
             for a in cands:
-                if a.kind == "stop":
+                if rules.is_terminal(a):
                     continue
                 r = self._apply(prog, a)
                 if r.status == "ok":
@@ -148,7 +152,8 @@ class MTMCPipeline:
         if self.mode == "single_pass":
             return self._single_pass(task, rng, key)
         env_cfg = EnvConfig(max_steps=self.max_steps,
-                            curated_actions=self.curated)
+                            curated_actions=self.curated,
+                            extended_rules=self.extended_rules)
         env = KernelEnv(task, self._coder, env_cfg, store=self.store,
                         target=self.target)
         state = env.reset()
@@ -174,7 +179,7 @@ class MTMCPipeline:
             visited.append((s, state))
             if s < best_s:
                 best, best_s, best_steps = state, s, t + 1
-            if act.kind == "stop" or res.done:
+            if rules.is_terminal(act) or res.done:
                 break
         best, best_s, meas, meas_base, reranked = self._maybe_rerank(
             task, S.top_candidates(visited), best, best_s)
@@ -202,7 +207,7 @@ class MTMCPipeline:
         out = self.strategy.search(
             task, coder=self._coder, store=store, target=self.target,
             max_steps=self.max_steps, seed=self.seed,
-            curated=self.curated)
+            curated=self.curated, extended=self.extended_rules)
         best, best_s, meas, meas_base, reranked = self._maybe_rerank(
             task, out.candidates, out.program, out.cost_s)
         steps = out.steps if not reranked else \
@@ -220,8 +225,10 @@ class MTMCPipeline:
         """'w/o Hier': commit to a full plan against the INITIAL state and
         apply all steps blindly; any failing step poisons the rest (the
         paper's observed single-pass failure mode)."""
-        cands = (A.candidate_actions(task) if self.curated
-                 else A.unrestricted_actions(task))
+        enum = (A.candidate_actions if self.curated
+                else A.unrestricted_actions)
+        cands = enum(task, target=self.target,
+                     extended=self.extended_rules)
         n = min(self.max_steps, 4)
         plan = [cands[rng.integers(len(cands))] for _ in range(n)]
         prog = task
@@ -286,15 +293,17 @@ class MTMCPipeline:
         if self.store is not None:
             return self.store.check(task, prog)
         inputs = make_inputs(task, jax.random.PRNGKey(CHECK_SEED))
+        # the rewritten program's rules may relax the tolerance (e.g.
+        # a reduced-precision dtype rewrite) — same per-output hook
+        # the store's memoized check consults
+        per_tol = rules.output_tolerances(prog, CHECK_RTOL, CHECK_ATOL)
         try:
             a = evaluate(task, inputs)
             b = evaluate(prog, inputs)
         except Exception:
             return False
-        import jax.numpy as jnp
-        return all(x.shape == y.shape and bool(
-            jnp.allclose(x, y, rtol=CHECK_RTOL, atol=CHECK_ATOL))
-            for x, y in zip(a, b))
+        return rules.outputs_match(a, b, CHECK_RTOL, CHECK_ATOL,
+                                   per_output=per_tol)
 
 
 def suite_metrics(results: list[OptimizationResult]) -> dict:

@@ -20,14 +20,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import actions as A
+from repro.core import rules as R
 from repro.core.kernel_ir import KernelProgram
+from repro.core.rules import NUM_BUCKETS as _NUM_BUCKETS, bucket as _bucket
 
 # ---------------------------------------------------------------------------
 # DSL tokenizer (word-level, closed vocabulary)
 # ---------------------------------------------------------------------------
-
-_NUM_BUCKETS = [1, 2, 4, 7, 8, 16, 32, 56, 64, 100, 128, 256, 384, 512,
-                640, 768, 896, 1024, 2048, 4096, 8192]
 
 _WORDS = (
     ["<pad>", "<s>", "</s>", "[G]", "[H]", "[A]", "->", "@"]
@@ -40,15 +39,13 @@ _WORDS = (
     + [f"n{v}" for v in _NUM_BUCKETS]
     + [f"r{i}" for i in range(24)]          # region slots
     + ["compute", "memory", "bound", "fused", "epi"]
+    # registry-extension words are APPENDED so every pre-existing token
+    # id (and with it any pickled policy's embedding rows) stays stable
+    + ["dtype", "bf16", "split_k", "sk"]
 )
 VOCAB = {w: i for i, w in enumerate(_WORDS)}
 VOCAB_SIZE = len(_WORDS)
 PAD, BOS, EOS = 0, 1, 2
-
-
-def _bucket(v: int) -> str:
-    b = min(_NUM_BUCKETS, key=lambda x: abs(np.log2(max(v, 1) / x)))
-    return f"n{b}"
 
 
 def encode(words: Sequence[str]) -> list[int]:
@@ -95,19 +92,11 @@ def state_words(prog: KernelProgram, max_groups: int = 10) -> list[str]:
 
 
 def action_words(act: A.Action, slots: dict[str, str]) -> list[str]:
-    if act.kind == "stop":
-        return ["stop", "</s>"]
-    words = [act.kind, slots.get(act.region, "r0")]
-    if act.kind == "tiling":
-        for bn, bv in act.param:
-            words += [bn, _bucket(bv)]
-    elif act.kind == "reorder":
-        words += ["order"] + list(act.param)
-    elif act.kind == "pipeline":
-        words += ["depth", _bucket(act.param[0])]
-    elif act.kind == "fusion":
-        words += ["@", slots.get(act.param[0], "r0")]
-    return words + ["</s>"]
+    """Serialize an action to DSL words — delegated to its rewrite
+    rule's ``words`` hook, so a newly registered rule scores through
+    the Macro LM with zero edits here (the registry↔vocab consistency
+    test pins that every registered rule emits in-vocabulary words)."""
+    return R.action_words(act, slots)
 
 
 # ---------------------------------------------------------------------------

@@ -96,10 +96,15 @@ def make_loss_fn(pcfg: PolicyConfig, cfg: PPOConfig):
 class PPOTrainer:
     def __init__(self, trees: dict[str, OfflineTree],
                  pcfg: PolicyConfig = PolicyConfig(),
-                 cfg: PPOConfig = PPOConfig(),
-                 env_cfg: EnvConfig = EnvConfig()):
+                 cfg: PPOConfig | None = None,
+                 env_cfg: EnvConfig | None = None):
+        # PolicyConfig is frozen (a shared default is harmless);
+        # PPOConfig/EnvConfig are mutable — a dataclass-instance
+        # default would be one object shared by every trainer
         self.trees = trees
-        self.pcfg, self.cfg, self.env_cfg = pcfg, cfg, env_cfg
+        self.pcfg = pcfg
+        self.cfg = cfg = cfg if cfg is not None else PPOConfig()
+        self.env_cfg = env_cfg if env_cfg is not None else EnvConfig()
         self.policy = MacroPolicy(pcfg, jax.random.PRNGKey(cfg.seed))
         self.opt_cfg = adamw.AdamWConfig(lr=cfg.lr, warmup_steps=10,
                                          total_steps=cfg.iters *

@@ -1,0 +1,899 @@
+"""Declarative rewrite-rule registry — the extensible optimization space.
+
+Every optimization the Macro policy can propose is ONE self-contained
+``RewriteRule`` bundling (DESIGN.md §12):
+
+  (a) candidate enumeration over a ``KernelProgram`` — *target-aware*:
+      curated tile presets are derived from the active
+      ``hardware.HardwareTarget``'s lane/sublane geometry and VMEM
+      capacity, not a global v5e-flavored table;
+  (b) a legality predicate — *target-independent* (the portability
+      envelope of DESIGN.md §9: one TranspositionStore's transition
+      memo serves every target), raising ``CompileError``;
+  (c) the IR rewrite itself;
+  (d) policy-vocabulary serialization (``words``) so the Macro LM can
+      score the action without per-kind special cases;
+  (e) cost-model and lowering hooks (``adjust_matmul``,
+      ``compute_dtype``, ``lower_cast``) so pricing and measured
+      execution learn about the rule without editing their dispatch.
+
+``candidate_actions``, ``StructuredMicroCoder``, ``KernelEnv``,
+``policy.action_words``, the search strategies and the measure harness
+all consume this registry; none of them switches on ``act.kind``.
+Rules registered with ``default=True`` form the classic curated space
+(byte-identical to the pre-registry action set — regression-tested in
+``tests/test_rules.py``); ``default=False`` rules (``dtype``,
+``split_k``) join only when a caller asks for the *extended* space.
+
+Adding a rule is ~30 lines and zero edits elsewhere — see README
+"Adding an optimization rule".
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import hardware
+from repro.core.actions import Action, STOP, fusion_candidates
+from repro.core.kernel_ir import (ELEMENTWISE, KernelProgram,
+                                  sched_kind, sched_kind_of_group)
+
+# ---------------------------------------------------------------------------
+# shared legality helpers (target-INDEPENDENT — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# portability-envelope VMEM budget: the minimum across registered
+# targets, so a legal rewrite is legal on every chip and transition
+# memos never need a target component in their keys
+VMEM_BYTES = 16 * 2 ** 20
+
+# fusion templates: (group op-pattern) the kernel library can emit
+FUSABLE_EPILOGUES = {"bias", "relu", "gelu", "silu", "add", "row_max"}
+
+LOOP_ORDERS = [("m", "n", "k"), ("n", "m", "k"),
+               ("m", "k", "n"), ("k", "m", "n")]
+PIPELINE_DEPTHS = (1, 2, 3, 4)
+
+BAD_TILES = [{"bm": 96, "bn": 80, "bk": 56}, {"bm": 8192, "bn": 8192,
+             "bk": 8192}, {"bq": 100, "bk": 60}, {"chunk": 7},
+             {"bm": 33, "bn": 100, "bk": 17}]
+
+# number buckets shared by the policy DSL and the rules' ``words``
+# serialization (policy.py re-exports these)
+NUM_BUCKETS = [1, 2, 4, 7, 8, 16, 32, 56, 64, 100, 128, 256, 384, 512,
+               640, 768, 896, 1024, 2048, 4096, 8192]
+
+
+def bucket(v: int) -> str:
+    b = min(NUM_BUCKETS, key=lambda x: abs(np.log2(max(v, 1) / x)))
+    return f"n{b}"
+
+
+class CompileError(Exception):
+    pass
+
+
+def group_for_root(prog: KernelProgram, root: str) -> tuple[str, ...]:
+    for g in prog.fusion_groups:
+        if prog.group_root(g) == root:
+            return g
+    raise CompileError(f"no kernel rooted at {root!r}")
+
+
+def tileable_dims(node, shapes, inputs) -> dict[str, int]:
+    sh = {k: v.shape for k, v in (shapes | dict(inputs)).items()}
+    if node.op == "matmul":
+        a, b = sh[node.inputs[0]], sh[node.inputs[1]]
+        return {"bm": int(np.prod(a[:-1])), "bk": a[-1], "bn": b[-1]}
+    if node.op == "grouped_matmul":
+        a, b = sh[node.inputs[0]], sh[node.inputs[1]]
+        return {"bc": a[1], "bd": a[2], "bf": b[2]}
+    if node.op == "attention":
+        q = sh[node.inputs[0]]
+        k = sh[node.inputs[1]]
+        return {"bq": q[1], "bk": k[1]}
+    if node.op == "qk_scores":
+        q, k = sh[node.inputs[0]], sh[node.inputs[1]]
+        return {"bm": q[1], "bk": q[-1], "bn": k[1]}
+    if node.op == "av":
+        p, v = sh[node.inputs[0]], sh[node.inputs[1]]
+        return {"bm": p[2], "bk": p[3], "bn": v[-1]}
+    if node.op in ("rwkv_chunk", "ssm_chunk"):
+        return {"chunk": sh[node.inputs[0]][1]}
+    if node.op == "rmsnorm":
+        x = sh[node.inputs[0]]
+        return {"rows": int(np.prod(x[:-1]))}
+    return {}
+
+
+def vmem_tile_bytes(kind: str, tiles: dict, dims: dict) -> float:
+    """Single-buffer VMEM footprint estimate per kernel kind."""
+    t = lambda n, d: tiles.get(n, min(d.get(n, 128), 128))
+    if kind in ("matmul", "grouped_matmul"):
+        bm = t("bm", dims) if kind == "matmul" else t("bc", dims)
+        bn = t("bn", dims) if kind == "matmul" else t("bf", dims)
+        bk = t("bk", dims) if kind == "matmul" else t("bd", dims)
+        return 4 * (bm * bk + bk * bn + 2 * bm * bn)
+    if kind == "flash_attention":
+        bq, bk = t("bq", dims), t("bk", dims)
+        hd = 128
+        return 4 * (bq * hd * 2 + 2 * bk * hd + bq * bk)
+    if kind in ("rwkv6_scan", "ssm_scan"):
+        c = t("chunk", dims)
+        return 4 * (c * c * 64 + 4 * c * 64 + 128 * 128)
+    if kind == "rmsnorm":
+        return 4 * 2 * t("rows", dims) * 4096
+    return 1 << 16
+
+
+def check_tiles(prog: KernelProgram, group, tiles) -> None:
+    """Legality of a tile dict for a group: name applicability,
+    divisibility, lane alignment, pipelined VMEM budget (the
+    portability envelope, NOT the per-target capacity)."""
+    kind = sched_kind_of_group(prog, group)
+    sched = prog.schedule_for(group)
+    tiles = tiles or sched.blocks_dict
+    if not tiles:
+        return
+    shapes = prog.shapes()
+    nm = prog.node_map
+    main = next((nm[n] for n in group
+                 if sched_kind(nm[n].op) == kind), nm[group[0]])
+    dims = tileable_dims(main, shapes, prog.input_specs)
+    for tname, t in tiles.items():
+        if dims and tname not in dims:
+            raise CompileError(
+                f"tile parameter {tname!r} not applicable to "
+                f"{kind} kernel {main.name} (has {sorted(dims)})")
+        if tname in dims:
+            if dims[tname] % t != 0:
+                raise CompileError(
+                    f"tile {tname}={t} does not divide dim "
+                    f"{dims[tname]} of {main.name}")
+            if kind in ("matmul", "grouped_matmul",
+                        "flash_attention") and t % 8 != 0:
+                raise CompileError(
+                    f"tile {tname}={t} violates TPU lane alignment")
+    vmem = vmem_tile_bytes(kind, tiles, dims)
+    depth = max(1, sched.pipeline_depth)
+    if vmem * (1 + (depth - 1)) > VMEM_BYTES:
+        raise CompileError(
+            f"VMEM overflow: {vmem * depth / 2**20:.1f}MiB "
+            f"(depth {depth}) > 16MiB")
+
+
+def check_fusion_pattern(prog: KernelProgram, merged) -> None:
+    nm = prog.node_map
+    ops = [nm[n].op for n in merged]
+    anchors = [o for o in ops if o not in ELEMENTWISE]
+    # pattern 1: [rmsnorm prologue +] matmul + elementwise epilogue(s)
+    if anchors in ([], ["matmul"], ["rmsnorm", "matmul"],
+                   ["matmul", "row_max"], ["grouped_matmul"],
+                   ["rmsnorm"], ["softmax"],
+                   ["qk_scores", "softmax"],   # softmax-epilogue GEMM
+                   ["matmul", "softmax"]):
+        return
+    # pattern 2: attention triple matmul+softmax+matmul -> flash kernel
+    if ops.count("matmul") == 2 and "softmax" in ops and \
+            all(o in ("matmul", "softmax", "bias", "mul") for o in ops):
+        return
+    # scans fuse with their elementwise pre/post processing
+    if anchors and anchors[0] in ("rwkv_chunk", "ssm_chunk") and \
+            all(o in ELEMENTWISE or o == anchors[0] for o in ops):
+        return
+    raise CompileError(
+        f"no fused-kernel template for op pattern {ops}")
+
+
+def epilogue_of(prog: KernelProgram, merged) -> str:
+    nm = prog.node_map
+    ops = [nm[n].op for n in merged]
+    if "matmul" not in ops and "grouped_matmul" not in ops:
+        return ""
+    epis = [o for o in ops if o in FUSABLE_EPILOGUES or o == "row_max"]
+    return "_".join(epis[:2]) if epis else ""
+
+
+# ---------------------------------------------------------------------------
+# target-aware curated tile presets
+# ---------------------------------------------------------------------------
+
+# geometric preset ladders in units of the anchor tile U.  U is
+# max(lane, 128): absolute tile sizes drive the modeled re-read
+# traffic, so a finer-laned chip (gpu_a100, lane 64) must not shrink
+# the ladder — it keeps the full-size rungs (every multiple of 128 is
+# lane-64-aligned) and ADDS finer natively-aligned entries below.  On
+# tpu_v5e (lane 128, sublane 8) this reproduces the historical
+# TILE_PRESETS bit-exactly.
+_MATMUL_LADDER = [(1, 1, 1), (2, 1, 1), (1, 2, 1), (2, 2, 1), (4, 1, 1),
+                  (1, 1, 2), (4, 2, 1), (2, 2, 2)]
+_FLASH_LADDER = [(1, 1), (2, 1), (1, 2), (2, 2), (4, 1), (0.5, 0.5),
+                 (4, 2), (8, 1)]
+_GROUPED_LADDER = [(1, 1, 1), (2, 1, 1), (1, 2, 1), (2, 2, 1), (4, 1, 1)]
+
+# memo keyed by the geometry that actually derives the presets (NOT
+# the target name): a re-registered or ad-hoc target with new
+# lane/sublane/VMEM computes fresh, one with the same geometry shares
+# — every entry is a pure function of its key, no invalidation needed
+_PRESET_CACHE: dict[tuple[str, int, int, float], list[dict]] = {}
+
+
+def tile_presets(kind: str, target=None) -> list[dict]:
+    """Curated tile candidates for one kernel kind on one target,
+    derived from lane/sublane geometry and capacity-filtered against
+    the target's VMEM (double-buffered footprint must fit)."""
+    tgt = hardware.resolve(target)
+    key = (kind, tgt.lane, tgt.sublane, tgt.vmem_bytes)
+    hit = _PRESET_CACHE.get(key)
+    if hit is not None:
+        return hit
+    L, s = tgt.lane, tgt.sublane
+    U = max(L, 128)
+    if kind == "matmul":
+        raw = [{"bm": int(m * U), "bn": int(n * U), "bk": int(k * U)}
+               for m, n, k in _MATMUL_LADDER]
+        raw.append({"bm": U // 2, "bn": U // 2, "bk": U // 2})
+        if L < U:
+            # finer lane-granular tile only this chip can run
+            # (reduced-efficiency option for ragged shapes, the same
+            # role the U//2 rung plays on the anchor geometry)
+            raw.append({"bm": L // 2, "bn": L // 2, "bk": L // 2})
+    elif kind == "flash_attention":
+        raw = [{"bq": int(q * U), "bk": int(k * U)}
+               for q, k in _FLASH_LADDER]
+        if L < U:
+            raw.append({"bq": L // 2, "bk": L // 2})
+    elif kind == "rmsnorm":
+        raw = [{"rows": m * U} for m in (1, 2, 4, 8)]
+    elif kind in ("rwkv6_scan", "ssm_scan"):
+        # chunk granularity follows the sublane: a chunk narrower than
+        # 2 sublanes wastes row granularity on this chip
+        raw = [{"chunk": m * s} for m in (2, 4, 8, 16)]
+    elif kind == "grouped_matmul":
+        raw = [{"bc": int(c * U), "bf": int(f * U), "bd": int(d * U)}
+               for c, f, d in _GROUPED_LADDER]
+        if L < U:
+            raw.append({"bc": L, "bf": L, "bd": L})
+    else:
+        raw = []
+    if kind in ("matmul", "grouped_matmul", "flash_attention"):
+        # VMEM capacity filter: a preset whose double-buffered tiles
+        # cannot fit the target's on-chip memory is never proposed
+        raw = [p for p in raw
+               if 2 * vmem_tile_bytes(kind, p, {}) <= tgt.vmem_bytes]
+    _PRESET_CACHE[key] = raw
+    return raw
+
+
+# ---------------------------------------------------------------------------
+# the rule protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PriceAdjust:
+    """Cost-model deltas a rule contributes to one matmul node."""
+    hbm_scale: float = 1.0
+    hbm_extra: float = 0.0
+    vpu_extra: float = 0.0
+
+
+class RewriteRule:
+    """One optimization: enumeration + legality + rewrite + vocab +
+    pricing/lowering hooks.  Subclass, set ``kind``, register."""
+
+    kind: str = ""
+    default: bool = True        # member of the classic curated space
+    terminal: bool = False      # a stop-like action (no rewrite)
+
+    # -- (a) enumeration ---------------------------------------------------
+    def group_actions(self, prog, group, root, kind, target
+                      ) -> list[Action]:
+        """Curated candidates targeting one fusion group."""
+        return []
+
+    def global_actions(self, prog, target) -> list[Action]:
+        """Curated candidates over the whole program (e.g. fusions)."""
+        return []
+
+    def bad_group_actions(self, prog, group, root, kind, target
+                          ) -> list[Action]:
+        """'w/o AS' extras: invalid-prone proposals, per group."""
+        return []
+
+    def bad_global_actions(self, prog, target) -> list[Action]:
+        return []
+
+    # -- (b)+(c) legality and rewrite --------------------------------------
+    def rewrite(self, prog: KernelProgram, act: Action) -> KernelProgram:
+        """Apply ``act``; raise ``CompileError`` when illegal.  MUST be
+        target-independent (DESIGN.md §9)."""
+        raise CompileError(f"rule {self.kind!r} has no rewrite")
+
+    # -- (d) policy vocabulary ---------------------------------------------
+    def param_words(self, act: Action) -> list[str]:
+        return []
+
+    def words(self, act: Action, slots: dict[str, str]) -> list[str]:
+        return ([act.kind, slots.get(act.region, "r0")]
+                + self.param_words(act) + ["</s>"])
+
+    def describe(self, act: Action) -> str:
+        p = dict(act.param) if act.param and isinstance(
+            act.param[0], tuple) else act.param
+        return f"{act.kind} @ {act.region} -> {p}"
+
+    # -- (e) cost-model / oracle / lowering hooks --------------------------
+    def check_tol(self, prog: KernelProgram
+                  ) -> tuple[float, float, bool] | None:
+        """Relaxed (rtol, atol, norm_scaled) the oracle should allow
+        for programs carrying this rule's markers; None = no opinion.
+        ``norm_scaled=True`` asks the checker to scale atol by the
+        reference output's max magnitude (reduced-precision error grows
+        with magnitude, and fixed atol cannot straddle a relu's
+        near-zero crossings and a deep chain's thousands at once)."""
+        return None
+
+    def marked_nodes(self, prog: KernelProgram) -> set:
+        """Node names whose semantics this rule altered.  Oracle checks
+        relax tolerance ONLY for outputs data-dependent on these nodes
+        (``output_tolerances``); an empty set with a ``check_tol``
+        opinion relaxes the whole program."""
+        return set()
+
+    def compute_dtype(self, node) -> str | None:
+        """Per-node matmul compute dtype override for the cost model."""
+        return None
+
+    def adjust_matmul(self, adj: PriceAdjust, node, sched, out_spec,
+                      M, N, K, tiles, target) -> None:
+        """Mutate ``adj`` with this rule's pricing deltas for one
+        matmul node (neutral by default)."""
+
+    def lower_cast(self, prog, group) -> str | None:
+        """Dtype the measure harness should cast a lowered group's
+        outputs to (None = leave the kernel's native output)."""
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the four classic rules (byte-identical migration of the frozen space)
+# ---------------------------------------------------------------------------
+
+class TilingRule(RewriteRule):
+    kind = "tiling"
+
+    def group_actions(self, prog, group, root, kind, target):
+        return [Action("tiling", root, tuple(sorted(p.items())))
+                for p in tile_presets(kind, target)]
+
+    def bad_group_actions(self, prog, group, root, kind, target):
+        return [Action("tiling", root, tuple(sorted(bad.items())))
+                for bad in BAD_TILES]
+
+    def rewrite(self, prog, act):
+        g = group_for_root(prog, act.region)
+        tiles = dict(act.param)
+        check_tiles(prog, g, tiles)
+        sched = prog.schedule_for(g).replace(blocks=tiles)
+        return prog.with_schedule(act.region, sched)
+
+    def param_words(self, act):
+        out = []
+        for bn, bv in act.param:
+            out += [bn, bucket(bv)]
+        return out
+
+
+class ReorderRule(RewriteRule):
+    kind = "reorder"
+
+    def group_actions(self, prog, group, root, kind, target):
+        if kind not in ("matmul", "grouped_matmul"):
+            return []
+        return [Action("reorder", root, order) for order in LOOP_ORDERS]
+
+    def rewrite(self, prog, act):
+        g = group_for_root(prog, act.region)
+        kind = sched_kind_of_group(prog, g)
+        if kind not in ("matmul", "grouped_matmul"):
+            raise CompileError(f"loop reorder not applicable to {kind}")
+        order = tuple(act.param)
+        if sorted(order) != ["k", "m", "n"]:
+            raise CompileError(f"invalid loop order {order}")
+        sched = prog.schedule_for(g).replace(loop_order=order)
+        return prog.with_schedule(act.region, sched)
+
+    def param_words(self, act):
+        return ["order"] + list(act.param)
+
+
+class PipelineRule(RewriteRule):
+    kind = "pipeline"
+
+    def group_actions(self, prog, group, root, kind, target):
+        if kind == "elementwise":
+            return []
+        return [Action("pipeline", root, (d,)) for d in PIPELINE_DEPTHS]
+
+    def rewrite(self, prog, act):
+        g = group_for_root(prog, act.region)
+        depth = int(act.param[0])
+        if not 1 <= depth <= 8:
+            raise CompileError(f"pipeline depth {depth} out of range")
+        # deeper pipelines multiply live tile buffers: re-check VMEM
+        sched = prog.schedule_for(g).replace(pipeline_depth=depth)
+        tmp = prog.with_schedule(act.region, sched)
+        check_tiles(tmp, g, sched.blocks_dict or None)
+        return tmp
+
+    def param_words(self, act):
+        return ["depth", bucket(act.param[0])]
+
+
+class FusionRule(RewriteRule):
+    kind = "fusion"
+
+    def global_actions(self, prog, target):
+        return [Action("fusion", a, (b,))
+                for a, b in fusion_candidates(prog)]
+
+    def bad_global_actions(self, prog, target):
+        names = [n.name for n in prog.nodes]
+        return [Action("fusion", a, (b,)) for a, b in itertools.islice(
+            itertools.combinations(names, 2), 12)]
+
+    def rewrite(self, prog, act):
+        a_root, b_root = act.region, act.param[0]
+        ga = group_for_root(prog, a_root)
+        gb = group_for_root(prog, b_root)
+        if ga == gb:
+            raise CompileError("cannot fuse a kernel with itself")
+        if (a_root, b_root) not in fusion_candidates(prog):
+            raise CompileError(
+                f"{a_root} and {b_root} are not dataflow-adjacent")
+        merged = ga + gb
+        nm = prog.node_map
+        ops = [nm[n].op for n in merged]
+        if sorted(ops) == ["av", "qk_scores", "softmax"]:
+            return self._rewrite_flash(prog, ga, gb, merged)
+        check_fusion_pattern(prog, merged)
+        groups = tuple(g for g in prog.fusion_groups if g not in (ga, gb))
+        # preserve topological position of the producer group
+        idx = prog.fusion_groups.index(ga)
+        groups = groups[:idx] + (merged,) + groups[idx:]
+        sm = prog.schedule_map
+        sched = sm.pop(a_root, None)
+        sm.pop(b_root, None)
+        epi = epilogue_of(prog, merged)
+        if sched is not None and epi:
+            sched = sched.replace(epilogue=epi)
+        return prog.replace(fusion_groups=groups,
+                            schedules=tuple(sorted(
+                                (sm | ({a_root: sched} if sched else {}))
+                                .items())))
+
+    @staticmethod
+    def _rewrite_flash(prog, ga, gb, merged):
+        """qk_scores + softmax + av  ==>  one fused attention node
+        (the flash kernel).  The fused node keeps the av node's name so
+        downstream consumers stay wired."""
+        nm = prog.node_map
+        qk = next(nm[n] for n in merged if nm[n].op == "qk_scores")
+        av = next(nm[n] for n in merged if nm[n].op == "av")
+        fused = dataclasses.replace(
+            av, op="attention",
+            inputs=(qk.inputs[0], qk.inputs[1], av.inputs[1]),
+            attrs=qk.attrs)
+        drop = set(merged) - {av.name}
+        nodes = tuple(fused if n.name == av.name else n
+                      for n in prog.nodes if n.name not in drop)
+        groups = tuple(g for g in prog.fusion_groups if g not in (ga, gb))
+        idx = prog.fusion_groups.index(ga)
+        groups = groups[:idx] + ((av.name,),) + groups[idx:]
+        sm = {k: v for k, v in prog.schedule_map.items()
+              if k not in merged}
+        from repro.kernels.schedule import default_schedule
+        sm[av.name] = default_schedule("flash_attention")
+        return prog.replace(nodes=nodes, fusion_groups=groups,
+                            schedules=tuple(sorted(sm.items())))
+
+    def param_words(self, act):
+        # the target slot is resolved in ``words`` (needs the slot map)
+        return []
+
+    def words(self, act, slots):
+        return [act.kind, slots.get(act.region, "r0"), "@",
+                slots.get(act.param[0], "r0"), "</s>"]
+
+
+class StopRule(RewriteRule):
+    kind = "stop"
+    terminal = True
+
+    def words(self, act, slots):
+        return ["stop", "</s>"]
+
+    def describe(self, act):
+        return "stop optimization"
+
+
+# ---------------------------------------------------------------------------
+# extension rules — registered through the registry alone, no dispatch
+# edits anywhere else (the extensibility proof of DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+class DtypeRule(RewriteRule):
+    """bf16 compute with f32 accumulation on a matmul-family anchor.
+
+    The rewrite stamps ``compute_dtype``/``out_dtype`` attrs on the
+    group's matmul/grouped_matmul anchors: operands are rounded to
+    bf16, accumulated in f32, and the output is stored bf16.  Pricing
+    flows through the existing byte accounting (a bf16 output spec
+    halves the group's HBM-out bytes and every downstream consumer's
+    operand reads) plus the per-dtype matmul FLOP/s table of the
+    ``HardwareTarget``.  The oracle grades the rewrite at a relaxed
+    tolerance (bf16 rounding is far above the f32 2e-3 default)."""
+
+    kind = "dtype"
+    default = False
+
+    DTYPE = "bfloat16"
+    RTOL = 5e-2
+    ATOL = 2e-2          # x the reference output's max magnitude
+
+    def _anchors(self, prog, group):
+        nm = prog.node_map
+        return [nm[n] for n in group
+                if nm[n].op in ("matmul", "grouped_matmul")]
+
+    def group_actions(self, prog, group, root, kind, target):
+        if kind not in ("matmul", "grouped_matmul"):
+            return []
+        anchors = self._anchors(prog, group)
+        if not anchors or any(a.attr("compute_dtype") for a in anchors):
+            return []
+        if prog.inputs and prog.inputs[0][1].dtype != "float32":
+            return []
+        return [Action("dtype", root, (self.DTYPE,))]
+
+    def rewrite(self, prog, act):
+        g = group_for_root(prog, act.region)
+        dt = act.param[0]
+        if dt != self.DTYPE:
+            raise CompileError(f"unsupported compute dtype {dt!r}")
+        anchors = self._anchors(prog, g)
+        if not anchors:
+            raise CompileError(
+                f"no matmul anchor in kernel {act.region!r} to cast")
+        if any(a.attr("compute_dtype") for a in anchors):
+            raise CompileError(
+                f"kernel {act.region!r} is already reduced-precision")
+        names = {a.name for a in anchors}
+        extra = (("compute_dtype", dt), ("out_dtype", dt))
+        nodes = tuple(
+            dataclasses.replace(n, attrs=n.attrs + extra)
+            if n.name in names else n for n in prog.nodes)
+        return prog.replace(nodes=nodes)
+
+    def param_words(self, act):
+        return ["bf16"]
+
+    def check_tol(self, prog):
+        if self.marked_nodes(prog):
+            return (self.RTOL, self.ATOL, True)
+        return None
+
+    def marked_nodes(self, prog):
+        return {n.name for n in prog.nodes
+                if n.attr("compute_dtype") or n.attr("out_dtype")}
+
+    def compute_dtype(self, node):
+        return node.attr("compute_dtype")
+
+    def lower_cast(self, prog, group):
+        nm = prog.node_map
+        for n in group:
+            od = nm[n].attr("out_dtype")
+            if od:
+                return od
+        return None
+
+
+class SplitKRule(RewriteRule):
+    """K-split + partial-sum reduce for skinny-M matmuls.
+
+    Schedule-level rewrite: a ``split_k=S`` flag on the group's
+    schedule partitions the K reduction into S concurrent partial
+    streams whose f32 partials are reduced at the end.  The math is
+    unchanged (the oracle accepts it structurally, like any
+    schedule-only rewrite); the pricing hook owns the *stream
+    occupancy* term: a matmul whose live output rows under-fill the
+    DMA/compute pipeline (rows < 2·sublane) is priced at a fraction
+    ``rows·S / (2·sublane)`` of peak HBM bandwidth, and split-K buys
+    the occupancy back at the price of ``2·(S-1)·M·N`` partial bytes
+    plus the VPU reduce.  Every pre-registry program has
+    ``rows >= 2·sublane`` on all registered targets, so classic prices
+    are untouched (regression-tested)."""
+
+    kind = "split_k"
+    default = False
+
+    SKINNY_M = 64          # legality: target-independent envelope
+    SPLITS = (2, 4, 8)
+    FLAG = "split_k="
+
+    @classmethod
+    def splits_of(cls, sched) -> int:
+        for f in sched.flags:
+            if f.startswith(cls.FLAG):
+                return int(f[len(cls.FLAG):])
+        return 1
+
+    def _anchor_dims(self, prog, group):
+        """(M, K) of the group's single plain-matmul anchor, else None."""
+        nm = prog.node_map
+        anchors = [nm[n] for n in group if nm[n].op == "matmul"]
+        if len(anchors) != 1:
+            return None
+        a_spec = prog.shapes().get(anchors[0].inputs[0])
+        if a_spec is None:
+            a_spec = prog.input_specs.get(anchors[0].inputs[0])
+        if a_spec is None or len(a_spec.shape) < 2:
+            return None
+        return int(np.prod(a_spec.shape[:-1])), int(a_spec.shape[-1])
+
+    def group_actions(self, prog, group, root, kind, target):
+        if kind != "matmul":
+            return []
+        dims = self._anchor_dims(prog, group)
+        if dims is None:
+            return []
+        M, K = dims
+        if M > self.SKINNY_M:
+            return []
+        return [Action("split_k", root, (s,)) for s in self.SPLITS
+                if K % s == 0 and (K // s) % 8 == 0]
+
+    def rewrite(self, prog, act):
+        g = group_for_root(prog, act.region)
+        if sched_kind_of_group(prog, g) != "matmul":
+            raise CompileError("split_k applies to matmul kernels only")
+        dims = self._anchor_dims(prog, g)
+        if dims is None:
+            raise CompileError(
+                f"kernel {act.region!r} has no single matmul anchor")
+        M, K = dims
+        if M > self.SKINNY_M:
+            raise CompileError(
+                f"split_k is for skinny-M matmuls (M={M} > "
+                f"{self.SKINNY_M})")
+        S = int(act.param[0])
+        if not 2 <= S <= 16:
+            raise CompileError(f"split factor {S} out of range")
+        if K % S != 0 or (K // S) % 8 != 0:
+            raise CompileError(
+                f"split factor {S} does not evenly divide K={K} into "
+                "lane-aligned chunks")
+        sched = prog.schedule_for(g)
+        flags = tuple(f for f in sched.flags
+                      if not f.startswith(self.FLAG))
+        sched = sched.replace(flags=flags + (f"{self.FLAG}{S}",))
+        return prog.with_schedule(act.region, sched)
+
+    def param_words(self, act):
+        return ["sk", bucket(act.param[0])]
+
+    def adjust_matmul(self, adj, node, sched, out_spec, M, N, K,
+                      tiles, target):
+        tgt = hardware.resolve(target)
+        S = self.splits_of(sched)
+        rows = min(M, tiles.get("bm", 128))
+        occ = min(1.0, (rows * S) / (2.0 * tgt.sublane))
+        adj.hbm_scale *= 1.0 / max(occ, 1e-9)
+        if S > 1:
+            itemsize = out_spec.bytes / max(out_spec.elems, 1)
+            adj.hbm_extra += 2.0 * (S - 1) * M * N * itemsize
+            adj.vpu_extra += float((S - 1) * M * N)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, RewriteRule] = {}       # insertion-ordered
+
+
+def register_rule(rule: RewriteRule, *, overwrite: bool = False) -> None:
+    if rule.kind in _RULES and not overwrite:
+        raise ValueError(f"rule {rule.kind!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _RULES[rule.kind] = rule
+
+
+def get_rule(kind: str) -> RewriteRule:
+    try:
+        return _RULES[kind]
+    except KeyError:
+        raise KeyError(f"unknown rewrite rule {kind!r}; registered: "
+                       f"{sorted(_RULES)}") from None
+
+
+def registered_rules(extended: bool = True) -> list[RewriteRule]:
+    return [r for r in _RULES.values() if extended or r.default]
+
+
+def is_terminal(act: Action) -> bool:
+    r = _RULES.get(act.kind)
+    return bool(r is not None and r.terminal)
+
+
+def describe(act: Action) -> str:
+    r = _RULES.get(act.kind)
+    if r is not None:
+        return r.describe(act)
+    p = dict(act.param) if act.param and isinstance(
+        act.param[0], tuple) else act.param
+    return f"{act.kind} @ {act.region} -> {p}"
+
+
+def action_words(act: Action, slots: dict[str, str]) -> list[str]:
+    r = _RULES.get(act.kind)
+    if r is not None:
+        return r.words(act, slots)
+    # unknown kind: generic serialization (encode() drops OOV words)
+    return [act.kind, slots.get(act.region, "r0"), "</s>"]
+
+
+def apply_rule(prog: KernelProgram, act: Action) -> KernelProgram:
+    """Rewrite via the registry; raises CompileError (incl. for unknown
+    kinds — an unknown proposal is exactly a compile failure)."""
+    r = _RULES.get(act.kind)
+    if r is None:
+        raise CompileError(f"unknown action kind {act.kind}")
+    return r.rewrite(prog, act)
+
+
+def candidate_actions(prog: KernelProgram, target=None,
+                      extended: bool = False) -> list[Action]:
+    """Curated action space: per-group candidates from every per-group
+    rule (registration order), then program-wide candidates, then
+    stop.  On the default target with ``extended=False`` this is
+    byte-identical to the pre-registry frozen space."""
+    tgt = hardware.resolve(target)
+    rules = registered_rules(extended)
+    acts: list[Action] = []
+    for g in prog.fusion_groups:
+        root = prog.group_root(g)
+        kind = sched_kind_of_group(prog, g)
+        for r in rules:
+            if not r.terminal:
+                acts += r.group_actions(prog, g, root, kind, tgt)
+    for r in rules:
+        if not r.terminal:
+            acts += r.global_actions(prog, tgt)
+    acts.append(STOP)
+    return acts
+
+
+def unrestricted_actions(prog: KernelProgram, target=None,
+                         extended: bool = False) -> list[Action]:
+    """'w/o AS' ablation: curated + each rule's invalid-prone extras."""
+    tgt = hardware.resolve(target)
+    rules = registered_rules(extended)
+    acts = candidate_actions(prog, tgt, extended)
+    for g in prog.fusion_groups:
+        root = prog.group_root(g)
+        kind = sched_kind_of_group(prog, g)
+        for r in rules:
+            acts += r.bad_group_actions(prog, g, root, kind, tgt)
+    for r in rules:
+        acts += r.bad_global_actions(prog, tgt)
+    return acts
+
+
+def check_tolerance(prog: KernelProgram, rtol: float, atol: float
+                    ) -> tuple[float, float, bool]:
+    """Program-wide oracle tolerance for ``prog``: the defaults,
+    relaxed to the max any rule with markers in the program asks for
+    (a pure function of the program, so memoized checks stay pure
+    functions of their key).  The third element asks the checker to
+    scale atol by the reference output's max magnitude (see
+    ``RewriteRule.check_tol``).  Oracle checks of multi-output
+    programs should prefer ``output_tolerances``, which scopes each
+    rule's relaxation to the outputs its markers actually reach."""
+    norm = False
+    for r in _RULES.values():
+        tol = r.check_tol(prog)
+        if tol is not None:
+            rtol, atol = max(rtol, tol[0]), max(atol, tol[1])
+            norm = norm or tol[2]
+    return rtol, atol, norm
+
+
+def output_tolerances(prog: KernelProgram, rtol: float, atol: float
+                      ) -> list[tuple[float, float, bool]]:
+    """Per-output (rtol, atol, norm_scaled): a rule's relaxation
+    applies only to outputs data-dependent on its ``marked_nodes`` —
+    an unrelated output of the same program is still graded at the
+    defaults, so a relaxed rewrite cannot mask a miscompile elsewhere.
+    A rule relaxing without markers relaxes every output."""
+    per = [(rtol, atol, False)] * len(prog.outputs)
+    for r in _RULES.values():
+        tol = r.check_tol(prog)
+        if tol is None:
+            continue
+        marked = r.marked_nodes(prog)
+        if marked:
+            tainted = set(marked)
+            for n in prog.nodes:          # topological order
+                if n.name in tainted or any(i in tainted
+                                            for i in n.inputs):
+                    tainted.add(n.name)
+        else:
+            tainted = None                # whole-program relaxation
+        per = [(max(p[0], tol[0]), max(p[1], tol[1]), p[2] or tol[2])
+               if tainted is None or o in tainted else p
+               for p, o in zip(per, prog.outputs)]
+    return per
+
+
+def outputs_match(ref, got, rtol: float, atol: float,
+                  norm_scaled: bool = False, per_output=None) -> bool:
+    """Shared oracle comparison: equal output count, shapes equal +
+    allclose per output, with atol optionally scaled by the
+    reference's max magnitude (the ``check_tolerance`` contract).
+    ``per_output`` (from ``output_tolerances``) overrides the scalar
+    tolerances per output.  Used by the store's memoized check, the
+    serial pipeline check, the micro-coder's tier-2 validation and the
+    measure harness's lowering verification so the paths cannot
+    diverge."""
+    import jax.numpy as jnp
+    ref, got = list(ref), list(got)
+    if len(ref) != len(got):
+        return False
+    for i, (x, y) in enumerate(zip(ref, got)):
+        r, a, nrm = per_output[i] if per_output is not None \
+            else (rtol, atol, norm_scaled)
+        if x.shape != y.shape:
+            return False
+        if nrm:
+            a = a * max(1.0, float(jnp.max(jnp.abs(x))))
+        if not bool(jnp.allclose(x, y, rtol=r, atol=a)):
+            return False
+    return True
+
+
+def compute_dtype_of(node) -> str | None:
+    for r in _RULES.values():
+        dt = r.compute_dtype(node)
+        if dt is not None:
+            return dt
+    return None
+
+
+def matmul_price(node, sched, out_spec, M, N, K, tiles, target
+                 ) -> PriceAdjust:
+    adj = PriceAdjust()
+    for r in _RULES.values():
+        r.adjust_matmul(adj, node, sched, out_spec, M, N, K, tiles,
+                        target)
+    return adj
+
+
+def lower_cast(prog: KernelProgram, group) -> str | None:
+    for r in _RULES.values():
+        dt = r.lower_cast(prog, group)
+        if dt is not None:
+            return dt
+    return None
+
+
+register_rule(TilingRule())
+register_rule(ReorderRule())
+register_rule(PipelineRule())
+register_rule(FusionRule())
+register_rule(StopRule())
+register_rule(DtypeRule())
+register_rule(SplitKRule())

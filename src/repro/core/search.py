@@ -38,7 +38,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import actions as A
-from repro.core import hardware
+from repro.core import hardware, rules
 from repro.core.kernel_ir import KernelProgram
 
 # a child must beat the incumbent by this relative margin for greedy to
@@ -97,17 +97,21 @@ class SearchStrategy:
 
     def search(self, task: KernelProgram, *, coder, store,
                target=None, max_steps: int = 8, seed: int = 0,
-               curated: bool = True) -> SearchOutcome:
+               curated: bool = True,
+               extended: bool = False) -> SearchOutcome:
         raise NotImplementedError
 
     def _children(self, store, coder, prog: KernelProgram,
-                  curated: bool) -> tuple[list, int]:
-        """All valid (action, child) successors of ``prog``."""
-        acts = (A.candidate_actions(prog) if curated
-                else A.unrestricted_actions(prog))
+                  curated: bool, target=None,
+                  extended: bool = False) -> tuple[list, int]:
+        """All valid (action, child) successors of ``prog`` — candidate
+        enumeration is target-aware (registry presets), legality and
+        the store's transition memo are not (DESIGN.md §9)."""
+        enum = (A.candidate_actions if curated
+                else A.unrestricted_actions)
         ok, fails = [], 0
-        for a in acts:
-            if a.kind == "stop":
+        for a in enum(prog, target=target, extended=extended):
+            if rules.is_terminal(a):
                 continue
             r = store.apply(coder, prog, a)
             if r.status == "ok":
@@ -123,14 +127,15 @@ class GreedySearch(SearchStrategy):
     name = "greedy"
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True) -> SearchOutcome:
+               seed=0, curated=True, extended=False) -> SearchOutcome:
         tgt = hardware.resolve(target)
         cur, cur_c = task, store.cost(task, tgt)
         base = cur_c
         steps = n_exp = n_fail = 0
         visited = [(cur_c, cur)]
         for t in range(max_steps):
-            children, fails = self._children(store, coder, cur, curated)
+            children, fails = self._children(store, coder, cur, curated,
+                                             tgt, extended)
             n_fail += fails
             n_exp += len(children)
             best, best_c = None, cur_c
@@ -179,11 +184,12 @@ class BeamSearch(SearchStrategy):
         self.per_parent = per_parent
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True) -> SearchOutcome:
+               seed=0, curated=True, extended=False) -> SearchOutcome:
         tgt = hardware.resolve(target)
         backbone = GreedySearch().search(
             task, coder=coder, store=store, target=tgt,
-            max_steps=max_steps, seed=seed, curated=curated)
+            max_steps=max_steps, seed=seed, curated=curated,
+            extended=extended)
         base = backbone.baseline_s
         best, best_c = backbone.program, backbone.cost_s
         best_depth = backbone.steps
@@ -195,7 +201,7 @@ class BeamSearch(SearchStrategy):
             pool, depth_fps = [], set()
             for pi, (_, prog) in enumerate(frontier):
                 children, fails = self._children(store, coder, prog,
-                                                 curated)
+                                                 curated, tgt, extended)
                 n_fail += fails
                 for _, ch in children:
                     fp = ch.fingerprint()
@@ -245,7 +251,7 @@ class AnnealedSearch(SearchStrategy):
         self.decay = decay
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True) -> SearchOutcome:
+               seed=0, curated=True, extended=False) -> SearchOutcome:
         tgt = hardware.resolve(target)
         rng = np.random.default_rng(seed)
         base = store.cost(task, tgt)
@@ -257,7 +263,7 @@ class AnnealedSearch(SearchStrategy):
             cur, cur_c = task, base
             for t in range(max_steps):
                 children, fails = self._children(store, coder, cur,
-                                                 curated)
+                                                 curated, tgt, extended)
                 n_fail += fails
                 n_exp += len(children)
                 if not children:

@@ -230,6 +230,39 @@ def tb_g() -> list[KernelProgram]:
 
 
 # ---------------------------------------------------------------------------
+# extension suite — workloads opened by the non-default registry rules
+# ---------------------------------------------------------------------------
+
+def ext_tasks() -> list[KernelProgram]:
+    """Decode-shaped skinny-M matmuls (the ``split_k`` rule's domain:
+    classic tile presets cannot even divide M, and the un-split stream
+    under-fills the pipeline) and weight-heavy bf16-friendly chains
+    (the ``dtype`` rule's domain: memory-bound on operand bytes that a
+    bf16 output spec halves).  Kept out of the KB/TB suites so their
+    committed benchmark rows stay comparable across PRs."""
+    t = []
+    # skinny-M: batch-4/8 decode GEMMs, long reduction dims
+    for name, m, k, n in [("EXT_decode_head", 4, 2048, 1024),
+                          ("EXT_decode_qkv", 8, 1024, 1536)]:
+        t.append(chain_program(name, {"x": (m, k), "w": (k, n)},
+                               [("y", "matmul", ("x", "w"))]))
+    t.append(chain_program("EXT_decode_ffn",
+                           {"x": (4, 1024), "w1": (1024, 4096),
+                            "b1": (4096,)},
+                           [("h", "matmul", ("x", "w1")),
+                            ("hb", "bias", ("h", "b1")),
+                            ("y", "silu", ("hb",))]))
+    # bf16-friendly: weight-streaming-bound matmul chains
+    t.append(_ffn_chain("EXT_mlp_bf16", 256, 2048, 8192, "gelu", 2048))
+    t.append(chain_program("EXT_proj_bf16",
+                           {"x": (512, 4096), "w": (4096, 1024)},
+                           [("h", "matmul", ("x", "w")),
+                            ("y", "gelu", ("h",))]))
+    t.append(_ffn_chain("EXT_gate_bf16", 384, 1536, 6144, "silu", 1536))
+    return t
+
+
+# ---------------------------------------------------------------------------
 # policy-training tasks (disjoint from ALL benchmark instances)
 # ---------------------------------------------------------------------------
 
@@ -267,4 +300,4 @@ def train_tasks() -> list[KernelProgram]:
 
 
 SUITES = {"KB-L1": kb_level1, "KB-L2": kb_level2, "KB-L3": kb_level3,
-          "TB-T": tb_t, "TB-G": tb_g}
+          "TB-T": tb_t, "TB-G": tb_g, "EXT": ext_tasks}

@@ -17,6 +17,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import actions as A
+from repro.core import rules
 from repro.core.env import EnvConfig, KernelEnv, OfflineTree
 from repro.core.kernel_ir import KernelProgram
 from repro.core.micro_coding import StructuredMicroCoder
@@ -36,7 +37,7 @@ def _greedy_action(tree: OfflineTree, fp: str, cands, coder, rng):
     """Pick the materialized-or-new action with best cost-model child."""
     best, best_cost = None, np.inf
     for a in cands:
-        if a.kind == "stop":
+        if rules.is_terminal(a):
             continue
         child, status = tree.expand(fp, a, coder)
         if status == "ok" and child is not None:
@@ -46,10 +47,14 @@ def _greedy_action(tree: OfflineTree, fp: str, cands, coder, rng):
     return best
 
 
-def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
-            env_cfg: EnvConfig = EnvConfig(), store=None) -> OfflineTree:
+def collect(task: KernelProgram, ccfg: CollectConfig | None = None,
+            env_cfg: EnvConfig | None = None, store=None) -> OfflineTree:
     """``store`` (core.engine.TranspositionStore) lets collection reuse —
-    and feed — the same transposition table the evaluation engine uses."""
+    and feed — the same transposition table the evaluation engine uses.
+    Config defaults are None (fresh per call), never shared dataclass
+    instances."""
+    ccfg = ccfg if ccfg is not None else CollectConfig()
+    env_cfg = env_cfg if env_cfg is not None else EnvConfig()
     rng = np.random.default_rng(ccfg.seed)
     coder = StructuredMicroCoder()
     tree = OfflineTree(task, store=store)
@@ -59,14 +64,15 @@ def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
         fp = tree.root
         for _ in range(ccfg.max_steps):
             prog = tree.nodes[fp].program
-            cands = A.candidate_actions(prog) if env_cfg.curated_actions \
-                else A.unrestricted_actions(prog)
+            # the env owns enumeration (curated/extended/target come
+            # from its config) — collection proposes what it would see
+            cands = env.candidates(prog)
             if len(cands) > ccfg.max_actions_per_node:
                 idx = rng.choice(len(cands),
                                  ccfg.max_actions_per_node, replace=False)
                 cands = [cands[i] for i in idx] + [A.STOP]
             a = pick(fp, cands)
-            if a is None or a.kind == "stop":
+            if a is None or rules.is_terminal(a):
                 break
             child, status = tree.expand(fp, a, coder)
             if status != "ok" or child is None:
@@ -85,9 +91,10 @@ def collect(task: KernelProgram, ccfg: CollectConfig = CollectConfig(),
 
 
 def collect_suite(tasks: list[KernelProgram],
-                  ccfg: CollectConfig = CollectConfig(),
-                  env_cfg: EnvConfig = EnvConfig(), store=None
+                  ccfg: CollectConfig | None = None,
+                  env_cfg: EnvConfig | None = None, store=None
                   ) -> dict[str, OfflineTree]:
+    ccfg = ccfg if ccfg is not None else CollectConfig()
     out = {}
     for i, t in enumerate(tasks):
         c = dataclasses.replace(ccfg, seed=ccfg.seed + i)

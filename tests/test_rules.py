@@ -1,0 +1,457 @@
+"""Rewrite-rule registry: migration fidelity, extensibility, hooks.
+
+Covers the acceptance contract of the registry refactor:
+  * classic (default-rule) candidate enumeration is BYTE-identical to
+    the pre-registry frozen action space — same Actions, same order,
+    same describe() strings — on every suite task and on rewritten
+    descendants (fingerprints / action_key caches / measurement DB
+    keys stay valid);
+  * curated presets are target-aware (lane/sublane-derived), legality
+    is not;
+  * property: for every task in every suite and every registered rule,
+    each enumerated candidate applies ``ok`` or fails with
+    ``compile_error`` — never raises — and no ok-rewrite silently
+    miscompiles (oracle-checked through a shared store);
+  * registry↔vocab consistency: every registered rule serializes every
+    enumerated action to in-vocabulary tokens (CI gate against silent
+    OOV scoring);
+  * the extended rules (dtype, split_k) strictly improve best-found
+    cost through the generic search path, at unchanged oracle accuracy;
+  * no dispatch on action-kind string literals outside core/rules.py.
+"""
+import dataclasses
+import itertools
+import os
+import re
+
+import pytest
+
+from repro.core import actions as A
+from repro.core import cost_model, rules as R
+from repro.core import tasks as T
+from repro.core.engine import TranspositionStore
+from repro.core.env import EnvConfig, KernelEnv
+from repro.core.kernel_ir import sched_kind_of_group
+from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.pipeline import MTMCPipeline
+from repro.core.policy import VOCAB, action_words, region_slots, \
+    state_words
+from repro.core.search import GreedySearch
+
+ALL_SUITES = {name: fn() for name, fn in T.SUITES.items()}
+CODER = StructuredMicroCoder()
+STORE = TranspositionStore()
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-registry action space (verbatim copy of the retired
+# actions.py enumeration — the migration contract this refactor must
+# honor byte-for-byte)
+# ---------------------------------------------------------------------------
+
+_LEGACY_TILE_PRESETS = {
+    "matmul": [{"bm": m, "bn": n, "bk": k}
+               for m, n, k in [(128, 128, 128), (256, 128, 128),
+                               (128, 256, 128), (256, 256, 128),
+                               (512, 128, 128), (128, 128, 256),
+                               (512, 256, 128), (256, 256, 256),
+                               (64, 64, 64)]],
+    "flash_attention": [{"bq": q, "bk": k}
+                        for q, k in [(128, 128), (256, 128), (128, 256),
+                                     (256, 256), (512, 128), (64, 64),
+                                     (512, 256), (1024, 128)]],
+    "rmsnorm": [{"rows": r} for r in (128, 256, 512, 1024)],
+    "rwkv6_scan": [{"chunk": c} for c in (16, 32, 64, 128)],
+    "ssm_scan": [{"chunk": c} for c in (16, 32, 64, 128)],
+    "grouped_matmul": [{"bc": c, "bf": f, "bd": d}
+                       for c, f, d in [(128, 128, 128), (256, 128, 128),
+                                       (128, 256, 128), (256, 256, 128),
+                                       (512, 128, 128)]],
+}
+
+_LEGACY_BAD_TILES = [{"bm": 96, "bn": 80, "bk": 56},
+                     {"bm": 8192, "bn": 8192, "bk": 8192},
+                     {"bq": 100, "bk": 60}, {"chunk": 7},
+                     {"bm": 33, "bn": 100, "bk": 17}]
+_LEGACY_LOOP_ORDERS = [("m", "n", "k"), ("n", "m", "k"),
+                       ("m", "k", "n"), ("k", "m", "n")]
+_LEGACY_PIPELINE_DEPTHS = (1, 2, 3, 4)
+
+
+def _legacy_candidate_actions(prog):
+    acts = []
+    for g in prog.fusion_groups:
+        root = prog.group_root(g)
+        kind = sched_kind_of_group(prog, g)
+        for preset in _LEGACY_TILE_PRESETS.get(kind, []):
+            acts.append(A.Action("tiling", root,
+                                 tuple(sorted(preset.items()))))
+        if kind in ("matmul", "grouped_matmul"):
+            for order in _LEGACY_LOOP_ORDERS:
+                acts.append(A.Action("reorder", root, order))
+        if kind != "elementwise":
+            for d in _LEGACY_PIPELINE_DEPTHS:
+                acts.append(A.Action("pipeline", root, (d,)))
+    for a, b in A.fusion_candidates(prog):
+        acts.append(A.Action("fusion", a, (b,)))
+    acts.append(A.STOP)
+    return acts
+
+
+def _legacy_unrestricted_actions(prog):
+    acts = _legacy_candidate_actions(prog)
+    names = [n.name for n in prog.nodes]
+    for g in prog.fusion_groups:
+        root = prog.group_root(g)
+        for bad in _LEGACY_BAD_TILES:
+            acts.append(A.Action("tiling", root,
+                                 tuple(sorted(bad.items()))))
+    for a, b in itertools.islice(itertools.combinations(names, 2), 12):
+        acts.append(A.Action("fusion", a, (b,)))
+    return acts
+
+
+def _classic_and_descendants():
+    """Every suite task plus a few greedy-rewritten descendants (the
+    states a real search actually enumerates from)."""
+    progs = []
+    for suite in ALL_SUITES.values():
+        for task in suite:
+            progs.append(task)
+            out = GreedySearch().search(task, coder=CODER, store=STORE,
+                                        max_steps=3)
+            progs.append(out.program)
+    return progs
+
+
+def test_classic_candidates_byte_identical_to_pre_registry():
+    for prog in _classic_and_descendants():
+        legacy = _legacy_candidate_actions(prog)
+        now = A.candidate_actions(prog)
+        assert legacy == now, prog.name
+        assert [a.describe() for a in legacy] == \
+            [a.describe() for a in now]
+        assert _legacy_unrestricted_actions(prog) == \
+            A.unrestricted_actions(prog), prog.name
+
+
+def test_classic_programs_priced_identically_across_hooks():
+    """Registry pricing hooks must be neutral on pre-registry programs
+    (committed measurement DBs / benchmark rows rely on it): every
+    hook-visible quantity reduces to the pre-hook formula when no rule
+    marker is present."""
+    import numpy as np
+    from repro.core import hardware
+    targets = [hardware.get_target(t) for t in ("tpu_v5e", "gpu_a100")]
+    for prog in _classic_and_descendants()[:20]:
+        shapes = prog.shapes()
+        for g in prog.fusion_groups:
+            sched = prog.schedule_for(g)
+            assert R.SplitKRule.splits_of(sched) == 1
+            # the matmul pricing hook (incl. split_k's occupancy term)
+            # must be EXACTLY neutral on every classic matmul node on
+            # every registered target — this is the invariant that
+            # keeps committed benchmark rows and the measurement DB
+            # valid (DESIGN.md §12)
+            tiles = sched.blocks_dict
+            for name in g:
+                n = prog.node_map[name]
+                if n.op != "matmul":
+                    continue
+                a = shapes.get(n.inputs[0],
+                               prog.input_specs.get(n.inputs[0]))
+                b = shapes.get(n.inputs[1],
+                               prog.input_specs.get(n.inputs[1]))
+                M = int(np.prod(a.shape[:-1]))
+                K, N = a.shape[-1], b.shape[-1]
+                for tgt in targets:
+                    adj = R.matmul_price(n, sched, shapes[name],
+                                         M, N, K, tiles, tgt)
+                    assert (adj.hbm_scale, adj.hbm_extra,
+                            adj.vpu_extra) == (1.0, 0.0, 0.0), \
+                        (prog.name, name, tgt.name)
+        for n in prog.nodes:
+            assert R.compute_dtype_of(n) is None
+        rtol, atol, norm = R.check_tolerance(prog, 2e-3, 2e-3)
+        assert (rtol, atol, norm) == (2e-3, 2e-3, False)
+
+
+# ---------------------------------------------------------------------------
+# target-aware presets, target-independent legality
+# ---------------------------------------------------------------------------
+
+def test_presets_derive_from_target_geometry():
+    v5e = R.tile_presets("matmul", "tpu_v5e")
+    assert v5e == _LEGACY_TILE_PRESETS["matmul"]
+    # same lane/sublane geometry -> same ladder
+    assert R.tile_presets("matmul", "tpu_v4") == v5e
+    a100 = R.tile_presets("matmul", "gpu_a100")
+    assert a100 != v5e
+    assert all(v % 32 == 0 for p in a100 for v in p.values())
+    assert {"bm": 64, "bn": 64, "bk": 64} in a100
+    # scans scale with sublane granularity (gpu_a100 sublane=16)
+    assert R.tile_presets("ssm_scan", "gpu_a100") == \
+        [{"chunk": c} for c in (32, 64, 128, 256)]
+
+
+def test_enumeration_target_aware_legality_not():
+    task = T.kb_level1()[0]
+    default = A.candidate_actions(task)
+    v4 = A.candidate_actions(task, target="tpu_v4")
+    a100 = A.candidate_actions(task, target="gpu_a100")
+    assert default == v4
+    assert default != a100
+    # legality is the portability envelope: a candidate legal for one
+    # target must grade identically when applied (no target enters
+    # rewrite/legality), so the shared transition memo stays sound
+    for act in a100:
+        r1 = CODER.apply(task, act)
+        r2 = CODER.apply(task, act)
+        assert r1.status == r2.status
+
+
+# ---------------------------------------------------------------------------
+# property: never raises, never silently miscompiles (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("suite", sorted(ALL_SUITES))
+def test_every_rule_candidate_applies_or_fails_cleanly(suite):
+    store = STORE
+    coder = StructuredMicroCoder()          # validate=False sweep
+    for task in ALL_SUITES[suite]:
+        cands = A.unrestricted_actions(task, extended=True)
+        assert any(a.kind == "dtype" or a.kind == "split_k"
+                   for a in cands) or suite != "EXT"
+        for act in cands:
+            res = coder.apply(task, act)    # must never raise
+            assert res.status in ("ok", "compile_error"), (task.name,
+                                                           act)
+            if res.status == "ok" and not R.is_terminal(act):
+                # tier-2: the rewrite must pass the oracle (relaxed
+                # per the rule's hook) — no silent miscompilation
+                assert store.check(task, res.program), (task.name, act)
+
+
+def test_validating_coder_grades_extended_rules():
+    """With validate=True the coder executes every graph-changing
+    rewrite against the original — extended rules must come back
+    ``ok`` (not wrong_result) under their declared tolerance."""
+    mc = StructuredMicroCoder(validate=True)
+    for task in (T.kb_level2()[0], T.ext_tasks()[0], T.ext_tasks()[3]):
+        for act in A.candidate_actions(task, extended=True):
+            res = mc.apply(task, act)
+            assert res.status in ("ok", "compile_error"), (task.name,
+                                                           act)
+
+
+# ---------------------------------------------------------------------------
+# registry <-> vocab consistency (CI satellite)
+# ---------------------------------------------------------------------------
+
+def test_every_registered_rule_serializes_in_vocab():
+    probes = [ALL_SUITES["KB-L1"][0], ALL_SUITES["KB-L2"][3],
+              ALL_SUITES["KB-L3"][0], ALL_SUITES["TB-G"][0],
+              ALL_SUITES["EXT"][0], ALL_SUITES["EXT"][3]]
+    seen_kinds = set()
+    for task in probes:
+        slots = region_slots(task)
+        assert all(w in VOCAB for w in state_words(task))
+        for act in A.unrestricted_actions(task, extended=True):
+            seen_kinds.add(act.kind)
+            ws = action_words(act, slots)
+            assert ws and all(w in VOCAB for w in ws), (act, ws)
+    # the probe set must actually exercise every registered rule —
+    # otherwise a new rule could ship with an OOV serialization and
+    # this gate would stay green
+    registered = {r.kind for r in R.registered_rules(extended=True)}
+    assert registered <= seen_kinds
+
+
+# ---------------------------------------------------------------------------
+# extensibility proof: dtype + split_k through the generic paths
+# ---------------------------------------------------------------------------
+
+def _best_cost(task, extended):
+    pipe = MTMCPipeline(mode="greedy_cost", strategy="greedy",
+                        store=STORE, extended_rules=extended,
+                        max_steps=8)
+    res = pipe.optimize(task)
+    return cost_model.program_cost(res.program).total_s, res
+
+
+def test_extended_space_strictly_improves_new_and_old_tasks():
+    improved = []
+    for task in T.ext_tasks() + [T.kb_level2()[4]]:   # + L2_mlp
+        c_classic, r_classic = _best_cost(task, extended=False)
+        c_ext, r_ext = _best_cost(task, extended=True)
+        assert r_classic.correct and r_ext.correct, task.name
+        assert c_ext <= c_classic * (1 + 1e-12), task.name
+        if c_ext < c_classic * 0.999:
+            improved.append(task.name)
+    # at least three tasks strictly improve, including a skinny-M
+    # (split_k) and a bf16 chain (dtype)
+    assert len(improved) >= 3, improved
+    assert any("decode" in n for n in improved), improved
+    assert any("bf16" in n for n in improved), improved
+
+
+def test_split_k_occupancy_pricing_has_an_interior_optimum():
+    task = T.ext_tasks()[0]           # EXT_decode_head, M=4
+    base = cost_model.program_cost(task).total_s
+    costs = {}
+    for s in (2, 4, 8):
+        res = CODER.apply(task, A.Action("split_k", "y", (s,)))
+        assert res.status == "ok"
+        costs[s] = cost_model.program_cost(res.program).total_s
+    assert all(c < base for c in costs.values())
+    # partial-sum traffic makes oversplitting pay: S=8 is not free
+    assert costs[8] > costs[4]
+
+
+def test_split_k_illegal_on_wide_matmuls():
+    res = CODER.apply(T.kb_level1()[0],
+                      A.Action("split_k", "y", (4,)))
+    assert res.status == "compile_error"
+    assert "skinny" in res.detail
+
+
+def test_dtype_rule_relaxes_oracle_and_halves_output_bytes():
+    task = T.ext_tasks()[4]           # EXT_proj_bf16
+    res = CODER.apply(task, A.Action("dtype", "h", ("bfloat16",)))
+    assert res.status == "ok"
+    new = res.program
+    shapes_old, shapes_new = task.shapes(), new.shapes()
+    assert shapes_new["h"].bytes * 2 == shapes_old["h"].bytes
+    rtol, atol, norm = R.check_tolerance(new, 2e-3, 2e-3)
+    assert rtol > 2e-3 and norm
+    assert STORE.check(task, new)
+    # double-cast is a compile error, not a silent no-op
+    again = CODER.apply(new, A.Action("dtype", "h", ("bfloat16",)))
+    assert again.status == "compile_error"
+
+
+def test_dtype_rule_prices_through_per_dtype_flops_table():
+    """The compute-dtype bucket must hit the target's real table entry
+    (IR name "bfloat16" normalized to the datasheet key "bf16"), not
+    silently fall back to the native rate: on a target whose bf16 peak
+    is 2x the native rate, the dtype rewrite halves compute_s."""
+    from repro.core import hardware
+    tgt = hardware.HardwareTarget(
+        name="_t9_tf32_chip", kind="gpu",
+        matmul_flops_by_dtype=(("tf32", 100e12), ("bf16", 200e12)),
+        vector_flops=1e13, hbm_bw=1e12, hbm_bytes=16 * hardware.GIB,
+        vmem_bw=1e13, vmem_bytes=16 * hardware.MIB)
+    assert tgt.matmul_flops("bfloat16") == tgt.matmul_flops("bf16") \
+        == 200e12
+    assert tgt.matmul_flops("float32") == 100e12     # native fallback
+    task = T.kb_level1()[0]
+    res = CODER.apply(task, A.Action("dtype", "y", ("bfloat16",)))
+    assert res.status == "ok"
+    g_f32 = cost_model.program_cost(task, tgt).groups[0]
+    g_bf16 = cost_model.program_cost(res.program, tgt).groups[0]
+    assert g_bf16.compute_s == pytest.approx(g_f32.compute_s / 2,
+                                             rel=1e-6)
+
+
+def test_tolerance_relaxation_scoped_to_dependent_outputs():
+    """A rule's relaxed oracle tolerance applies only to outputs that
+    depend on its marked nodes — an unrelated output of the same
+    program keeps the strict default, so the relaxation cannot mask a
+    miscompile elsewhere."""
+    from repro.core.kernel_ir import chain_program
+    prog = chain_program("t_two_heads",
+                         {"a": (256, 256), "b": (256, 256),
+                          "c": (256, 256)},
+                         [("m1", "matmul", ("a", "b")),
+                          ("m2", "matmul", ("a", "c"))],
+                         outputs=("m1", "m2"))
+    res = CODER.apply(prog, A.Action("dtype", "m1", ("bfloat16",)))
+    assert res.status == "ok"
+    per = R.output_tolerances(res.program, 2e-3, 2e-3)
+    assert per[0][0] > 2e-3 and per[0][2]          # m1: relaxed
+    assert per[1] == (2e-3, 2e-3, False)           # m2: strict
+    # mismatched output counts never silently pass
+    import numpy as np
+    x = [np.zeros((2, 2)), np.zeros((2, 2))]
+    assert not R.outputs_match(x, x[:1], 1e-3, 1e-3)
+
+
+def test_harness_verifies_bf16_lowering_at_rule_tolerance():
+    """Measured reranking must not silently drop dtype-rule candidates:
+    the harness's lowering verification consults the same
+    rules.check_tolerance hook as the oracle checks, so a faithful
+    bf16 kernel (output cast via rules.lower_cast) measures in Pallas
+    mode instead of falling back to xla."""
+    from repro.core.kernel_ir import chain_program
+    from repro.measure.harness import ExecutionHarness, MeasureConfig
+    task = chain_program("t_bf16_lower", {"x": (128, 256),
+                                          "w": (256, 128)},
+                         [("h", "matmul", ("x", "w")),
+                          ("y", "gelu", ("h",))])
+    res = CODER.apply(task, A.Action("dtype", "h", ("bfloat16",)))
+    assert res.status == "ok"
+    h = ExecutionHarness(cfg=MeasureConfig(warmup=0, repeats=1,
+                                           mode="pallas"))
+    sample = h.measure(task, res.program)
+    assert h.stats["verify_fallbacks"] == 0
+    assert sample.mode in ("pallas", "pallas_interpret")
+
+
+def test_preset_cache_keys_on_geometry_not_name():
+    import dataclasses as dc
+    from repro.core import hardware
+    base = hardware.get_target("tpu_v5e")
+    assert R.tile_presets("matmul", base) == \
+        R.tile_presets("matmul", dc.replace(base, name="elsewhere"))
+    narrow = dc.replace(base, name="tpu_v5e", lane=64)
+    assert R.tile_presets("matmul", narrow) != \
+        R.tile_presets("matmul", base)
+
+
+def test_dtype_rule_serializes_and_searches_through_offline_tree():
+    """action_key round-trip for extension-rule actions (offline tree,
+    measurement-DB winner records depend on it)."""
+    import ast
+    from repro.core.env import action_key
+    for act in (A.Action("dtype", "y", ("bfloat16",)),
+                A.Action("split_k", "y", (4,))):
+        kind, region, param = action_key(act).split("|", 2)
+        assert A.Action(kind, region, ast.literal_eval(param)) == act
+
+
+# ---------------------------------------------------------------------------
+# config hygiene + layering (satellites)
+# ---------------------------------------------------------------------------
+
+def test_env_config_default_is_not_shared():
+    e1 = KernelEnv(T.kb_level1()[0])
+    e2 = KernelEnv(T.kb_level1()[1])
+    e1.cfg.max_steps = 99
+    assert e2.cfg.max_steps == EnvConfig().max_steps
+    # and no mutable dataclass instance hides in the signature default
+    import inspect
+    sig = inspect.signature(KernelEnv.__init__)
+    assert sig.parameters["cfg"].default is None
+    for f in dataclasses.fields(EnvConfig):
+        assert not dataclasses.is_dataclass(f.default)
+
+
+def test_no_action_kind_literal_dispatch_outside_rules():
+    """Acceptance guard: no layer outside core/rules.py compares
+    ``.kind`` against string literals (registered-rule dispatch must go
+    through the registry)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    pat = re.compile(
+        r"\b(?:act|action|a|c|cand)\.kind\s*(?:==|!=)\s*['\"]"
+        r"|\b(?:act|action|a|c|cand)\.kind\s+in\s*[(\[]")
+    offenders = []
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            if not fn.endswith(".py") or fn == "rules.py":
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                for i, line in enumerate(f, 1):
+                    if pat.search(line):
+                        offenders.append(f"{path}:{i}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)

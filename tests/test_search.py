@@ -109,7 +109,7 @@ def test_beam_cap_collision_keeps_dropped_children_rediscoverable():
 
     store = _Store()
     real_cands = S.A.candidate_actions
-    S.A.candidate_actions = lambda prog: [
+    S.A.candidate_actions = lambda prog, target=None, extended=False: [
         S.A.Action("tiling", r, ()) for r in acts[prog.name]]
     try:
         g = GreedySearch().search(progs["R"], coder=None, store=store,
