@@ -17,6 +17,12 @@ every row name present in BOTH files:
   the classic search.  Fully analytic and deterministic, so it gets no
   slack: a registry or cost-model change that silently neuters the
   extension rules fails CI.
+* ``warm_rate=`` (``benchmarks.serve_bench`` fleet rows): the fraction
+  of repeat requests a restarted/peer replica answers straight from
+  the shared winner store without re-searching.  Near-deterministic
+  (the committed value is 1.0), so the tiny ``WARM_SLACK`` only
+  absorbs float printing — a warm-start protocol regression (key
+  drift, record refusal, stamp bugs) fails CI.
 
 Modeled speedups are deliberately NOT gated — they move whenever the
 cost model or search deepens.
@@ -31,8 +37,10 @@ import sys
 _ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
 _RHO = re.compile(r"(?:^|;)rho=(-?[0-9.]+)")
 _RULES = re.compile(r"(?:^|;)rules_improved_frac=([0-9.]+)")
+_WARM = re.compile(r"(?:^|;)warm_rate=([0-9.]+)")
 
 RHO_SLACK = 0.3
+WARM_SLACK = 0.02
 
 
 def _parse(path: str, pattern: re.Pattern) -> dict[str, float]:
@@ -63,6 +71,10 @@ def parse_rules_improved(path: str) -> dict[str, float]:
     return _parse(path, _RULES)
 
 
+def parse_warm_rates(path: str) -> dict[str, float]:
+    return _parse(path, _WARM)
+
+
 def _gate(kind: str, base: dict[str, float], new: dict[str, float],
           slack: float) -> tuple[int, list[str]]:
     shared = sorted(set(base) & set(new))
@@ -86,17 +98,19 @@ def main(argv: list[str]) -> int:
     n_rules, rules_drops = _gate(
         "rules_improved_frac", parse_rules_improved(argv[1]),
         parse_rules_improved(argv[2]), 1e-9)
-    if n_acc == 0 and n_rho == 0 and n_rules == 0:
+    n_warm, warm_drops = _gate("warm_rate", parse_warm_rates(argv[1]),
+                               parse_warm_rates(argv[2]), WARM_SLACK)
+    if n_acc == 0 and n_rho == 0 and n_rules == 0 and n_warm == 0:
         print(f"error: no comparable rows between {argv[1]} and "
               f"{argv[2]}")
         return 2
-    drops = acc_drops + rho_drops + rules_drops
+    drops = acc_drops + rho_drops + rules_drops + warm_drops
     for msg in drops:
         print(msg)
     if drops:
         return 1
-    print("no execute-accuracy, rank-correlation or rule-ablation "
-          "regressions")
+    print("no execute-accuracy, rank-correlation, rule-ablation or "
+          "warm-start regressions")
     return 0
 
 

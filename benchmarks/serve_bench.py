@@ -1,6 +1,6 @@
 """Serve-path benchmark: the online half of the evaluate/serve loop.
 
-Two streams, mirroring production traffic shapes:
+Three streams, mirroring production traffic shapes:
 
 * **KernelService** under a Zipf-skewed optimize-request stream (hot
   kernels dominate, as many users submit the same few) driven by
@@ -8,6 +8,15 @@ Two streams, mirroring production traffic shapes:
   latency, the coalescing hit-rate (identical in-flight requests
   sharing one search) and the segmented-LRU slab-eviction counters
   that replaced the old drop-wholesale store reset.
+* **Fleet** (DESIGN.md §13): a multi-tenant Zipf stream over N
+  replicas sharing ONE measurement DB — (F1) the in-process fleet with
+  background measured refinement, gating that at least one analytic
+  answer is hot-swapped for a measured winner mid-stream; (F2) a
+  separate-process replica wave against a single-replica baseline,
+  gating aggregate throughput scaling and that the shared winner store
+  deduplicates search work (dup_ratio) with cross-replica warm starts;
+  (F3) a restart wave over the warm DB, gating a zero-re-search
+  warm-start rate.
 * **Engine** under a mixed-length prompt stream — continuous batching
   with per-slot positions; reports token throughput, per-request
   completion latency and mean slot occupancy, plus a batched-vs-solo
@@ -15,7 +24,13 @@ Two streams, mirroring production traffic shapes:
 
 Gates (non-zero exit, wired into CI bench-smoke):
   * coalescing hit-rate must be > 0 on the repeated-request burst,
-  * every service result must be oracle-correct,
+  * every service/fleet result must be oracle-correct,
+  * the fleet must hot-swap >= 1 analytic pick for a measured winner,
+  * multi-process replicas must scale aggregate throughput vs one
+    replica, share search work through the DB (dup_ratio bounded,
+    peer warm starts observed), and a restarted replica must answer
+    repeats with ZERO re-searches (warm_rate gated, also via
+    check_regression on the committed CSV),
   * batched Engine output must be token-identical to solo generation,
   * slab eviction must have run without a whole-store reset (the
     mechanism no longer exists; the counter row pins that).
@@ -175,6 +190,238 @@ def _measured_spot_check() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Fleet stream (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _fleet_suite():
+    from repro.core import tasks as T
+    return T.kb_level1() + T.kb_level2() + T.kb_level3()
+
+
+def _fleet_measure_cfg():
+    from repro.measure.harness import MeasureConfig
+    return MeasureConfig(repeats=1, warmup=0)
+
+
+def bench_fleet(fast: bool) -> tuple[dict, list[str]]:
+    """F1: in-process fleet (3 replicas, one DB, background refiner)
+    under a multi-tenant Zipf stream, with a mid-stream refinement
+    barrier so the tail of the stream observes the hot swap."""
+    import shutil
+    import tempfile
+
+    from repro.serve.fleet import Fleet, FleetConfig
+
+    suite = _fleet_suite()
+    n_req = 600 if fast else 10_000
+    tenants = ("alpha", "beta", "gamma", "delta")
+    rng = np.random.default_rng(2)
+    picks = [(int(z) - 1) % len(suite) for z in rng.zipf(1.5, n_req)]
+    tens = [tenants[i] for i in rng.integers(0, len(tenants), n_req)]
+    db_dir = tempfile.mkdtemp(prefix="serve_bench_fleet_db_")
+    try:
+        fl = Fleet(db_dir,
+                   FleetConfig(replicas=3, rerank_top_k=2,
+                               max_pending=64),
+                   measure_cfg=_fleet_measure_cfg(), max_steps=3,
+                   serve_workers=2)
+
+        def one(i: int):
+            t = time.perf_counter()
+            r = fl.optimize(suite[picks[i]], tenant=tens[i])
+            return time.perf_counter() - t, bool(r.correct)
+
+        head = n_req // 3
+        t0 = time.perf_counter()
+        with cf.ThreadPoolExecutor(max_workers=8) as ex:
+            timed = list(ex.map(one, range(head)))
+        # mid-stream refinement barrier: the background workers land
+        # their measured winners HERE, so the stream's tail serves
+        # hot-swapped (measured) answers for the hot keys
+        fl.drain_refinement(timeout=1200)
+        with cf.ThreadPoolExecutor(max_workers=8) as ex:
+            timed += list(ex.map(one, range(head, n_req)))
+        wall = time.perf_counter() - t0
+        fl.drain_refinement(timeout=1200)
+        st = fl.stats()
+        fl.close()
+    finally:
+        shutil.rmtree(db_dir, ignore_errors=True)
+
+    lats = [t for t, _ in timed]
+    served = st["tenants"]
+    m = {
+        "requests": n_req,
+        "replicas": st["n_replicas"],
+        "throughput_rps": n_req / wall,
+        "p50_ms": 1e3 * _pct(lats, 50),
+        "p99_ms": 1e3 * _pct(lats, 99),
+        "hot_swaps": st["hot_swaps"],
+        "refined": st["refined"],
+        "refine_errors": st["refine_errors"],
+        "warm_starts": st["warm_starts"],
+        "coalesced": st["coalesced"],
+        "rejected": st["rejected"],
+        "tenant_min": min(served.values()),
+        "tenant_max": max(served.values()),
+        "all_correct": int(all(ok for _, ok in timed)),
+    }
+    lines = [
+        f"Fleet: {n_req} Zipf requests, {len(tenants)} tenants, "
+        f"{m['replicas']} replicas + 1 refiner over one DB, "
+        f"8 client threads",
+        f"  throughput      : {m['throughput_rps']:.1f} req/s "
+        f"aggregate",
+        f"  latency         : p50 {m['p50_ms']:.1f} ms, "
+        f"p99 {m['p99_ms']:.1f} ms",
+        f"  refinement      : {m['refined']} winners measured in "
+        f"background, {m['hot_swaps']} analytic answers hot-swapped "
+        f"mid-stream, {m['refine_errors']} errors",
+        f"  sharing         : {m['warm_starts']} warm starts, "
+        f"{m['coalesced']} coalesced, {m['rejected']} rejected",
+        f"  tenants         : served {m['tenant_min']}-"
+        f"{m['tenant_max']} per tenant",
+    ]
+    return m, lines
+
+
+def _fleet_replica_worker(db_dir, picks, barrier, out_q) -> None:
+    """One separate-process serving replica: its own KernelService over
+    the shared DB directory, answering its request slice.  Runs under
+    the spawn start method (fork after jax import is unsafe)."""
+    from repro.serve.engine import KernelService
+    suite = _fleet_suite()
+    svc = KernelService(measure=True, measure_db=db_dir,
+                        rerank_top_k=0,
+                        measure_cfg=_fleet_measure_cfg(),
+                        max_steps=3, serve_workers=2)
+    barrier.wait()            # jax imported, service built: go
+    t0 = time.perf_counter()
+    ok = all(svc.optimize(suite[i]).correct for i in picks)
+    wall = time.perf_counter() - t0
+    st = svc.stats()
+    svc.close()
+    out_q.put({"wall": wall, "ok": int(ok),
+               "fresh": st["fresh_applies"],
+               "warm": st["warm_starts"],
+               "corrupt": st["db_corrupt_records"]})
+
+
+def _run_replica_procs(db_dir: str, slices) -> tuple[list, float]:
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    barrier = ctx.Barrier(len(slices) + 1)
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_fleet_replica_worker,
+                         args=(db_dir, s, barrier, q)) for s in slices]
+    for p in procs:
+        p.start()
+    barrier.wait()            # excludes interpreter/jax startup
+    t0 = time.perf_counter()
+    outs = [q.get(timeout=2400) for _ in procs]
+    wall = time.perf_counter() - t0
+    for p in procs:
+        p.join(60)
+    return outs, wall
+
+
+def bench_fleet_scale(fast: bool) -> tuple[dict, list[str]]:
+    """F2 + F3: separate-process replicas over one shared DB.
+
+    Every replica gets the SAME Zipf request multiset in its OWN
+    arrival order (the production shape: the same hot kernels reach
+    every replica, interleaved differently), so a fleet that did NOT
+    share its winner store would redo the baseline's search work 3x —
+    ``dup_ratio`` (summed fleet fresh-rule applications over the
+    baseline's) reads ~3 without sharing and near 1 with it.  Identical
+    per-replica order would instead march the replicas through the
+    same searches in lockstep, hiding the sharing entirely.  The
+    1-replica baseline runs in its own spawned process too, so both
+    sides pay identical jit-cache cold starts.  F3 then replays the
+    slice on a FRESH service over the now-warm DB: every repeat must
+    be answered from winners/ with zero re-searches."""
+    import shutil
+    import tempfile
+
+    from repro.serve.engine import KernelService
+
+    suite = _fleet_suite()
+    # the scaling probe is deliberately search-dominated: past ~120
+    # requests the (cheap, serial-on-one-core) warm answers swamp the
+    # shared-search win and scaling tends to 1.0x on a single-core
+    # host regardless of protocol quality — stream SCALE is F1's job
+    # (10k requests in-process); this phase sizes for the sharing
+    # signal in both modes
+    n = 120
+    n_rep = 3
+    rng = np.random.default_rng(3)
+    picks = [(int(z) - 1) % len(suite) for z in rng.zipf(1.5, n)]
+
+    dir_single = tempfile.mkdtemp(prefix="serve_bench_scale1_")
+    dir_fleet = tempfile.mkdtemp(prefix="serve_bench_scaleN_")
+    try:
+        base_outs, wall_1 = _run_replica_procs(dir_single, [picks])
+        slices = [[picks[j] for j in rng.permutation(n)]
+                  for _ in range(n_rep)]
+        fleet_outs, wall_n = _run_replica_procs(dir_fleet, slices)
+
+        rps_single = n / wall_1
+        rps_fleet = n_rep * n / wall_n
+        fresh_single = max(base_outs[0]["fresh"], 1)
+        fresh_fleet = sum(o["fresh"] for o in fleet_outs)
+
+        # F3 — restart wave: a fresh service (fresh process image: new
+        # store, new caches) over the warm shared DB must answer every
+        # repeat from winners/ without a single re-search
+        svc = KernelService(measure=True, measure_db=dir_fleet,
+                            rerank_top_k=0,
+                            measure_cfg=_fleet_measure_cfg(),
+                            max_steps=3, serve_workers=2)
+        t0 = time.perf_counter()
+        ok_warm = all(svc.optimize(suite[i]).correct for i in picks)
+        wall_warm = time.perf_counter() - t0
+        st_warm = svc.stats()
+        svc.close()
+    finally:
+        shutil.rmtree(dir_single, ignore_errors=True)
+        shutil.rmtree(dir_fleet, ignore_errors=True)
+
+    m = {
+        "requests": n,
+        "replicas": n_rep,
+        "rps_single": rps_single,
+        "rps_fleet": rps_fleet,
+        "scaling": rps_fleet / rps_single,
+        "dup_ratio": fresh_fleet / fresh_single,
+        "peer_warm_starts": sum(o["warm"] for o in fleet_outs),
+        "corrupt_records": sum(o["corrupt"] for o in fleet_outs)
+        + base_outs[0]["corrupt"],
+        "all_correct": int(all(o["ok"] for o in fleet_outs)
+                           and base_outs[0]["ok"]),
+        "warm_rate": st_warm["warm_starts"] / n,
+        "warm_fresh_applies": st_warm["fresh_applies"],
+        "warm_rps": n / wall_warm,
+        "warm_correct": int(ok_warm),
+    }
+    lines = [
+        f"Fleet scale: {n_rep} replica processes x {n} Zipf requests "
+        f"(same requests, shuffled arrival) over one shared DB "
+        f"vs 1 replica process",
+        f"  throughput      : {rps_fleet:.1f} req/s aggregate vs "
+        f"{rps_single:.1f} solo -> {m['scaling']:.2f}x scaling",
+        f"  search sharing  : dup_ratio {m['dup_ratio']:.2f} "
+        f"(no sharing would read ~{n_rep}.0), "
+        f"{m['peer_warm_starts']} cross-replica warm starts, "
+        f"{m['corrupt_records']} corrupt records",
+        f"  restart wave    : warm-start rate "
+        f"{100 * m['warm_rate']:.1f}%, {m['warm_fresh_applies']} "
+        f"fresh rule applications (must be 0), "
+        f"{m['warm_rps']:.1f} req/s",
+    ]
+    return m, lines
+
+
+# ---------------------------------------------------------------------------
 # Engine stream
 # ---------------------------------------------------------------------------
 
@@ -267,9 +514,12 @@ def main() -> None:
     args = ap.parse_args()
 
     svc_m, svc_lines = bench_service(args.fast)
+    flt_m, flt_lines = bench_fleet(args.fast)
+    scl_m, scl_lines = bench_fleet_scale(args.fast)
     eng_m, eng_lines = bench_engine(args.fast)
 
-    text = "\n".join(svc_lines + eng_lines) + "\n"
+    text = "\n".join(svc_lines + flt_lines + scl_lines
+                     + eng_lines) + "\n"
     print(text)
     os.makedirs(RESULTS, exist_ok=True)
     with open(args.out, "w") as f:
@@ -289,6 +539,23 @@ def main() -> None:
             f"db_misses={svc_m['measured_db_misses']};"
             f"warm_starts={svc_m['measured_warm_starts']};"
             f"warm_searchless={svc_m['measured_warm_searchless']}\n")
+        f.write(
+            f"serve/fleet,{1e6 / flt_m['throughput_rps']:.1f},"
+            f"hot_swaps={flt_m['hot_swaps']};"
+            f"refined={flt_m['refined']};"
+            f"warm_starts={flt_m['warm_starts']};"
+            f"rejected={flt_m['rejected']};"
+            f"p99_ms={flt_m['p99_ms']:.1f}\n")
+        f.write(
+            f"serve/fleet_scale,{1e6 / scl_m['rps_fleet']:.1f},"
+            f"scaling={scl_m['scaling']:.2f};"
+            f"dup_ratio={scl_m['dup_ratio']:.2f};"
+            f"peer_warm_starts={scl_m['peer_warm_starts']};"
+            f"corrupt={scl_m['corrupt_records']}\n")
+        f.write(
+            f"serve/fleet_warm,{1e6 / scl_m['warm_rps']:.1f},"
+            f"warm_rate={scl_m['warm_rate']:.3f};"
+            f"fresh_applies={scl_m['warm_fresh_applies']}\n")
         f.write(
             f"serve/engine,{1e6 / eng_m['tok_per_s']:.1f},"
             f"occupancy={eng_m['occupancy']:.2f};"
@@ -315,6 +582,41 @@ def main() -> None:
             and svc_m["measured_warm_fp_match"]):
         failures.append("measured-mode restart did not warm-start from "
                         "the on-disk DB")
+    if flt_m["hot_swaps"] < 1:
+        failures.append("background refinement hot-swapped no analytic "
+                        "answer mid-stream")
+    if not flt_m["all_correct"]:
+        failures.append("a fleet result failed the oracle")
+    if flt_m["rejected"] > 0:
+        failures.append("admission control rejected requests under an "
+                        "in-budget stream")
+    if flt_m["refine_errors"] > 0:
+        failures.append("a background refinement errored")
+    if not scl_m["all_correct"] or not scl_m["warm_correct"]:
+        failures.append("a replica-process result failed the oracle")
+    # on a single-core host the replicas' warm paths time-slice one
+    # CPU, so the whole aggregate gain comes from search deduplication
+    # (ceiling ~n_rep/dup_ratio); the floor asserts a real gain while
+    # staying honest about that ceiling — multi-core runners clear it
+    # by a wide margin
+    if scl_m["scaling"] < 1.1:
+        failures.append(
+            f"aggregate throughput did not scale past one replica "
+            f"({scl_m['scaling']:.2f}x < 1.1x)")
+    if scl_m["dup_ratio"] > 2.3:
+        failures.append(
+            f"replicas duplicated search work the shared DB should "
+            f"have deduplicated (dup_ratio {scl_m['dup_ratio']:.2f} "
+            f"> 2.3; no sharing reads ~3.0)")
+    if scl_m["peer_warm_starts"] < 1:
+        failures.append("no replica warm-started from a peer's winner")
+    if scl_m["corrupt_records"] > 0:
+        failures.append("concurrent replicas produced corrupt records")
+    if scl_m["warm_rate"] < 0.999 or scl_m["warm_fresh_applies"] != 0:
+        failures.append(
+            f"restarted replica re-searched repeat requests "
+            f"(warm_rate {scl_m['warm_rate']:.3f}, "
+            f"{scl_m['warm_fresh_applies']} fresh applies)")
     for msg in failures:
         print(f"FAIL: {msg}")
     if failures:

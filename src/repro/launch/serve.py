@@ -1,30 +1,23 @@
-"""Serving launcher: continuous-batching demo over mixed-length prompts.
+"""Serving launcher: continuous-batching demo over mixed-length
+prompts, or — with ``--fleet N`` — a multi-replica kernel-optimization
+fleet over one shared measurement DB (DESIGN.md §13).
 
   python -m repro.launch.serve --arch qwen2_5_3b --reduced --requests 8
+  python -m repro.launch.serve --fleet 3 --db /tmp/fleet_db \
+      --requests 60 --tenants 4
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs.registry import get_config, reduced
-from repro.models import api
-from repro.serve.engine import Engine, Request
+def run_engine_demo(args) -> None:
+    import jax
+    import jax.numpy as jnp
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--eos", type=int, default=None,
-                    help="optional EOS token id applied to every request")
-    args = ap.parse_args()
+    from repro.configs.registry import get_config, reduced
+    from repro.models import api
+    from repro.serve.engine import Engine, Request
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -52,6 +45,86 @@ def main():
     print(f"steps={st['decode_steps']} tokens={st['decode_tokens']} "
           f"prefills={st['prefills']} occupancy={occ:.2f} "
           f"truncations={st['truncations']}")
+
+
+def run_fleet_demo(args) -> None:
+    """N replicas + a background refiner over ``--db``: a Zipf-skewed
+    multi-tenant request stream, answered analytically first, upgraded
+    to measured winners in the background.  Re-running against the same
+    ``--db`` (or running a second copy concurrently) warm-starts from
+    the records the previous/peer run landed."""
+    import time
+
+    import numpy as np
+
+    from repro.core import tasks as T
+    from repro.measure.harness import MeasureConfig
+    from repro.serve.fleet import Fleet, FleetConfig
+
+    suite = T.kb_level1() + T.kb_level2() + T.kb_level3()
+    tenants = [f"tenant{i}" for i in range(max(1, args.tenants))]
+    rng = np.random.default_rng(args.seed)
+    picks = [(int(z) - 1) % len(suite)
+             for z in rng.zipf(1.5, args.requests)]
+    tens = [tenants[i]
+            for i in rng.integers(0, len(tenants), args.requests)]
+
+    fl = Fleet(args.db,
+               FleetConfig(replicas=args.fleet,
+                           max_pending=args.max_pending),
+               measure_cfg=MeasureConfig(repeats=1, warmup=0),
+               max_steps=args.max_steps)
+    t0 = time.perf_counter()
+    futs = [fl.submit(suite[p], tenant=t)
+            for p, t in zip(picks, tens)]
+    res = [f.result() for f in futs]
+    wall = time.perf_counter() - t0
+    fl.drain_refinement(timeout=600)
+    st = fl.stats()
+    fl.close()
+    assert all(r.correct for r in res)
+    print(f"fleet: {args.requests} requests, {args.fleet} replicas, "
+          f"{len(tenants)} tenants over {args.db}")
+    print(f"  wall {wall:.2f}s ({args.requests / wall:.1f} req/s), "
+          f"mean speedup "
+          f"{float(np.mean([r.speedup for r in res])):.2f}x")
+    print(f"  warm_starts={st['warm_starts']} "
+          f"coalesced={st['coalesced']} refined={st['refined']} "
+          f"hot_swaps={st['hot_swaps']} rejected={st['rejected']}")
+    print(f"  tenants={st['tenants']}")
+    print(f"  db: corrupt={st['db_corrupt_records']} "
+          f"tmp_reaped={st['db_tmp_reaped']} "
+          f"lock_timeouts={st['db_lock_timeouts']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="Engine demo: transformer config name")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="optional EOS token id applied to every request")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run the kernel-fleet demo with N replicas "
+                         "instead of the Engine demo")
+    ap.add_argument("--db", default="/tmp/repro_fleet_db",
+                    help="shared measurement-DB directory (fleet)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--max-steps", type=int, default=3)
+    ap.add_argument("--max-pending", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.fleet > 0:
+        run_fleet_demo(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --fleet N is given")
+    run_engine_demo(args)
 
 
 if __name__ == "__main__":

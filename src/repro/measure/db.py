@@ -26,15 +26,45 @@ The DB survives process restarts: a restarted ``KernelService`` pointed
 at the same directory answers repeat requests from ``winners/`` without
 re-running the search, and ``calibrate.fit_calibration`` fits correction
 factors from ``samples/`` accumulated across sessions.
+
+One directory may be shared by MANY live writers — replicas of a
+serving fleet, background measurement workers, restarted services
+(DESIGN.md §13).  The cross-process contract:
+
+* **Samples** are content-addressed and immutable: concurrent writers
+  of the same key write identical payloads, each ``os.replace`` is
+  atomic, so last-write-wins is trivially convergent and readers never
+  see a torn file.
+* **Winner records** are mutable (a background worker upgrades an
+  analytic pick to a measured one), so each carries a monotonically
+  increasing ``generation``.  ``update_winner`` performs the
+  read-modify-write under a per-key lock file (``O_CREAT|O_EXCL``,
+  broken when stale), so generations count writes exactly; if the lock
+  cannot be acquired before ``lock_timeout_s`` the write degrades to
+  plain last-write-wins (``stats["lock_timeouts"]``) — availability
+  over strict ordering, still torn-free thanks to the atomic replace.
+* **Reads poll the disk**: ``get_winner`` revalidates its in-memory
+  cache against the file's ``(mtime_ns, size)`` stamp on every call,
+  so a replica observes a peer's newly landed winner on its next
+  request without any broadcast channel (``refresh()`` force-drops the
+  caches for callers that want an explicit barrier).
+* **Crashes leave no landmines**: a writer dying between ``open(tmp)``
+  and ``os.replace`` orphans only a ``*.tmp`` file, which
+  ``__init__``/``reap_stale_tmp`` deletes once its writer pid is dead
+  (or the file is older than ``tmp_ttl_s``); unreadable/corrupt
+  records read as misses and are counted in
+  ``stats["corrupt_records"]`` instead of being silently swallowed.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
 import threading
-from typing import Iterator
+import time
+from typing import Callable, Iterator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,26 +146,62 @@ def _key16(*parts: str) -> str:
     return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
 
 
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        return True       # exists but not ours (EPERM etc.)
+    return True
+
+
+def _tmp_pid(fn: str) -> int | None:
+    """Writer pid from a ``<key>.json.<pid>.<tid>.tmp`` name."""
+    parts = fn.split(".")
+    try:
+        return int(parts[-3])
+    except (IndexError, ValueError):
+        return None
+
+
 class MeasureDB:
     """On-disk sample + winner store with an in-memory read cache.
 
-    Thread-safe; writes are atomic (tmp file + ``os.replace``) so a
-    crashed process never leaves a truncated JSON entry behind.
+    Thread-safe within a process; safe to share across processes (see
+    the module docstring's cross-process contract).  Writes are atomic
+    (tmp file + ``os.replace``) so a crashed process never leaves a
+    truncated JSON entry behind, and stale tmps of dead writers are
+    reaped on construction.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, tmp_ttl_s: float = 3600.0,
+                 lock_timeout_s: float = 5.0,
+                 lock_stale_s: float = 30.0):
         self.path = str(path)
         self._samples_dir = os.path.join(self.path, "samples")
         self._winners_dir = os.path.join(self.path, "winners")
         os.makedirs(self._samples_dir, exist_ok=True)
         os.makedirs(self._winners_dir, exist_ok=True)
+        self._tmp_ttl_s = float(tmp_ttl_s)
+        self._lock_timeout_s = float(lock_timeout_s)
+        self._lock_stale_s = float(lock_stale_s)
         self._lock = threading.RLock()
+        # serializes same-process winner read-modify-writes so threads
+        # of one process never spin on each other's lock FILE (the file
+        # is for OTHER processes)
+        self._winner_write_lock = threading.Lock()
+        self.stats = {"corrupt_records": 0, "tmp_reaped": 0,
+                      "lock_timeouts": 0, "winner_refreshes": 0}
         # bounded read caches: entries always live on disk, so clearing
         # on overflow only costs a re-read — a long-lived service under
-        # distinct-kernel traffic must not grow memory without bound
+        # distinct-kernel traffic must not grow memory without bound.
+        # Winner entries carry the file's (mtime_ns, size) stamp and
+        # are revalidated against it on every read (peer pickup).
         self._cache_cap = 4096
         self._cache: dict[str, MeasureSample] = {}
-        self._winner_cache: dict[str, dict] = {}
+        self._winner_cache: dict[str, tuple[tuple[int, int], dict]] = {}
+        self.reap_stale_tmp()
 
     # -- samples -------------------------------------------------------------
     def sample_key(self, task_fp: str, prog_fp: str, target: str,
@@ -185,28 +251,124 @@ class MeasureDB:
         return _key16("winner", task_fp, target, env_fp)
 
     def put_winner(self, task_fp: str, target: str, env_fp: str,
-                   record: dict) -> None:
+                   record: dict) -> dict:
         """``record`` must be JSON-safe and carry a ``program`` entry
         (``kernel_ir.program_to_json``) — enough to answer a repeat
-        request in a fresh process without re-searching."""
+        request in a fresh process without re-searching.  The stored
+        record gains a ``generation`` one past the current on-disk one
+        (last-write-wins across replicas); the stamped record is
+        returned."""
+        return self.update_winner(task_fp, target, env_fp,
+                                  lambda old: record)
+
+    def update_winner(self, task_fp: str, target: str, env_fp: str,
+                      fn: Callable[[dict | None], dict | None]
+                      ) -> dict | None:
+        """Read-modify-write one winner record under the per-key lock.
+
+        ``fn(current_record_or_None)`` returns the new record, or
+        ``None`` to keep the current one (e.g. a replica's analytic
+        pick refusing to clobber a background worker's measured winner
+        — the KernelService merge policy, DESIGN.md §13).  The write
+        gets ``generation = current + 1``; with the file lock held the
+        increment is exact, on lock timeout it degrades to plain
+        last-write-wins.  Returns whatever record is now current."""
         key = self.winner_key(task_fp, target, env_fp)
-        self._write(os.path.join(self._winners_dir, key + ".json"),
-                    record)
+        path = os.path.join(self._winners_dir, key + ".json")
+        with self._winner_lock(key):
+            old = self._read(path)
+            new = fn(old)
+            if new is None:
+                return old
+            gen = int(old.get("generation", 0)) + 1 if old else 1
+            new = dict(new, generation=gen)
+            self._write(path, new)
+            stamp = self._stamp(path)
         with self._lock:
-            self._cache_insert(self._winner_cache, key, record)
+            if stamp is not None:
+                self._cache_insert(self._winner_cache, key,
+                                   (stamp, new))
+        return new
 
     def get_winner(self, task_fp: str, target: str,
                    env_fp: str) -> dict | None:
+        """Current winner record, revalidated against the file stamp —
+        a record a PEER replica landed since the last read is picked up
+        here, not served stale from the cache."""
         key = self.winner_key(task_fp, target, env_fp)
+        path = os.path.join(self._winners_dir, key + ".json")
+        stamp = self._stamp(path)
         with self._lock:
             hit = self._winner_cache.get(key)
-            if hit is not None:
-                return hit
-        d = self._read(os.path.join(self._winners_dir, key + ".json"))
+        if stamp is None:
+            # gone from disk (clear() / external delete): a cached copy
+            # would resurrect it forever
+            with self._lock:
+                self._winner_cache.pop(key, None)
+            return None
+        if hit is not None and hit[0] == stamp:
+            return hit[1]
+        d = self._read(path)
         if d is not None:
             with self._lock:
-                self._cache_insert(self._winner_cache, key, d)
+                if hit is not None:
+                    self.stats["winner_refreshes"] += 1
+                self._cache_insert(self._winner_cache, key, (stamp, d))
         return d
+
+    def refresh(self) -> None:
+        """Drop the in-memory read caches: the next read of every key
+        goes to disk.  ``get_winner`` already revalidates per key by
+        file stamp; this is the explicit whole-DB barrier."""
+        with self._lock:
+            self._cache.clear()
+            self._winner_cache.clear()
+
+    @contextlib.contextmanager
+    def _winner_lock(self, key: str):
+        """Cross-process per-key lock: ``O_CREAT|O_EXCL`` lock file,
+        stale-broken after ``lock_stale_s`` (a holder that died cannot
+        release), degrading to lockless last-write-wins after
+        ``lock_timeout_s``.  Same-process threads serialize on
+        ``_winner_write_lock`` first so they contend on a mutex, not
+        the filesystem."""
+        lock_path = os.path.join(self._winners_dir, key + ".lock")
+        with self._winner_write_lock:
+            fd = None
+            deadline = time.monotonic() + self._lock_timeout_s
+            while fd is None:
+                try:
+                    fd = os.open(lock_path,
+                                 os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                    os.write(fd, str(os.getpid()).encode())
+                except FileExistsError:
+                    try:
+                        st = os.stat(lock_path)
+                    except OSError:
+                        continue          # released between open and stat
+                    if time.time() - st.st_mtime > self._lock_stale_s:
+                        # the holder is presumed dead; breaking the lock
+                        # can race another breaker, which merely
+                        # degrades this write to last-write-wins
+                        try:
+                            os.remove(lock_path)
+                        except OSError:
+                            pass
+                        continue
+                    if time.monotonic() > deadline:
+                        with self._lock:
+                            self.stats["lock_timeouts"] += 1
+                        break
+                    time.sleep(0.005)
+            try:
+                yield
+            finally:
+                if fd is not None:
+                    os.close(fd)
+                    try:
+                        os.remove(lock_path)
+                    except OSError:
+                        pass
 
     # -- bookkeeping ---------------------------------------------------------
     def _cache_insert(self, cache: dict, key: str, value) -> None:
@@ -231,24 +393,85 @@ class MeasureDB:
             self._winner_cache.clear()
             for d in (self._samples_dir, self._winners_dir):
                 for fn in os.listdir(d):
-                    if fn.endswith(".json"):
-                        os.remove(os.path.join(d, fn))
+                    # tmp/lock litter goes too — clear() means "empty
+                    # directory", not "empty except crash debris"
+                    if fn.endswith((".json", ".tmp", ".lock")):
+                        try:
+                            os.remove(os.path.join(d, fn))
+                        except OSError:
+                            pass
+
+    def reap_stale_tmp(self, ttl_s: float | None = None) -> int:
+        """Delete orphaned ``*.tmp`` files: a writer that died between
+        ``open(tmp)`` and ``os.replace`` leaves one behind forever (the
+        directory scans only ever consider ``.json``).  A tmp is stale
+        when its writer pid (encoded in the name) is dead, or — pid
+        unparsable / recycled — when it is older than ``ttl_s``.  Runs
+        on ``__init__``; returns the number reaped."""
+        ttl = self._tmp_ttl_s if ttl_s is None else float(ttl_s)
+        now = time.time()
+        n = 0
+        for d in (self._samples_dir, self._winners_dir):
+            for fn in os.listdir(d):
+                if not fn.endswith(".tmp"):
+                    continue
+                p = os.path.join(d, fn)
+                try:
+                    age = now - os.stat(p).st_mtime
+                except OSError:
+                    continue              # completed or reaped by a peer
+                pid = _tmp_pid(fn)
+                if (pid is not None and not _pid_alive(pid)) \
+                        or age > ttl:
+                    try:
+                        os.remove(p)
+                        n += 1
+                    except OSError:
+                        pass
+        with self._lock:
+            self.stats["tmp_reaped"] += n
+        return n
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            return dict(self.stats)
+
+    @staticmethod
+    def _stamp(path: str) -> tuple[int, int] | None:
+        try:
+            st = os.stat(path)
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
 
     # -- file IO -------------------------------------------------------------
-    @staticmethod
-    def _read(path: str) -> dict | None:
+    def _read(self, path: str) -> dict | None:
         try:
             with open(path) as f:
                 return json.load(f)
-        except (OSError, json.JSONDecodeError):
+        except FileNotFoundError:
+            return None
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            # unreadable or torn-looking record: a miss, but a COUNTED
+            # miss — silent swallowing hid real corruption
+            with self._lock:
+                self.stats["corrupt_records"] += 1
             return None
 
-    @staticmethod
-    def _write(path: str, payload: dict) -> None:
+    def _write(self, path: str, payload: dict) -> None:
         # unique tmp per writer: concurrent writers of the same key each
         # replace atomically (identical payloads — keys are content
         # addresses), never tripping over a shared tmp file
         tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            # a failed dump/replace (full disk, unserializable payload)
+            # must not orphan the tmp for the reaper to find later
+            if os.path.exists(tmp):
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass

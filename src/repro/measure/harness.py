@@ -500,4 +500,12 @@ class ExecutionHarness:
 
     def stats_dict(self) -> dict:
         with self._lock:
-            return dict(self.stats)
+            out = dict(self.stats)
+        # DB health counters ride along (db_* prefixed) so the serving
+        # layer surfaces corruption/crash-reaping without reaching into
+        # the DB itself (a fleet replica's stats() is its health probe)
+        db = self.db.stats_dict() if self.db is not None else {}
+        for k in ("corrupt_records", "tmp_reaped", "lock_timeouts",
+                  "winner_refreshes"):
+            out[f"db_{k}"] = db.get(k, 0)
+        return out

@@ -303,6 +303,7 @@ class KernelService:
         self.n_requests = 0
         self.n_coalesced = 0
         self.n_warm_starts = 0
+        self._closed = False
         self._lock = threading.Lock()
         self._inflight: dict[tuple, cf.Future] = {}
         self._pool = cf.ThreadPoolExecutor(
@@ -325,6 +326,8 @@ class KernelService:
         joined rather than re-searched (coalescing)."""
         key = self._key(task, seed, target)
         with self._lock:
+            if self._closed:
+                raise RuntimeError("KernelService is closed")
             fut = self._inflight.get(key)
             self.n_requests += 1
             if fut is not None:
@@ -341,11 +344,15 @@ class KernelService:
     def _serve_one(self, key, task, seed, target):
         try:
             self._maybe_evict()
-            res = self._warm_start(task, seed, target)
+            res, stale = self._warm_start(task, seed, target)
             if res is not None:
                 return res
             res = self._engine.optimize(task, seed, target=target)
-            self._record_winner(task, seed, target, res)
+            # force past the merge policy only when the on-disk record
+            # provably failed the live oracle (stale after a semantic
+            # change): the fresh result must overwrite it even if the
+            # stale record was a measured one
+            self._record_winner(task, seed, target, res, force=stale)
             return res
         finally:
             with self._lock:
@@ -363,25 +370,43 @@ class KernelService:
         # different seeds / strategies / depths are different questions,
         # and a warm answer must only serve its own — a service
         # restarted with max_steps=8 must re-search, not replay the
-        # 3-step winner (env_fp covers only the MEASUREMENT config)
+        # 3-step winner (env_fp covers only the MEASUREMENT config).
+        # rerank_top_k is deliberately NOT part of the question:
+        # measured reranking refines the ANSWER to the same search
+        # (same space, same survivors, measured tiebreak), which is
+        # what lets a fleet's background worker hot-swap a replica's
+        # analytic pick for a measured one under the same key
+        # (DESIGN.md §13) — records carry measured_s so consumers can
+        # tell which kind they hold.
         ec = self._engine.cfg
-        sig = (f"{ec.mode}|{ec.strategy}|{ec.max_steps}"
-               f"|{ec.rerank_top_k}|{ec.curated}")
+        sig = f"{ec.mode}|{ec.strategy}|{ec.max_steps}|{ec.curated}"
         tkey = f"{task.fingerprint()}#{sig}" if seed is None \
             else f"{task.fingerprint()}#{sig}#s{int(seed)}"
         return (tkey, tgt.name, self.harness.env_fp(tgt))
 
     def _warm_start(self, task, seed, target):
-        """Answer from the on-disk winner record of a PRIOR session, if
-        one exists for this (task, target, environment) — no search, no
-        measurement; the oracle check still runs against the live store
-        so a warm answer is graded exactly like a fresh one."""
+        """Answer from the on-disk winner record, if one exists for this
+        (task, target, environment) — no search, no measurement; the
+        oracle check still runs against the live store so a warm answer
+        is graded exactly like a fresh one.  The record may come from a
+        prior session OR from a peer replica sharing the directory
+        (``get_winner`` revalidates by file stamp).  Returns
+        ``(result | None, stale)``: ``stale`` marks an on-disk record
+        that failed the live oracle, which the fresh search's result
+        must force-overwrite."""
         key = self._winner_db_key(task, seed, target)
         if key is None:
-            return None
+            return None, False
         rec = self.harness.db.get_winner(*key)
         if rec is None:
-            return None
+            return None, False
+        if self._engine.cfg.rerank_top_k > 0 \
+                and rec.get("measured_s") is None:
+            # a MEASURING service must not serve an unmeasured record:
+            # re-search (cheap against a warm store), measure the
+            # survivors, and upgrade the record — the fleet hot-swap
+            # path (the merge policy below makes the upgrade stick)
+            return None, False
         from repro.core.kernel_ir import program_from_json
         from repro.core.pipeline import OptimizationResult
         prog = program_from_json(rec["program"])
@@ -391,7 +416,7 @@ class KernelService:
             # changed under the same env fingerprint) must not be
             # served — fall through to a fresh search, whose result
             # overwrites the stale record
-            return None
+            return None, True
         with self._lock:
             self.n_warm_starts += 1
         return OptimizationResult(
@@ -399,23 +424,47 @@ class KernelService:
             int(rec["steps"]), 0, tuple(prog.history),
             measured_s=rec.get("measured_s"),
             measured_baseline_s=rec.get("measured_baseline_s"),
-            reranked=bool(rec.get("reranked", False)))
+            reranked=bool(rec.get("reranked", False))), False
 
-    def _record_winner(self, task, seed, target, res) -> None:
+    def _record_winner(self, task, seed, target, res, *,
+                       force: bool = False) -> None:
         key = self._winner_db_key(task, seed, target)
         if key is None or not res.correct:
             return
         from repro.core.kernel_ir import program_to_json
-        self.harness.db.put_winner(*key, {
+        rec = {
             "task": res.task,
             "program": program_to_json(res.program),
             "speedup": float(res.speedup),
             "steps": int(res.steps),
             "measured_s": res.measured_s,
             "measured_baseline_s": res.measured_baseline_s,
-            "reranked": bool(res.reranked)})
+            "reranked": bool(res.reranked)}
+
+        def merge(old):
+            # last-write-wins across replicas EXCEPT an analytic pick
+            # never downgrades a measured winner for the same question
+            # (a background refiner may have upgraded the record while
+            # we searched); force=True — the stale-oracle fallback —
+            # always overwrites
+            if old is not None and not force \
+                    and old.get("measured_s") is not None \
+                    and rec["measured_s"] is None:
+                return None
+            return rec
+        self.harness.db.update_winner(*key, merge)
 
     def close(self) -> None:
+        """Deterministic shutdown: after close() returns, every future
+        handed out by ``submit`` — coalesced joiners included — is
+        resolved (queued work is drained, never cancelled), no new
+        submissions are accepted (``RuntimeError``), and a second
+        close() is a no-op.  A caller blocked on ``result()`` therefore
+        never hangs on a shut-down service."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self._pool.shutdown(wait=True)
 
     # -- capacity ------------------------------------------------------------
@@ -456,19 +505,41 @@ class KernelService:
         return res, sched
 
     def optimize_batch(self, tasks) -> dict:
-        self.n_requests += len(tasks)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("KernelService is closed")
+            # under the lock like every other counter bump: suite
+            # evaluation runs concurrently with submit()-path requests,
+            # and an unlocked += here loses increments under contention
+            self.n_requests += len(tasks)
         self._maybe_evict()
         return self._engine.evaluate_suite(tasks)
+
+    @property
+    def load(self) -> int:
+        """In-flight (submitted, unresolved) request count — the
+        routing signal a fleet dispatcher balances on."""
+        with self._lock:
+            return len(self._inflight)
 
     def stats(self) -> dict:
         m = (self.harness.stats_dict() if self.harness is not None
              else {"measured": 0, "db_hits": 0, "db_misses": 0,
                    "verify_fallbacks": 0})
-        return dict(self.store.stats_dict(), requests=self.n_requests,
-                    coalesced=self.n_coalesced,
-                    inflight=len(self._inflight),
+        with self._lock:
+            # one consistent snapshot: n_requests/_inflight mutate under
+            # this lock on the request path, and stats() may race it
+            n_req, n_coal = self.n_requests, self.n_coalesced
+            n_warm, inflight = self.n_warm_starts, len(self._inflight)
+        return dict(self.store.stats_dict(), requests=n_req,
+                    coalesced=n_coal,
+                    inflight=inflight,
                     target=self.target.name,
                     measured=m["measured"], db_hits=m["db_hits"],
                     db_misses=m["db_misses"],
                     verify_fallbacks=m["verify_fallbacks"],
-                    warm_starts=self.n_warm_starts)
+                    warm_starts=n_warm,
+                    db_corrupt_records=m.get("db_corrupt_records", 0),
+                    db_tmp_reaped=m.get("db_tmp_reaped", 0),
+                    db_lock_timeouts=m.get("db_lock_timeouts", 0),
+                    db_winner_refreshes=m.get("db_winner_refreshes", 0))

@@ -1,0 +1,368 @@
+"""Fleet-scale serving: N ``KernelService`` replicas over one shared
+winner/measurement store (DESIGN.md §13).
+
+A single ``KernelService`` already amortizes search cost within one
+process (transposition store, request coalescing) and across restarts
+(the on-disk ``MeasureDB`` winner records).  This module scales the
+story past one replica:
+
+* **Replicas.**  N independent ``KernelService`` instances — each its
+  own transposition store and thread pool, exactly what N processes
+  would hold — share one ``MeasureDB`` directory.  All cross-replica
+  state flows through that directory under the DB's cross-process
+  protocol (atomic replaces, winner generations, stamp-revalidated
+  reads), so the same ``Fleet`` wiring is safe whether the replicas
+  live in one process (this class) or in N separate ones (each process
+  runs its own service/fleet on the shared directory — what
+  ``benchmarks/serve_bench.py`` measures).
+
+* **Admission control.**  ``submit`` rejects with ``AdmissionError``
+  once ``max_pending`` requests are queued or dispatched — a saturated
+  fleet sheds load at the door instead of growing an unbounded queue.
+
+* **Per-tenant fairness.**  Requests queue per tenant and dispatch
+  round-robin across tenants with work pending, so one tenant flooding
+  the queue cannot starve another's occasional request; within a
+  tenant, order is FIFO.
+
+* **Affinity routing.**  By default a request routes to the replica
+  owned by its key hash: concurrent duplicates land on the SAME
+  replica and coalesce in its futures map, and a hot kernel's search
+  substrate warms ONE store instead of N copies.  ``route="spread"``
+  picks the least-loaded replica instead (better for streams of
+  all-distinct kernels).
+
+* **Background measured refinement (hot-swap).**  Replicas answer from
+  the analytic pick immediately (``rerank_top_k=0`` — no timing on the
+  request path).  Every analytically-answered key is queued for a
+  refiner service that re-runs the same question WITH measured
+  reranking and upgrades the shared winner record (generation bump;
+  the service merge policy keeps analytic picks from downgrading it).
+  The next repeat request warm-starts from the measured record — the
+  analytic answer is hot-swapped for the measured one mid-stream,
+  with zero measurement latency on any serving path.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures as cf
+import dataclasses
+import threading
+
+from repro.serve.engine import KernelService
+
+
+class AdmissionError(RuntimeError):
+    """Rejected at admission: the fleet is saturated (``max_pending``)."""
+
+
+class FleetClosed(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    replicas: int = 3
+    max_pending: int = 1024   # admission cap: queued + dispatched
+    refine: bool = True       # background measured refinement workers
+    rerank_top_k: int = 3     # refiner measurement depth
+    route: str = "affinity"   # "affinity" | "spread"
+
+
+class Fleet:
+    """N serving replicas + dispatcher + background refiner over one DB.
+
+    ``submit(task, tenant=...)`` returns a Future exactly like
+    ``KernelService.submit``; ``close()`` drains queued work, resolves
+    every handed-out future, and shuts the replicas down.  Extra
+    keyword arguments (``mode``, ``strategy``, ``max_steps``,
+    ``target``, ...) configure every replica identically — replicas
+    answering the same question MUST share a search signature, or their
+    winner records would answer nobody (see
+    ``KernelService._winner_db_key``).
+    """
+
+    def __init__(self, db_dir: str, cfg: FleetConfig | None = None, *,
+                 measure_cfg=None, auto_start: bool = True,
+                 **service_kwargs):
+        self.cfg = cfg or FleetConfig()
+        if self.cfg.replicas < 1:
+            raise ValueError("a fleet needs at least one replica")
+        if self.cfg.route not in ("affinity", "spread"):
+            raise ValueError(f"unknown route {self.cfg.route!r}")
+        self.db_dir = str(db_dir)
+        kw = dict(service_kwargs)
+        kw.setdefault("serve_workers", 2)
+        self.replicas = [
+            KernelService(measure=True, measure_db=self.db_dir,
+                          rerank_top_k=0, measure_cfg=measure_cfg, **kw)
+            for _ in range(self.cfg.replicas)]
+        self.refiner = None
+        if self.cfg.refine:
+            kw_r = dict(kw, serve_workers=1)
+            self.refiner = KernelService(
+                measure=True, measure_db=self.db_dir,
+                rerank_top_k=self.cfg.rerank_top_k,
+                measure_cfg=measure_cfg, **kw_r)
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._queues: dict[str, collections.deque] = {}
+        self._tenant_rr: collections.deque[str] = collections.deque()
+        self._pending = 0
+        self._rr = 0                       # spread-routing tiebreak
+        self._closed = False
+        self._started = False
+        self.dispatch_log: list[str] = []  # tenant per dispatch (tests)
+        self.fleet_stats = {"admitted": 0, "rejected": 0,
+                            "dispatched": 0, "completed": 0,
+                            "failed": 0, "refined": 0,
+                            "refine_errors": 0, "hot_swaps": 0}
+        self._tenant_served: collections.Counter = collections.Counter()
+        # key -> was the last answer measured? (hot-swap detection)
+        self._last_measured: dict[tuple, bool] = {}
+        self._refine_cv = threading.Condition()
+        self._refine_q: collections.deque = collections.deque()
+        self._refine_keys: set = set()     # queued-or-running keys
+        self._refine_busy = 0
+        self._threads: list[threading.Thread] = []
+        if auto_start:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        """Start the dispatcher (and refiner) threads.  Constructed with
+        ``auto_start=False``, a fleet queues submissions without
+        dispatching until started — tests use this to stage
+        deterministic queue contents."""
+        with self._lock:
+            if self._started or self._closed:
+                return
+            self._started = True
+        t = threading.Thread(target=self._dispatch_loop,
+                             name="fleet-dispatch", daemon=True)
+        t.start()
+        self._threads.append(t)
+        if self.refiner is not None:
+            r = threading.Thread(target=self._refine_loop,
+                                 name="fleet-refine", daemon=True)
+            r.start()
+            self._threads.append(r)
+
+    def close(self, drain: bool = True) -> None:
+        """Deterministic shutdown.  ``drain=True`` dispatches everything
+        still queued and waits for it; ``drain=False`` fails queued
+        (undispatched) requests with ``FleetClosed``.  Either way every
+        future ``submit`` handed out is resolved when close() returns,
+        and refinement stops after the item in progress (refinement is
+        best-effort by construction)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            # a never-started fleet has no dispatcher to drain through:
+            # queued futures must still resolve (with FleetClosed)
+            if not drain or not self._started:
+                for q in self._queues.values():
+                    while q:
+                        fut = q.popleft()[0]
+                        fut.set_exception(FleetClosed("fleet closed"))
+                        self._pending -= 1
+            self._work.notify_all()
+        with self._refine_cv:
+            self._refine_cv.notify_all()
+        for t in self._threads:
+            t.join()
+        for r in self.replicas:
+            r.close()                 # resolves all dispatched futures
+        if self.refiner is not None:
+            self.refiner.close()
+
+    # -- request path --------------------------------------------------------
+    def submit(self, task, *, tenant: str = "default",
+               seed: int | None = None, target=None) -> cf.Future:
+        fut: cf.Future = cf.Future()
+        with self._lock:
+            if self._closed:
+                raise FleetClosed("fleet is closed")
+            if self._pending >= self.cfg.max_pending:
+                self.fleet_stats["rejected"] += 1
+                raise AdmissionError(
+                    f"fleet saturated: {self._pending} pending >= "
+                    f"max_pending {self.cfg.max_pending} "
+                    f"(tenant {tenant!r})")
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = collections.deque()
+                self._tenant_rr.append(tenant)
+            q.append((fut, task, seed, target, tenant))
+            self._pending += 1
+            self.fleet_stats["admitted"] += 1
+            self._work.notify()
+        return fut
+
+    def optimize(self, task, *, tenant: str = "default",
+                 seed: int | None = None, target=None):
+        return self.submit(task, tenant=tenant, seed=seed,
+                           target=target).result()
+
+    # -- dispatcher ----------------------------------------------------------
+    def _next_locked(self):
+        """Round-robin across tenants with queued work (fair share per
+        scheduling turn), FIFO within a tenant.  Caller holds _lock."""
+        for _ in range(len(self._tenant_rr)):
+            t = self._tenant_rr[0]
+            self._tenant_rr.rotate(-1)
+            q = self._queues.get(t)
+            if q:
+                return q.popleft()
+        return None
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._lock:
+                item = self._next_locked()
+                while item is None:
+                    if self._closed:
+                        return
+                    self._work.wait()
+                    item = self._next_locked()
+                self.dispatch_log.append(item[4])
+                self.fleet_stats["dispatched"] += 1
+            fut, task, seed, target, tenant = item
+            key = (task.fingerprint(),
+                   None if seed is None else int(seed),
+                   getattr(target, "name", target))
+            svc = self._pick_replica(key)
+            try:
+                inner = svc.submit(task, seed, target)
+            except BaseException as e:
+                fut.set_exception(e)
+                self._request_done(key, tenant, None, task, seed,
+                                   target)
+                continue
+            inner.add_done_callback(
+                lambda f, fut=fut, key=key, tenant=tenant, task=task,
+                seed=seed, target=target: self._deliver(
+                    f, fut, key, tenant, task, seed, target))
+
+    def _pick_replica(self, key) -> KernelService:
+        if self.cfg.route == "affinity":
+            return self.replicas[int(key[0][:8], 16)
+                                 % len(self.replicas)]
+        loads = [r.load for r in self.replicas]
+        lo = min(loads)
+        ties = [i for i, x in enumerate(loads) if x == lo]
+        with self._lock:
+            self._rr += 1
+            return self.replicas[ties[self._rr % len(ties)]]
+
+    def _deliver(self, inner: cf.Future, fut: cf.Future, key, tenant,
+                 task, seed, target) -> None:
+        try:
+            res = inner.result()
+        except BaseException as e:
+            fut.set_exception(e)
+            self._request_done(key, tenant, None, task, seed, target)
+            return
+        self._request_done(key, tenant, res, task, seed, target)
+        fut.set_result(res)
+
+    def _request_done(self, key, tenant, res, task, seed,
+                      target) -> None:
+        refine = False
+        with self._lock:
+            self._pending -= 1
+            self._tenant_served[tenant] += 1
+            if res is None:
+                self.fleet_stats["failed"] += 1
+            else:
+                self.fleet_stats["completed"] += 1
+                measured = res.measured_s is not None
+                if self._last_measured.get(key) is False and measured:
+                    # an earlier answer for this key was the analytic
+                    # pick and this one carries a measured record: the
+                    # background refiner's winner hot-swapped in
+                    self.fleet_stats["hot_swaps"] += 1
+                if len(self._last_measured) > 65536:
+                    self._last_measured.clear()
+                self._last_measured[key] = measured
+                refine = (not measured and res.correct
+                          and self.refiner is not None)
+        if refine:
+            self._enqueue_refine(key, task, seed, target)
+
+    # -- background refinement ----------------------------------------------
+    def _enqueue_refine(self, key, task, seed, target) -> None:
+        with self._refine_cv:
+            if self._closed or key in self._refine_keys:
+                return
+            self._refine_keys.add(key)
+            self._refine_q.append((key, task, seed, target))
+            self._refine_cv.notify()
+
+    def _refine_loop(self) -> None:
+        while True:
+            with self._refine_cv:
+                while not self._refine_q and not self._closed:
+                    self._refine_cv.wait()
+                if self._closed:
+                    return
+                key, task, seed, target = self._refine_q.popleft()
+                self._refine_busy += 1
+            try:
+                # the refiner's own _warm_start refuses unmeasured
+                # records (it measures), re-runs the identical question
+                # with rerank_top_k>0, and its _record_winner upgrades
+                # the shared record; replicas pick the upgrade up via
+                # the stamp-revalidated get_winner on their next repeat
+                self.refiner.optimize(task, seed, target)
+                with self._lock:
+                    self.fleet_stats["refined"] += 1
+            except Exception:
+                # refinement is best-effort: the analytic answer stands
+                with self._lock:
+                    self.fleet_stats["refine_errors"] += 1
+            finally:
+                with self._refine_cv:
+                    self._refine_busy -= 1
+                    self._refine_keys.discard(key)
+                    self._refine_cv.notify_all()
+
+    def drain_refinement(self, timeout: float | None = None) -> bool:
+        """Block until the refine queue is empty and no refinement is
+        running (or ``timeout`` elapses); returns whether it drained.
+        Benchmarks use this to make hot-swap observable at a known
+        point in the stream."""
+        with self._refine_cv:
+            return self._refine_cv.wait_for(
+                lambda: not self._refine_q and self._refine_busy == 0,
+                timeout)
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        """Fleet counters + summed replica counters (requests,
+        coalesced, warm_starts, measured, db_*, ...) + per-tenant
+        served counts."""
+        agg: collections.Counter = collections.Counter()
+        for r in self.replicas:
+            st = r.stats()
+            for k in ("requests", "coalesced", "warm_starts",
+                      "measured", "db_hits", "db_misses",
+                      "verify_fallbacks", "fresh_applies",
+                      "db_corrupt_records", "db_tmp_reaped",
+                      "db_lock_timeouts", "db_winner_refreshes",
+                      "evictions", "evicted_programs", "inflight"):
+                agg[k] += st.get(k, 0)
+        with self._lock:
+            out = dict(self.fleet_stats)
+            out["tenants"] = dict(self._tenant_served)
+            out["queued"] = sum(map(len, self._queues.values()))
+            out["pending"] = self._pending
+        out.update(agg)
+        out["n_replicas"] = len(self.replicas)
+        if self.refiner is not None:
+            rst = self.refiner.stats()
+            out["refiner_measured"] = rst["measured"]
+            out["refiner_requests"] = rst["requests"]
+        return out

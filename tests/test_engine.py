@@ -301,3 +301,86 @@ def test_kernel_service_reuses_cache_across_requests():
     assert svc.stats()["fresh_applies"] == fresh   # 2nd request: all hits
     assert r1.speedup == r2.speedup and r1.correct == r2.correct
     assert svc.stats()["requests"] == 2
+
+
+def test_kernel_service_close_resolves_inflight_and_rejects_new():
+    """close() is deterministic: it drains the in-flight search (never
+    cancels it), so a caller holding a coalesced future — handed out
+    BEFORE close — resolves normally; new submissions are refused and
+    a second close() is a no-op."""
+    import threading
+    from repro.serve.engine import KernelService
+    svc = KernelService(mode="greedy_cost", max_steps=2,
+                        serve_workers=2)
+    task = T.kb_level2()[0]
+    gate = threading.Event()
+    inner = svc._engine.optimize
+
+    def gated(task, seed=None, target=None):
+        assert gate.wait(timeout=60)
+        return inner(task, seed, target=target)
+
+    svc._engine.optimize = gated
+    f1 = svc.submit(task)
+    f2 = svc.submit(task)                 # coalesced joiner
+    assert f2 is f1
+    closer = threading.Thread(target=svc.close)
+    closer.start()
+    assert not f1.done()                  # close is draining, not done
+    gate.set()
+    closer.join(120)
+    assert not closer.is_alive()
+    assert f1.result(10).correct          # the joined future resolved
+    with pytest.raises(RuntimeError):
+        svc.submit(task)                  # closed: refused, not queued
+    svc.close()                           # idempotent
+
+
+def test_kernel_service_counters_exact_under_contention():
+    """Regression: ``optimize_batch`` bumped ``n_requests`` and
+    ``stats()`` read ``_inflight`` without the lock, losing increments
+    under concurrent traffic.  Distinct-seed submits (no coalescing)
+    plus batch calls plus stats readers must account exactly."""
+    import threading
+    import types
+    from repro.serve.engine import KernelService
+    svc = KernelService(mode="greedy_cost", max_steps=1,
+                        serve_workers=4)
+    # counters are the subject, not the search: stub both entry points
+    svc._engine.optimize = lambda task, seed=None, target=None: \
+        types.SimpleNamespace(correct=True)
+    svc._engine.evaluate_suite = lambda tasks: {}
+    task = T.kb_level1()[0]
+    N, M, B = 8, 25, 10
+    futs, flock = [], threading.Lock()
+
+    def submitter(i):
+        for j in range(M):
+            f = svc.submit(task, i * M + j)
+            with flock:
+                futs.append(f)
+
+    def batcher():
+        for _ in range(B):
+            svc.optimize_batch([task, task])
+
+    def reader():
+        for _ in range(50):
+            st = svc.stats()
+            assert st["requests"] >= 0 and st["inflight"] >= 0
+
+    ts = [threading.Thread(target=submitter, args=(i,))
+          for i in range(N)]
+    ts += [threading.Thread(target=batcher) for _ in range(2)]
+    ts += [threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for f in futs:
+        f.result(60)
+    st = svc.stats()
+    svc.close()
+    assert st["requests"] == N * M + 2 * B * 2
+    assert st["coalesced"] == 0
+    assert st["inflight"] == 0

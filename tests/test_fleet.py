@@ -1,0 +1,488 @@
+"""Fleet-scale serving (serve/fleet.py + the measure/db.py
+cross-process protocol, DESIGN.md §13).
+
+Covers: winner-record generations (monotonic, exact under threaded and
+multi-process update races), torn-read freedom of concurrent
+put_winner/get_winner/iter_samples, the update_winner merge hook
+(keep-current), peer-write pickup through the stamp-revalidated
+get_winner, stale-tmp reaping + crash-safe _write + corrupt-record
+counting, cross-replica KernelService warm starts (including the
+stale-oracle force-overwrite and the analytic-never-downgrades-measured
+merge policy), the refiner hot-swap chain, and the Fleet layer itself
+(admission control, per-tenant round-robin fairness, deterministic
+close).
+
+The multiprocessing children import only ``repro.measure.db`` (no jax
+at module scope), so spawned workers stay cheap.
+"""
+import json
+import multiprocessing as mp
+import os
+import threading
+
+import pytest
+
+from repro.measure.db import MeasureDB
+
+KEY = ("taskfp0000000000", "cpu_generic", "envfp0")
+
+
+def _tiny(name="tiny_mm", n=256):
+    from repro.core.kernel_ir import chain_program
+    return chain_program(name, {"a": (n, n), "b": (n, n)},
+                         [("y", "matmul", ("a", "b"))])
+
+
+def _measure_cfg():
+    from repro.measure.harness import MeasureConfig
+    return MeasureConfig(repeats=1, warmup=0)
+
+
+# ---------------------------------------------------------------------------
+# winner generations: monotonic, exact under racing writers
+# ---------------------------------------------------------------------------
+
+def test_winner_generation_monotonic(tmp_path):
+    db = MeasureDB(str(tmp_path))
+    r1 = db.put_winner(*KEY, {"speedup": 1.0})
+    r2 = db.put_winner(*KEY, {"speedup": 2.0})
+    r3 = db.update_winner(*KEY, lambda old: dict(old, speedup=3.0))
+    assert (r1["generation"], r2["generation"], r3["generation"]) \
+        == (1, 2, 3)
+    assert db.get_winner(*KEY)["speedup"] == 3.0
+
+
+def test_update_winner_none_keeps_current(tmp_path):
+    """fn returning None keeps the record: no write, no generation
+    bump — the merge hook the KernelService no-downgrade policy uses."""
+    db = MeasureDB(str(tmp_path))
+    db.put_winner(*KEY, {"speedup": 1.0, "measured_s": 1e-6})
+    kept = db.update_winner(*KEY, lambda old: None)
+    assert kept["generation"] == 1 and kept["measured_s"] == 1e-6
+    assert db.get_winner(*KEY)["generation"] == 1
+
+
+def test_threaded_update_race_counts_exactly(tmp_path):
+    """The per-key lock makes read-modify-write atomic: N threads each
+    incrementing a counter M times must land exactly N*M increments
+    and generation N*M — a lost update would show up as a gap."""
+    db = MeasureDB(str(tmp_path))
+    N, M = 8, 10
+
+    def bump(old):
+        return {"count": (0 if old is None else old["count"]) + 1}
+
+    def worker():
+        for _ in range(M):
+            db.update_winner(*KEY, bump)
+
+    ts = [threading.Thread(target=worker) for _ in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    rec = db.get_winner(*KEY)
+    assert rec["count"] == N * M
+    assert rec["generation"] == N * M
+    assert db.stats["lock_timeouts"] == 0
+
+
+def test_threaded_put_get_no_torn_reads(tmp_path):
+    """Writers replacing one winner record while a reader hammers
+    get_winner: every read parses and is internally consistent
+    (id matches its blob) — os.replace atomicity, surfaced."""
+    db = MeasureDB(str(tmp_path))
+    stop = threading.Event()
+    bad = []
+
+    def writer(wid):
+        for i in range(30):
+            db.put_winner(*KEY, {"id": wid, "blob": f"x{wid}" * 500})
+
+    def reader():
+        rdb = MeasureDB(str(tmp_path))   # own cache: disk reads
+        while not stop.is_set():
+            rec = rdb.get_winner(*KEY)
+            if rec is None:
+                continue
+            if rec["blob"] != f"x{rec['id']}" * 500:
+                bad.append(rec)
+    rt = threading.Thread(target=reader)
+    rt.start()
+    ws = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+    for t in ws:
+        t.start()
+    for t in ws:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not bad
+    assert db.get_winner(*KEY)["generation"] == 4 * 30
+
+
+# ---------------------------------------------------------------------------
+# multi-process races (spawn: children import only repro.measure.db)
+# ---------------------------------------------------------------------------
+
+def _mp_bump_worker(db_dir, n_iters, barrier):
+    from repro.measure.db import MeasureDB
+    key = ("taskfp0000000000", "cpu_generic", "envfp0")
+    db = MeasureDB(db_dir)
+
+    def bump(old):
+        return {"count": (0 if old is None else old["count"]) + 1}
+    barrier.wait()
+    for _ in range(n_iters):
+        db.update_winner(*key, bump)
+
+
+def _mp_sample_worker(db_dir, wid, n, barrier):
+    from repro.measure.db import MeasureDB, MeasureSample
+    db = MeasureDB(db_dir)
+    barrier.wait()
+    for i in range(n):
+        db.put(MeasureSample(
+            task_fp=f"t{wid:02d}{i:04d}", prog_fp="p0",
+            target="cpu_generic", env_fp="envfp0", time_s=1.0,
+            samples=(1.0,), n_rejected=0, mode="xla",
+            analytic_s=1.0, bottleneck="compute"))
+
+
+@pytest.mark.slow
+def test_multiprocess_update_race_converges(tmp_path):
+    """3 separate processes racing read-modify-writes on one winner key:
+    the lock FILE serializes them, so the count is exact and the
+    generation counts every write — last-write-wins convergence with
+    no torn state."""
+    ctx = mp.get_context("spawn")
+    P, M = 3, 12
+    barrier = ctx.Barrier(P)
+    procs = [ctx.Process(target=_mp_bump_worker,
+                         args=(str(tmp_path), M, barrier))
+             for _ in range(P)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(120)
+        assert p.exitcode == 0
+    rec = MeasureDB(str(tmp_path)).get_winner(*KEY)
+    assert rec["count"] == P * M
+    assert rec["generation"] == P * M
+
+
+@pytest.mark.slow
+def test_multiprocess_samples_all_land_and_parse(tmp_path):
+    """Concurrent sample writers from separate processes: every sample
+    lands (content-addressed keys never collide across writers) and
+    iter_samples parses all of them — no torn files."""
+    ctx = mp.get_context("spawn")
+    P, N = 3, 10
+    barrier = ctx.Barrier(P)
+    procs = [ctx.Process(target=_mp_sample_worker,
+                         args=(str(tmp_path), w, N, barrier))
+             for w in range(P)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(120)
+        assert p.exitcode == 0
+    db = MeasureDB(str(tmp_path))
+    seen = {s.task_fp for s in db.iter_samples(target="cpu_generic")}
+    assert len(seen) == P * N
+    assert db.stats["corrupt_records"] == 0
+
+
+# ---------------------------------------------------------------------------
+# peer pickup, reaping, crash safety, corruption counting
+# ---------------------------------------------------------------------------
+
+def test_peer_write_picked_up_by_stamp(tmp_path):
+    """Two MeasureDB instances over one directory (two replicas): a
+    winner landed by one is observed by the other on its NEXT read —
+    the stamp revalidation, no refresh() needed — and the supersession
+    is counted in winner_refreshes."""
+    a = MeasureDB(str(tmp_path))
+    b = MeasureDB(str(tmp_path))
+    a.put_winner(*KEY, {"speedup": 1.0})
+    assert b.get_winner(*KEY)["speedup"] == 1.0   # cold read, cached
+    a.put_winner(*KEY, {"speedup": 2.0})
+    assert b.get_winner(*KEY)["speedup"] == 2.0   # stamp changed
+    assert b.stats["winner_refreshes"] == 1
+    # unchanged stamp: served from cache, not recounted
+    assert b.get_winner(*KEY)["speedup"] == 2.0
+    assert b.stats["winner_refreshes"] == 1
+
+
+def test_get_winner_forgets_deleted_record(tmp_path):
+    db = MeasureDB(str(tmp_path))
+    db.put_winner(*KEY, {"speedup": 1.0})
+    assert db.get_winner(*KEY) is not None
+    db.clear()
+    assert db.get_winner(*KEY) is None
+
+
+def test_reap_stale_tmp_on_init(tmp_path):
+    """Orphans of dead writers (pid in the filename) and ancient tmps
+    are deleted on construction; a live writer's fresh tmp survives."""
+    win = tmp_path / "winners"
+    win.mkdir(parents=True)
+    (win / "aaaa.json.999999999.1.tmp").write_text("{")   # dead pid
+    old = win / "bbbb.json.notapid.tmp"
+    old.write_text("{")
+    os.utime(old, (1, 1))                                 # ancient
+    mine = win / f"cccc.json.{os.getpid()}.1.tmp"
+    mine.write_text("{")                                  # live writer
+    db = MeasureDB(str(tmp_path))
+    assert db.stats["tmp_reaped"] == 2
+    assert not (win / "aaaa.json.999999999.1.tmp").exists()
+    assert not old.exists()
+    assert mine.exists()
+    # explicit reap with ttl 0 takes the live writer's too
+    assert db.reap_stale_tmp(ttl_s=0.0) == 1
+    assert not mine.exists()
+
+
+def test_write_failure_leaves_no_tmp(tmp_path):
+    db = MeasureDB(str(tmp_path))
+    with pytest.raises(TypeError):
+        db.put_winner(*KEY, {"bad": object()})   # unserializable
+    litter = [fn for fn in os.listdir(tmp_path / "winners")
+              if fn.endswith(".tmp")]
+    assert litter == []
+    assert db.get_winner(*KEY) is None           # nothing half-landed
+
+
+def test_corrupt_record_reads_as_counted_miss(tmp_path):
+    db = MeasureDB(str(tmp_path))
+    db.put_winner(*KEY, {"speedup": 1.0})
+    path = os.path.join(str(tmp_path), "winners",
+                        db.winner_key(*KEY) + ".json")
+    with open(path, "w") as f:
+        f.write('{"speedup": 1.')                # torn-looking JSON
+    db.refresh()
+    assert db.get_winner(*KEY) is None
+    assert db.stats["corrupt_records"] == 1
+    # a rewrite heals it; json is whole again
+    db.put_winner(*KEY, {"speedup": 2.0})
+    with open(path) as f:
+        assert json.load(f)["speedup"] == 2.0
+
+
+def test_clear_removes_locks_and_tmps(tmp_path):
+    db = MeasureDB(str(tmp_path))
+    db.put_winner(*KEY, {"speedup": 1.0})
+    win = tmp_path / "winners"
+    (win / "zz.json.1.1.tmp").write_text("{")
+    (win / "zz.lock").write_text("1")
+    db.clear()
+    assert os.listdir(win) == []
+
+
+# ---------------------------------------------------------------------------
+# cross-replica KernelService semantics (jax; service-level)
+# ---------------------------------------------------------------------------
+
+def test_cross_replica_warm_start(tmp_path):
+    """Replica B answers a repeat of what replica A served — from A's
+    winner record through the shared directory, zero search work."""
+    from repro.serve.engine import KernelService
+    task = _tiny("xrep", 256)
+    kw = dict(measure=True, measure_db=str(tmp_path / "db"),
+              rerank_top_k=0, measure_cfg=_measure_cfg(), max_steps=3)
+    a = KernelService(**kw)
+    ra = a.optimize(task)
+    a.close()
+    b = KernelService(**kw)
+    rb = b.optimize(task)
+    st = b.stats()
+    b.close()
+    assert ra.correct and rb.correct
+    assert rb.program.fingerprint() == ra.program.fingerprint()
+    assert st["warm_starts"] == 1
+    assert st["fresh_applies"] == 0         # no search ran on B
+
+
+def test_stale_winner_force_overwrites_cross_replica(tmp_path):
+    """A record that fails the live oracle must be overwritten by the
+    fallback search EVEN when it claims to be measured (force beats
+    the no-downgrade merge policy), and the overwrite is visible to a
+    peer replica."""
+    from repro.core.kernel_ir import (chain_program, program_from_json,
+                                      program_to_json)
+    from repro.serve.engine import KernelService
+    task = _tiny("stale", 256)
+    kw = dict(measure=True, measure_db=str(tmp_path / "db"),
+              rerank_top_k=0, measure_cfg=_measure_cfg(), max_steps=3)
+    a = KernelService(**kw)
+    wrong = chain_program("stale", {"a": (256, 256), "b": (256, 256)},
+                          [("y", "relu", ("a",))])
+    key = a._winner_db_key(task, None, None)
+    a.harness.db.put_winner(*key, {
+        "task": task.name, "program": program_to_json(wrong),
+        "speedup": 9.9, "steps": 1, "measured_s": 1e-6,
+        "measured_baseline_s": 1e-6, "reranked": True})
+    res = a.optimize(task)
+    a.close()
+    assert res.correct
+    # the peer sees the fresh (analytic, generation-2) record
+    b = KernelService(**kw)
+    rec = b.harness.db.get_winner(*key)
+    rb = b.optimize(task)
+    stb = b.stats()
+    b.close()
+    assert rec["generation"] == 2
+    assert program_from_json(rec["program"]).eval_fingerprint() \
+        == task.eval_fingerprint()
+    assert rb.correct and stb["warm_starts"] == 1
+
+
+def test_analytic_result_never_downgrades_measured_record(tmp_path):
+    """The service merge policy: once a measured winner is on disk, a
+    replica's analytic pick for the same question keeps the record
+    (returns None from the merge hook) — no write, no generation
+    bump."""
+    from repro.serve.engine import KernelService
+    task = _tiny("nodg", 256)
+    db_dir = str(tmp_path / "db")
+    r = KernelService(measure=True, measure_db=db_dir, rerank_top_k=2,
+                      measure_cfg=_measure_cfg(), max_steps=3)
+    rr = r.optimize(task)
+    key = r._winner_db_key(task, None, None)
+    rec0 = r.harness.db.get_winner(*key)
+    assert rr.measured_s is not None and rec0["measured_s"] is not None
+    # an analytic replica re-records its (unmeasured) answer
+    a = KernelService(measure=True, measure_db=db_dir, rerank_top_k=0,
+                      measure_cfg=_measure_cfg(), max_steps=3)
+    analytic = rr.__class__(
+        rr.task, rr.program, rr.correct, rr.speedup, rr.steps, 0, (),
+        measured_s=None, measured_baseline_s=None, reranked=False)
+    a._record_winner(task, None, None, analytic)
+    rec1 = a.harness.db.get_winner(*key)
+    r.close()
+    a.close()
+    assert rec1["measured_s"] == rec0["measured_s"]
+    assert rec1["generation"] == rec0["generation"]
+
+
+def test_refiner_hot_swaps_analytic_record(tmp_path):
+    """The fleet hot-swap chain, service by service: an analytic
+    replica lands an unmeasured record; a measuring service REFUSES to
+    warm-start from it, re-searches, and upgrades the record; the next
+    analytic replica then warm-starts with the measured answer."""
+    from repro.serve.engine import KernelService
+    task = _tiny("swap", 256)
+    db_dir = str(tmp_path / "db")
+    kw = dict(measure=True, measure_db=db_dir,
+              measure_cfg=_measure_cfg(), max_steps=3)
+    a = KernelService(rerank_top_k=0, **kw)
+    ra = a.optimize(task)
+    key = a._winner_db_key(task, None, None)
+    assert ra.measured_s is None
+    assert a.harness.db.get_winner(*key)["measured_s"] is None
+    a.close()
+    ref = KernelService(rerank_top_k=2, **kw)
+    rr = ref.optimize(task)
+    st_ref = ref.stats()
+    rec = ref.harness.db.get_winner(*key)
+    ref.close()
+    assert st_ref["warm_starts"] == 0       # refused the unmeasured rec
+    assert rr.measured_s is not None
+    assert rec["measured_s"] is not None and rec["generation"] == 2
+    b = KernelService(rerank_top_k=0, **kw)
+    rb = b.optimize(task)
+    stb = b.stats()
+    b.close()
+    assert stb["warm_starts"] == 1
+    assert rb.measured_s is not None        # the swapped-in answer
+
+
+# ---------------------------------------------------------------------------
+# the Fleet layer
+# ---------------------------------------------------------------------------
+
+def test_fleet_config_validation(tmp_path):
+    from repro.serve.fleet import Fleet, FleetConfig
+    with pytest.raises(ValueError):
+        Fleet(str(tmp_path), FleetConfig(replicas=0))
+    with pytest.raises(ValueError):
+        Fleet(str(tmp_path), FleetConfig(route="random"))
+
+
+@pytest.mark.slow
+def test_fleet_serves_and_hot_swaps(tmp_path):
+    """End to end: replicas answer analytically, the background refiner
+    upgrades the record, a repeat request serves the measured answer —
+    counted as a hot swap."""
+    from repro.serve.fleet import Fleet, FleetConfig
+    fl = Fleet(str(tmp_path / "db"),
+               FleetConfig(replicas=2, rerank_top_k=2),
+               measure_cfg=_measure_cfg(), max_steps=3)
+    task = _tiny("fleet", 256)
+    r1 = fl.optimize(task, tenant="alice")
+    assert r1.correct and r1.measured_s is None
+    assert fl.drain_refinement(timeout=180)
+    r2 = fl.optimize(task, tenant="bob")
+    st = fl.stats()
+    fl.close()
+    assert r2.measured_s is not None
+    assert st["hot_swaps"] == 1
+    assert st["refined"] == 1
+    assert st["warm_starts"] >= 1
+    assert st["tenants"] == {"alice": 1, "bob": 1}
+
+
+def test_fleet_admission_control(tmp_path):
+    from repro.serve.fleet import AdmissionError, Fleet, FleetConfig
+    fl = Fleet(str(tmp_path / "db"),
+               FleetConfig(replicas=1, max_pending=2, refine=False),
+               measure_cfg=_measure_cfg(), max_steps=2,
+               auto_start=False)
+    task = _tiny("adm", 128)
+    f1 = fl.submit(task, tenant="a")
+    f2 = fl.submit(task, tenant="b")
+    with pytest.raises(AdmissionError):
+        fl.submit(task, tenant="c")
+    st = fl.stats()
+    assert st["rejected"] == 1 and st["admitted"] == 2
+    fl.start()                  # dispatch the queue; both must resolve
+    assert f1.result(300).correct and f2.result(300).correct
+    fl.close()
+
+
+def test_fleet_tenant_round_robin(tmp_path):
+    """One tenant flooding the queue cannot starve another: with A
+    holding 6 queued requests and B holding 2, B's requests dispatch
+    within the first 4 turns (strict per-turn round-robin)."""
+    from repro.serve.fleet import Fleet, FleetConfig
+    fl = Fleet(str(tmp_path / "db"),
+               FleetConfig(replicas=1, refine=False),
+               measure_cfg=_measure_cfg(), max_steps=2,
+               auto_start=False)
+    task = _tiny("fair", 128)
+    futs = [fl.submit(task, tenant="flood") for _ in range(6)]
+    futs += [fl.submit(task, tenant="meek") for _ in range(2)]
+    fl.start()
+    for f in futs:
+        assert f.result(300).correct
+    log = fl.dispatch_log
+    fl.close()
+    assert len(log) == 8
+    assert sorted(i for i, t in enumerate(log) if t == "meek") \
+        == [1, 3]
+
+
+def test_fleet_close_without_drain_fails_queued(tmp_path):
+    from repro.serve.fleet import Fleet, FleetClosed, FleetConfig
+    fl = Fleet(str(tmp_path / "db"),
+               FleetConfig(replicas=1, refine=False),
+               measure_cfg=_measure_cfg(), max_steps=2,
+               auto_start=False)
+    task = _tiny("cls", 128)
+    futs = [fl.submit(task, tenant="a") for _ in range(3)]
+    fl.close(drain=False)
+    for f in futs:
+        with pytest.raises(FleetClosed):
+            f.result(10)
+    with pytest.raises(FleetClosed):
+        fl.submit(task)
+    fl.close()                  # idempotent
