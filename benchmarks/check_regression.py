@@ -23,6 +23,16 @@ every row name present in BOTH files:
   (the committed value is 1.0), so the tiny ``WARM_SLACK`` only
   absorbs float printing — a warm-start protocol regression (key
   drift, record refusal, stamp bugs) fails CI.
+* ``policy_expansion_ratio=`` (``benchmarks.table7_policy`` budget
+  grid): policy-guided search's node expansions as a fraction of
+  beam's on the budget-matched subset.  LOWER is better — the new
+  value must be <= baseline + ``PEXP_SLACK``, and <= the 0.5 absolute
+  ceiling the table itself asserts: a policy or search change that
+  quietly re-inflates the search budget fails CI.
+* ``policy_speedup_ratio=`` (same row): policy search's geomean
+  speedup over beam's.  Must stay >= baseline - ``PSPD_SLACK`` (and
+  the table asserts >= 1.0 absolutely): the trained policy must keep
+  matching beam's solution quality.
 
 Modeled speedups are deliberately NOT gated — they move whenever the
 cost model or search deepens.
@@ -38,9 +48,13 @@ _ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
 _RHO = re.compile(r"(?:^|;)rho=(-?[0-9.]+)")
 _RULES = re.compile(r"(?:^|;)rules_improved_frac=([0-9.]+)")
 _WARM = re.compile(r"(?:^|;)warm_rate=([0-9.]+)")
+_PEXP = re.compile(r"(?:^|;)policy_expansion_ratio=([0-9.]+)")
+_PSPD = re.compile(r"(?:^|;)policy_speedup_ratio=([0-9.]+)")
 
 RHO_SLACK = 0.3
 WARM_SLACK = 0.02
+PEXP_SLACK = 0.05   # expansion ratio is near-deterministic
+PSPD_SLACK = 0.02
 
 
 def _parse(path: str, pattern: re.Pattern) -> dict[str, float]:
@@ -75,12 +89,39 @@ def parse_warm_rates(path: str) -> dict[str, float]:
     return _parse(path, _WARM)
 
 
+def parse_policy_expansion(path: str) -> dict[str, float]:
+    return _parse(path, _PEXP)
+
+
+def parse_policy_speedup(path: str) -> dict[str, float]:
+    return _parse(path, _PSPD)
+
+
 def _gate(kind: str, base: dict[str, float], new: dict[str, float],
           slack: float) -> tuple[int, list[str]]:
     shared = sorted(set(base) & set(new))
     drops = [f"REGRESSION {n}: {kind} {base[n]:.3f} -> {new[n]:.3f} "
              f"(slack {slack:g})"
              for n in shared if new[n] < base[n] - slack]
+    print(f"compared {kind} on {len(shared)} rows "
+          f"({len(base) - len(shared)} baseline-only, "
+          f"{len(new) - len(shared)} new-only)")
+    return len(shared), drops
+
+
+def _gate_upper(kind: str, base: dict[str, float],
+                new: dict[str, float], slack: float,
+                ceiling: float | None = None) -> tuple[int, list[str]]:
+    """Lower-is-better gate: fail when new > base + slack (or past an
+    absolute ceiling, when one is contractual)."""
+    shared = sorted(set(base) & set(new))
+    drops = [f"REGRESSION {n}: {kind} {base[n]:.3f} -> {new[n]:.3f} "
+             f"(slack {slack:g})"
+             for n in shared if new[n] > base[n] + slack]
+    if ceiling is not None:
+        drops += [f"REGRESSION {n}: {kind} {new[n]:.3f} above absolute "
+                  f"ceiling {ceiling:g}"
+                  for n in shared if new[n] > ceiling]
     print(f"compared {kind} on {len(shared)} rows "
           f"({len(base) - len(shared)} baseline-only, "
           f"{len(new) - len(shared)} new-only)")
@@ -100,17 +141,25 @@ def main(argv: list[str]) -> int:
         parse_rules_improved(argv[2]), 1e-9)
     n_warm, warm_drops = _gate("warm_rate", parse_warm_rates(argv[1]),
                                parse_warm_rates(argv[2]), WARM_SLACK)
-    if n_acc == 0 and n_rho == 0 and n_rules == 0 and n_warm == 0:
+    n_pexp, pexp_drops = _gate_upper(
+        "policy_expansion_ratio", parse_policy_expansion(argv[1]),
+        parse_policy_expansion(argv[2]), PEXP_SLACK, ceiling=0.5)
+    n_pspd, pspd_drops = _gate(
+        "policy_speedup_ratio", parse_policy_speedup(argv[1]),
+        parse_policy_speedup(argv[2]), PSPD_SLACK)
+    if (n_acc == 0 and n_rho == 0 and n_rules == 0 and n_warm == 0
+            and n_pexp == 0 and n_pspd == 0):
         print(f"error: no comparable rows between {argv[1]} and "
               f"{argv[2]}")
         return 2
-    drops = acc_drops + rho_drops + rules_drops + warm_drops
+    drops = (acc_drops + rho_drops + rules_drops + warm_drops
+             + pexp_drops + pspd_drops)
     for msg in drops:
         print(msg)
     if drops:
         return 1
-    print("no execute-accuracy, rank-correlation, rule-ablation or "
-          "warm-start regressions")
+    print("no execute-accuracy, rank-correlation, rule-ablation, "
+          "warm-start or policy-budget regressions")
     return 0
 
 

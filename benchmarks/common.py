@@ -8,13 +8,17 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (CollectConfig, EvalEngine, MacroPolicy,
-                        PPOConfig, PPOTrainer, PolicyConfig,
-                        TranspositionStore, collect_suite)
+from repro.core import (CollectConfig, EnvConfig, EvalEngine,
+                        MacroPolicy, OptimizeConfig, PPOConfig,
+                        PPOTrainer, PolicyConfig, TranspositionStore,
+                        collect_suite, get_reward_source)
 from repro.core import tasks as T
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 POLICY_PATH = os.path.join(RESULTS, "macro_policy.pkl")
+# committed measurement DB replayed as the PPO reward signal: training
+# is hermetic (no timing at train time) yet measured-grounded
+REWARD_DB = os.path.join(RESULTS, "policy_reward_db")
 
 # One transposition store for the whole benchmark process: every table,
 # mode and ablation sweeps the same suites, so rewrites, cost pricing
@@ -23,18 +27,80 @@ STORE = TranspositionStore()
 WORKERS = max(2, (os.cpu_count() or 2))
 
 
-def train_policy(iters: int = 24, episodes: int = 8, seed: int = 0,
-                 pcfg: PolicyConfig = PolicyConfig()) -> MacroPolicy:
+def build_reward_db(db_dir: str = REWARD_DB, seed: int = 0,
+                    per_task: int = 12, force: bool = False):
+    """Populate (or open) the committed reward MeasureDB.
+
+    One-time, OUTSIDE the training loop: collects the same offline
+    trees the PPO run replays (same CollectConfig seeds, extended
+    action space) and actually executes the root + the ``per_task``
+    analytically-cheapest distinct programs of every training task,
+    persisting the samples.  Training then replays these measurements
+    hermetically through a ``MeasuredRewardSource`` — re-running PPO
+    never re-times anything (DESIGN.md §14).
+    """
+    from repro.measure.db import MeasureDB
+    from repro.measure.harness import ExecutionHarness, MeasureConfig
+    db = MeasureDB(db_dir)
+    if not force and any(True for _ in db.iter_samples()):
+        return db
+    harness = ExecutionHarness(db=db, cfg=MeasureConfig(
+        mode="xla", repeats=3, warmup=1, verify=False))
     trees = collect_suite(
         T.train_tasks(),
         CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed),
-        store=STORE)
+        env_cfg=EnvConfig(extended_rules=True), store=STORE)
+    for name, tree in trees.items():
+        task = tree.nodes[tree.root].program
+        ranked = sorted(tree.nodes.values(), key=lambda n: n.cost_s)
+        picked, seen = [], set()
+        for node in [tree.nodes[tree.root]] + ranked:
+            fp = node.program.fingerprint()
+            if fp in seen:
+                continue
+            seen.add(fp)
+            picked.append(node.program)
+            if len(picked) > per_task:
+                break
+        for prog in picked:
+            harness.measure(task, prog)
+    return db
+
+
+def train_policy(iters: int = 24, episodes: int = 8, seed: int = 0,
+                 pcfg: PolicyConfig | None = None,
+                 reward: str = "measured",
+                 extended: bool = True) -> MacroPolicy:
+    """PPO-train the Macro policy.
+
+    ``reward`` selects the RewardSource pricing the offline trees'
+    node costs ("analytic" | "calibrated" | "measured"; the latter two
+    replay ``results/policy_reward_db``); ``extended`` trains over the
+    full extended-registry action vocabulary (dtype / split_k rules
+    included) so the policy's action space matches ``PolicySearch``.
+    """
+    pcfg = pcfg if pcfg is not None else PolicyConfig()
+    rs = None
+    if reward != "analytic":
+        rs = get_reward_source(reward, db=build_reward_db(seed=seed))
+    env_cfg = EnvConfig(extended_rules=extended)
+    trees = collect_suite(
+        T.train_tasks(),
+        CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed),
+        env_cfg=env_cfg, store=STORE, reward_source=rs)
     trainer = PPOTrainer(
         trees, pcfg=pcfg,
         cfg=PPOConfig(iters=iters, episodes_per_iter=episodes, seed=seed,
-                      max_candidates=32, lr=1e-3, entropy_coef=0.02))
+                      max_candidates=32, lr=1e-3, entropy_coef=0.02),
+        env_cfg=env_cfg)
     policy = trainer.train()
     policy.train_log = trainer.log
+    policy.meta = {
+        "reward_source": rs.name if rs is not None else "analytic",
+        "reward_db_hits": getattr(rs, "hits", 0),
+        "reward_db_misses": getattr(rs, "misses", 0),
+        "extended_rules": extended, "vocab_size": pcfg.vocab,
+        "iters": iters, "episodes": episodes, "seed": seed}
     return policy
 
 
@@ -46,12 +112,14 @@ def cached_policy(retrain: bool = False, **kw) -> MacroPolicy:
         pol = MacroPolicy(blob["cfg"], params=jax.tree.map(
             jax.numpy.asarray, blob["params"]))
         pol.train_log = blob.get("log", [])
+        pol.meta = blob.get("meta", {})
         return pol
     pol = train_policy(**kw)
     with open(POLICY_PATH, "wb") as f:
         pickle.dump({"cfg": pol.cfg,
                      "params": jax.tree.map(np.asarray, pol.params),
-                     "log": getattr(pol, "train_log", [])}, f)
+                     "log": getattr(pol, "train_log", []),
+                     "meta": getattr(pol, "meta", {})}, f)
     return pol
 
 
@@ -65,8 +133,10 @@ def eval_mode(suite, mode: str, policy=None, curated: bool = True,
     the golden regression in tests/test_engine.py and the oracle-input
     caveat in core/engine.py.
     """
-    eng = EvalEngine(policy, store=STORE, mode=mode, curated=curated,
-                     seed=seed, max_steps=max_steps,
+    eng = EvalEngine(policy, store=STORE,
+                     config=OptimizeConfig(mode=mode, curated=curated,
+                                           seed=seed,
+                                           max_steps=max_steps),
                      workers=WORKERS if workers is None else workers)
     t0 = time.time()
     out = eng.evaluate_suite(suite)

@@ -20,16 +20,15 @@ import sys
 
 SERIAL = r"""
 import json, time
-from repro.core import MTMCPipeline, evaluate_suite
+from repro.core import MTMCPipeline, OptimizeConfig, evaluate_suite
 from repro.core import tasks as T
 tasks = T.train_tasks()
+cfg = OptimizeConfig(mode="greedy_cost", max_steps=8, seed=0)
 t0 = time.time()
-out = evaluate_suite(tasks, MTMCPipeline(mode="greedy_cost",
-                                         max_steps=8, seed=0))
+out = evaluate_suite(tasks, MTMCPipeline(config=cfg))
 t1 = time.time() - t0
 t0 = time.time()
-out2 = evaluate_suite(tasks, MTMCPipeline(mode="greedy_cost",
-                                          max_steps=8, seed=0))
+out2 = evaluate_suite(tasks, MTMCPipeline(config=cfg))
 t2 = time.time() - t0
 m = {k: v for k, v in out.items() if k != "results"}
 print("RESULT:" + json.dumps({"first_s": t1, "second_s": t2,
@@ -38,10 +37,11 @@ print("RESULT:" + json.dumps({"first_s": t1, "second_s": t2,
 
 ENGINE = r"""
 import json, time
-from repro.core import EvalEngine
+from repro.core import EvalEngine, OptimizeConfig
 from repro.core import tasks as T
 tasks = T.train_tasks()
-eng = EvalEngine(mode="greedy_cost", max_steps=8, seed=0, workers=%d)
+eng = EvalEngine(config=OptimizeConfig(mode="greedy_cost", max_steps=8,
+                                       seed=0), workers=%d)
 t0 = time.time()
 out = eng.evaluate_suite(tasks)
 t1 = time.time() - t0

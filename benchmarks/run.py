@@ -73,7 +73,8 @@ def main() -> None:
     if getattr(policy, "train_log", None):
         with open(os.path.join(RESULTS, "policy_training.json"),
                   "w") as f:
-            json.dump(policy.train_log, f, indent=1)
+            json.dump({"meta": getattr(policy, "meta", {}),
+                       "log": policy.train_log}, f, indent=1)
     from .common import STORE
     print("# engine store:", json.dumps(STORE.stats_dict()))
 

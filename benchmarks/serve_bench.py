@@ -48,7 +48,14 @@ import time
 
 import numpy as np
 
+from repro.core import OptimizeConfig
+
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# the measured-mode scenario's search signature: beam search, depth 3,
+# rerank the top 3 survivors by measured time
+_BEAM3 = OptimizeConfig(mode="greedy_cost", strategy="beam",
+                        max_steps=3, rerank_top_k=3)
 
 
 def _pct(xs, p) -> float:
@@ -65,8 +72,9 @@ def bench_service(fast: bool) -> tuple[dict, list[str]]:
 
     suite = T.kb_level1() + T.kb_level2() + T.kb_level3()
     n_req = 80 if fast else 300
-    svc = KernelService(mode="greedy_cost",
-                        max_steps=3 if fast else 6,
+    svc = KernelService(config=OptimizeConfig(
+                            mode="greedy_cost",
+                            max_steps=3 if fast else 6),
                         serve_workers=4,
                         max_programs=150 if fast else 1200,
                         evict_slab=30 if fast else 150)
@@ -159,17 +167,15 @@ def _measured_spot_check() -> dict:
     db_dir = tempfile.mkdtemp(prefix="serve_bench_measure_db_")
     cfg = MeasureConfig(repeats=2, warmup=1)
     try:
-        svc = KernelService(strategy="beam", measure=True,
-                            measure_db=db_dir, rerank_top_k=3,
-                            measure_cfg=cfg, max_steps=3)
+        svc = KernelService(config=_BEAM3, measure=True,
+                            measure_db=db_dir, measure_cfg=cfg)
         r1 = svc.optimize(task)
         st1 = svc.stats()
         svc.close()
         # a fresh process image of the service against the same DB dir:
         # the repeat request must warm-start (no search, no timing)
-        svc2 = KernelService(strategy="beam", measure=True,
-                             measure_db=db_dir, rerank_top_k=3,
-                             measure_cfg=cfg, max_steps=3)
+        svc2 = KernelService(config=_BEAM3, measure=True,
+                             measure_db=db_dir, measure_cfg=cfg)
         r2 = svc2.optimize(task)
         st2 = svc2.stats()
         svc2.close()
@@ -223,7 +229,9 @@ def bench_fleet(fast: bool) -> tuple[dict, list[str]]:
         fl = Fleet(db_dir,
                    FleetConfig(replicas=3, rerank_top_k=2,
                                max_pending=64),
-                   measure_cfg=_fleet_measure_cfg(), max_steps=3,
+                   measure_cfg=_fleet_measure_cfg(),
+                   config=OptimizeConfig(mode="greedy_cost",
+                                         max_steps=3),
                    serve_workers=2)
 
         def one(i: int):
@@ -292,9 +300,11 @@ def _fleet_replica_worker(db_dir, picks, barrier, out_q) -> None:
     from repro.serve.engine import KernelService
     suite = _fleet_suite()
     svc = KernelService(measure=True, measure_db=db_dir,
-                        rerank_top_k=0,
+                        config=OptimizeConfig(mode="greedy_cost",
+                                              max_steps=3,
+                                              rerank_top_k=0),
                         measure_cfg=_fleet_measure_cfg(),
-                        max_steps=3, serve_workers=2)
+                        serve_workers=2)
     barrier.wait()            # jax imported, service built: go
     t0 = time.perf_counter()
     ok = all(svc.optimize(suite[i]).correct for i in picks)
@@ -374,9 +384,11 @@ def bench_fleet_scale(fast: bool) -> tuple[dict, list[str]]:
         # store, new caches) over the warm shared DB must answer every
         # repeat from winners/ without a single re-search
         svc = KernelService(measure=True, measure_db=dir_fleet,
-                            rerank_top_k=0,
+                            config=OptimizeConfig(mode="greedy_cost",
+                                                  max_steps=3,
+                                                  rerank_top_k=0),
                             measure_cfg=_fleet_measure_cfg(),
-                            max_steps=3, serve_workers=2)
+                            serve_workers=2)
         t0 = time.perf_counter()
         ok_warm = all(svc.optimize(suite[i]).correct for i in picks)
         wall_warm = time.perf_counter() - t0

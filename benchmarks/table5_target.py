@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from .common import STORE
-from repro.core import MTMCPipeline, program_cost, rules
+from repro.core import MTMCPipeline, OptimizeConfig, program_cost, rules
 from repro.core import tasks as T
 
 _XLA_KINDS = (rules.FusionRule.kind, rules.StopRule.kind)
@@ -28,11 +28,12 @@ def run(policy) -> list[str]:
              or "mlp" in t.name]
     rows = []
     for name, pipe in [
-            ("pallas_full", MTMCPipeline(mode="greedy_cost",
-                                         max_steps=8, store=STORE)),
-            ("xla_fusion_only", _FusionOnlyPipeline(mode="greedy_cost",
-                                                    max_steps=8,
-                                                    store=STORE))]:
+            ("pallas_full", MTMCPipeline(
+                config=OptimizeConfig(mode="greedy_cost", max_steps=8),
+                store=STORE)),
+            ("xla_fusion_only", _FusionOnlyPipeline(
+                config=OptimizeConfig(mode="greedy_cost", max_steps=8),
+                store=STORE))]:
         times = []
         for t in suite:
             r = pipe.optimize(t)

@@ -2,17 +2,91 @@
   w/ policy + AS      : trained policy (x2 backbone sizes)
   w/o policy + AS     : random / untrained-LM over the curated space
   w/o policy + w/o AS : untrained-LM over unrestricted proposals
-on a 10%-style subset of the benchmark tasks (paper's protocol)."""
+on a 10%-style subset of the benchmark tasks (paper's protocol).
+
+Plus the budget-matched search grid (DESIGN.md §14): beam search vs
+``PolicySearch`` (the trained policy pruning the frontier) on the same
+subset at equal depth over the extended action space.  The row reports
+the geomean speedup of each and the two ratios ``check_regression.py``
+gates: ``policy_expansion_ratio`` (policy node expansions / beam's —
+lower is better, must stay <= 0.5) and ``policy_speedup_ratio``
+(policy geomean / beam geomean — must stay >= 1.0): the trained policy
+must match beam's solution quality at a fraction of its search budget.
+"""
 from __future__ import annotations
 
-from .common import eval_mode, fmt_row
+import numpy as np
+
+from .common import STORE, eval_mode, fmt_row
 from repro.core import MacroPolicy
 from repro.core import tasks as T
+from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.search import get_strategy
+
+# budget-grid gates, asserted here AND regression-gated on the CSV
+MAX_EXPANSION_RATIO = 0.5
+MIN_SPEEDUP_RATIO = 1.0
 
 
 def _subset():
     return [T.kb_level1()[0], T.kb_level1()[5], T.kb_level2()[0],
             T.kb_level2()[3], T.kb_level3()[0]]
+
+
+def _geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.asarray(xs, np.float64)))))
+
+
+def budget_grid(policy) -> dict:
+    """Beam vs policy-guided search, budget-matched: same tasks, same
+    store, same depth (8), same extended action space — only the
+    expansion rule differs."""
+    suite = _subset()
+    coder = StructuredMicroCoder()
+    out = {}
+    for sname in ("beam", "policy"):
+        strat = get_strategy(sname)
+        n_exp, speedups, n_ok = 0, [], 0
+        for t in suite:
+            r = strat.search(t, coder=coder, store=STORE, max_steps=8,
+                             seed=0, curated=True, extended=True,
+                             policy=policy)
+            n_exp += r.n_expanded
+            speedups.append(r.baseline_s / r.cost_s)
+            n_ok += int(STORE.check(t, r.program))
+        out[sname] = {"expanded": n_exp,
+                      "geomean_speedup": _geomean(speedups),
+                      "accuracy": n_ok / len(suite)}
+    out["expansion_ratio"] = (out["policy"]["expanded"]
+                              / max(out["beam"]["expanded"], 1))
+    out["speedup_ratio"] = (out["policy"]["geomean_speedup"]
+                            / out["beam"]["geomean_speedup"])
+    return out
+
+
+def _budget_rows(policy) -> list[str]:
+    g = budget_grid(policy)
+    assert g["expansion_ratio"] <= MAX_EXPANSION_RATIO, (
+        f"policy search expanded {g['policy']['expanded']} nodes vs "
+        f"beam's {g['beam']['expanded']} "
+        f"(ratio {g['expansion_ratio']:.2f} > {MAX_EXPANSION_RATIO})")
+    assert g["speedup_ratio"] >= MIN_SPEEDUP_RATIO - 1e-9, (
+        f"policy search geomean speedup "
+        f"{g['policy']['geomean_speedup']:.3f} below beam's "
+        f"{g['beam']['geomean_speedup']:.3f}")
+    rows = []
+    for sname in ("beam", "policy"):
+        s = g[sname]
+        rows.append(
+            f"table7/budget/{sname},{s['expanded']:.1f},"
+            f"acc={s['accuracy']:.2f};"
+            f"geomean_speedup={s['geomean_speedup']:.3f}")
+    rows.append(
+        f"table7/budget/ratio,{g['policy']['expanded']:.1f},"
+        f"acc={g['policy']['accuracy']:.2f};"
+        f"policy_expansion_ratio={g['expansion_ratio']:.3f};"
+        f"policy_speedup_ratio={g['speedup_ratio']:.3f}")
+    return rows
 
 
 def run(policy, small_policy=None) -> list[str]:
@@ -30,4 +104,5 @@ def run(policy, small_policy=None) -> list[str]:
     rows.append(fmt_row("table7", "wo_policy_woAS/untrained-lm",
                         eval_mode(suite, "untrained", MacroPolicy(),
                                   curated=False)))
+    rows.extend(_budget_rows(policy))
     return rows

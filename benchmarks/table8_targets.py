@@ -13,7 +13,7 @@ greedy baseline at equal oracle accuracy.
 from __future__ import annotations
 
 from .common import STORE, WORKERS, fmt_row
-from repro.core import EvalEngine, program_cost
+from repro.core import EvalEngine, OptimizeConfig, program_cost
 from repro.core import tasks as T
 
 TARGETS = ("tpu_v5e", "tpu_v4", "gpu_a100")
@@ -26,9 +26,11 @@ def run(policy=None) -> list[str]:
     for tname in TARGETS:
         per_strategy = {}
         for sname in STRATEGIES:
-            eng = EvalEngine(None, store=STORE, mode="greedy_cost",
-                             strategy=sname, target=tname, max_steps=8,
-                             workers=WORKERS)
+            eng = EvalEngine(None, store=STORE, workers=WORKERS,
+                             config=OptimizeConfig(mode="greedy_cost",
+                                                   strategy=sname,
+                                                   target=tname,
+                                                   max_steps=8))
             m = eng.evaluate_suite(suite)
             per_strategy[sname] = m["results"]
             rows.append(fmt_row("table8", f"{tname}/{sname}", m,

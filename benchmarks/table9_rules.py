@@ -13,7 +13,7 @@ accuracy — the extra rules must never cost correctness.
 from __future__ import annotations
 
 from .common import STORE, WORKERS
-from repro.core import EvalEngine, program_cost
+from repro.core import EvalEngine, OptimizeConfig, program_cost
 from repro.core import tasks as T
 
 # strict-improvement margin, matching the searches' GREEDY_REL_TOL
@@ -24,9 +24,11 @@ def run(policy=None) -> list[str]:
     suite = T.ext_tasks() + T.kb_level2() + T.tb_t()
     results = {}
     for name, ext in (("classic", False), ("extended", True)):
-        eng = EvalEngine(None, store=STORE, mode="greedy_cost",
-                         strategy="greedy", extended=ext, max_steps=8,
-                         workers=WORKERS)
+        eng = EvalEngine(None, store=STORE, workers=WORKERS,
+                         config=OptimizeConfig(mode="greedy_cost",
+                                               strategy="greedy",
+                                               extended_rules=ext,
+                                               max_steps=8))
         results[name] = eng.evaluate_suite(suite)["results"]
     rows, wins, n_acc = [], 0, 0
     for task, rc, rx in zip(suite, results["classic"],

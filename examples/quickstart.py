@@ -11,7 +11,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import MTMCPipeline, program_cost  # noqa: E402
+from repro.core import MTMCPipeline, OptimizeConfig, program_cost  # noqa: E402
 from repro.core import tasks  # noqa: E402
 
 task = tasks._attn_program("quickstart_attention", B=2, S=1024, H=8,
@@ -22,7 +22,8 @@ c0 = program_cost(task)
 print(f"  naive modeled time: {c0.total_s * 1e6:.1f} us "
       f"(bottleneck: {c0.bottleneck})")
 
-pipe = MTMCPipeline(mode="greedy_cost", max_steps=8)
+pipe = MTMCPipeline(config=OptimizeConfig(mode="greedy_cost",
+                                          max_steps=8))
 result = pipe.optimize(task)
 
 print("\noptimization trace:")

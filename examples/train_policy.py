@@ -14,8 +14,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import (CollectConfig, MTMCPipeline, MacroPolicy,  # noqa: E402
-                        PPOConfig, PPOTrainer, collect_suite,
-                        evaluate_suite)
+                        OptimizeConfig, PPOConfig, PPOTrainer,
+                        collect_suite, evaluate_suite)
 from repro.core import tasks  # noqa: E402
 from repro.core.trajectories import tree_stats  # noqa: E402
 
@@ -47,10 +47,12 @@ def main():
     print("\n== held-out evaluation (KB-L2-like suite) ==")
     suite = tasks.kb_level2()
     for name, pipe in [
-            ("MTMC (ours)", MTMCPipeline(policy, mode="policy")),
-            ("untrained LM", MTMCPipeline(MacroPolicy(),
-                                          mode="untrained")),
-            ("random", MTMCPipeline(None, mode="random"))]:
+            ("MTMC (ours)", MTMCPipeline(
+                policy, config=OptimizeConfig(mode="policy"))),
+            ("untrained LM", MTMCPipeline(
+                MacroPolicy(), config=OptimizeConfig(mode="untrained"))),
+            ("random", MTMCPipeline(
+                None, config=OptimizeConfig(mode="random")))]:
         m = evaluate_suite(suite, pipe)
         print(f"  {name:14s} acc={m['accuracy']:.2f} "
               f"fast1={m['fast1']:.2f} speedup={m['mean_speedup']:.2f}")

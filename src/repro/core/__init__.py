@@ -7,16 +7,22 @@ compile/correctness feedback.  See DESIGN.md.
 """
 from repro.core import rules                              # noqa: F401
 from repro.core.actions import Action, candidate_actions  # noqa: F401
+from repro.core.config import (OptimizeConfig,            # noqa: F401
+                               reset_deprecation_warnings)
 from repro.core.cost_model import program_cost, speedup   # noqa: F401
 from repro.core.rules import RewriteRule, register_rule   # noqa: F401
 from repro.core.engine import (EngineConfig, EvalEngine,  # noqa: F401
                                TranspositionStore)
-from repro.core.env import EnvConfig, KernelEnv, OfflineEnv, OfflineTree  # noqa: F401
+from repro.core.env import (AnalyticRewardSource,         # noqa: F401
+                            CalibratedRewardSource, EnvConfig,
+                            KernelEnv, MeasuredRewardSource, OfflineEnv,
+                            OfflineTree, RewardSource, get_reward_source)
 from repro.core.hardware import (HardwareTarget, get_target,  # noqa: F401
                                  register_target, registered_targets)
 from repro.core.search import (AnnealedSearch, BeamSearch,  # noqa: F401
-                               GreedySearch, SearchStrategy,
-                               get_strategy)
+                               GreedySearch, PolicySearch,
+                               SearchStrategy, get_strategy,
+                               register_strategy)
 from repro.core.kernel_ir import KernelProgram, OpNode, TensorSpec  # noqa: F401
 from repro.core.micro_coding import StructuredMicroCoder  # noqa: F401
 from repro.core.pipeline import MTMCPipeline, evaluate_suite, suite_metrics  # noqa: F401

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import tasks as T
+from repro.core.config import UNSET, OptimizeConfig, resolve_config
 from repro.core.pipeline import MTMCPipeline
 from repro.kernels import ops
 
@@ -61,35 +62,45 @@ def model_kernel_tasks(cfg: ModelConfig, shape: ShapeConfig,
     return out
 
 
+#: historical tuner defaults: cheap greedy descent, oracle off (the
+#: tuner's winners are schedule-only rewrites, proven structurally)
+TUNE_DEFAULTS = OptimizeConfig(mode="greedy_cost", validate=False,
+                               max_steps=6)
+
+
 def tune_model_kernels(cfg: ModelConfig, shape: ShapeConfig,
                        pipeline: MTMCPipeline | None = None,
-                       target=None, strategy: str | None = None,
-                       measurer=None, rerank_top_k: int = 0) -> dict:
+                       config: OptimizeConfig | None = None,
+                       target=UNSET, strategy=UNSET,
+                       measurer=UNSET, rerank_top_k=UNSET) -> dict:
     """Runs MTMC per hot kernel; installs schedules; returns report.
 
+    ``config`` (an ``OptimizeConfig``) is the one knob surface; its
     ``target`` selects the hardware target the schedules are tuned
     against AND the registry slot they are installed under
     (``ops.set_schedule(..., target=...)``) — tuning for several chips
     fills independent slots and ``ops.set_active_target`` picks at
     serve time.  ``strategy`` optionally swaps the default greedy
-    descent for a search strategy ("beam", "anneal").  ``measurer``
-    (a ``measure.ExecutionHarness``) + ``rerank_top_k`` > 0 turn on
-    measured reranking: the installed schedule is the one whose program
-    actually ran fastest, not the analytic pick (DESIGN.md §11).
+    descent for a search strategy ("beam", "anneal", "policy").
+    ``measurer`` (a ``measure.ExecutionHarness``) + ``rerank_top_k`` > 0
+    turn on measured reranking: the installed schedule is the one whose
+    program actually ran fastest, not the analytic pick (DESIGN.md §11).
+    The flat target/strategy/measurer/rerank_top_k kwargs are
+    deprecation shims over ``config``.
     """
-    if pipeline is not None and (target is not None
-                                 or strategy is not None
-                                 or measurer is not None
-                                 or rerank_top_k):
+    legacy = {"target": target, "strategy": strategy,
+              "measurer": measurer, "rerank_top_k": rerank_top_k}
+    has_overrides = (config is not None
+                     or any(v is not UNSET for v in legacy.values()))
+    if pipeline is not None and has_overrides:
         raise ValueError("pass either an explicit pipeline or "
-                         "target/strategy/measurer/rerank_top_k "
+                         "config/target/strategy/measurer/rerank_top_k "
                          "overrides, not both (the pipeline already "
                          "fixes its own)")
-    pipeline = pipeline or MTMCPipeline(mode="greedy_cost",
-                                        validate=False, max_steps=6,
-                                        target=target, strategy=strategy,
-                                        measurer=measurer,
-                                        rerank_top_k=rerank_top_k)
+    if pipeline is None:
+        oc = resolve_config("tune_model_kernels", config, legacy,
+                            defaults=TUNE_DEFAULTS)
+        pipeline = MTMCPipeline(config=oc)
     report = {}
     for kname, (task, kernel, key) in model_kernel_tasks(cfg,
                                                          shape).items():

@@ -1,0 +1,124 @@
+"""One optimizer-configuration surface for every entry point.
+
+``OptimizeConfig`` is the single frozen record of *how to optimize a
+kernel* — mode, search strategy, action space, step budget, pricing
+(cost model), and measured reranking.  Every entry point accepts it
+under a ``config=`` keyword:
+
+    MTMCPipeline(policy, config=OptimizeConfig(strategy="policy"))
+    EvalEngine(policy, config=..., workers=8)
+    tune_model_kernels(model_cfg, shape, config=...)
+    KernelService(policy, config=..., measure=True)
+    Fleet(db_dir, config=...)
+
+Engine-/service-specific knobs that are not *optimizer* semantics
+(worker counts, store capacity, measurement plumbing) stay explicit
+keyword arguments on their owners.
+
+The pre-existing kwargs sprawl (``mode=``, ``strategy=``,
+``max_steps=``, ..., ``cost_model_override=``) keeps working for one
+release as **deprecation shims**: each entry point folds the legacy
+keywords into an ``OptimizeConfig`` and emits a single
+``DeprecationWarning`` per entry point per process — the resulting
+config drives the exact same code path, so legacy calls produce
+byte-identical outcomes (shim-tested in ``tests/test_optimize_config``).
+An in-repo call site outside this shim layer must use ``config=``; an
+AST gate in the test suite enforces it.
+
+``cost_model`` collapses the former ``cost_model_override`` vs
+``TranspositionStore(cost_model=...)`` duality: it is THE field naming
+the pricing model, and the existing consistency check still refuses a
+store bound to a different model (a store's ``(fp, target)`` cost memo
+does not encode the model — DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import warnings
+
+# sentinel distinguishing "caller passed this legacy kwarg" from "left
+# at default" — a legacy default must neither warn nor override config
+UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizeConfig:
+    """How to optimize a kernel — shared by every entry point.
+
+    ``strategy`` may be a registered strategy name (``"greedy"``,
+    ``"beam"``, ``"anneal"``, ``"policy"``) or a ``SearchStrategy``
+    instance; ``None`` keeps the mode-driven rollout loop.
+    ``cost_model`` is the pluggable pricing model (duck-typed
+    ``program_cost``/``total_s``, e.g. ``measure.CalibratedCostModel``);
+    ``measurer`` a ``measure.ExecutionHarness`` for measured reranking
+    of the search's top-``rerank_top_k`` survivors.
+    """
+
+    mode: str = "policy"
+    curated: bool = True
+    extended_rules: bool = False
+    max_steps: int = 8
+    seed: int = 0
+    validate: bool = True
+    target: object = None          # target name | HardwareTarget | None
+    strategy: object = None        # name | SearchStrategy | None
+    cost_model: object = None
+    measurer: object = None
+    rerank_top_k: int = 0
+
+    def replace(self, **kw) -> "OptimizeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_warned: set[str] = set()
+_warn_lock = threading.Lock()
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which entry points already warned (tests only)."""
+    with _warn_lock:
+        _warned.clear()
+
+
+def _warn_once(entry_point: str, names: list[str]) -> None:
+    with _warn_lock:
+        if entry_point in _warned:
+            return
+        _warned.add(entry_point)
+    warnings.warn(
+        f"{entry_point}({', '.join(sorted(names))}=...) keyword options "
+        f"are deprecated; pass config=OptimizeConfig(...) instead "
+        f"(repro.core.OptimizeConfig). The shim will be removed next "
+        f"release.", DeprecationWarning, stacklevel=3)
+
+
+def resolve_config(entry_point: str,
+                   config: OptimizeConfig | None,
+                   legacy: dict,
+                   *, defaults: OptimizeConfig | None = None
+                   ) -> OptimizeConfig:
+    """Fold legacy kwargs into one ``OptimizeConfig``.
+
+    ``legacy`` maps OptimizeConfig field names to the caller-supplied
+    values, ``UNSET`` marking "not passed".  Passing both ``config``
+    and any legacy kwarg is an error (the two would silently shadow
+    each other); legacy kwargs emit one ``DeprecationWarning`` per
+    ``entry_point`` per process.  ``defaults`` seeds entry points whose
+    historical defaults differ from ``OptimizeConfig()`` (e.g. the
+    service's ``mode="greedy_cost"``), keeping shimmed calls
+    byte-identical to their pre-config behavior.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not UNSET}
+    if config is not None:
+        if passed:
+            raise TypeError(
+                f"{entry_point}: pass either config=OptimizeConfig(...) "
+                f"or legacy keyword options "
+                f"({', '.join(sorted(passed))}), not both")
+        return config
+    base = defaults if defaults is not None else OptimizeConfig()
+    if not passed:
+        return base
+    _warn_once(entry_point, sorted(passed))
+    return dataclasses.replace(base, **passed)

@@ -54,6 +54,7 @@ import threading
 import jax
 
 from repro.core import cost_model, hardware, rules
+from repro.core.config import UNSET, OptimizeConfig, resolve_config
 from repro.core.env import action_key
 from repro.core.kernel_ir import (KernelProgram, evaluate, evaluate_np,
                                   make_inputs_np)
@@ -388,6 +389,33 @@ class EngineConfig:
     strategy: str | None = None   # search strategy name (None = mode loop)
     rerank_top_k: int = 0  # measured reranking depth (needs a measurer)
 
+    @classmethod
+    def from_optimize(cls, oc: OptimizeConfig, *, workers: int = 0,
+                      seed_stride: int = 0) -> "EngineConfig":
+        """Project an OptimizeConfig onto the engine's legacy config
+        record (kept because serve-side keys and logs stringify it).
+        Instance-valued target/strategy collapse to their names."""
+        tgt = oc.target
+        if tgt is not None and not isinstance(tgt, str):
+            tgt = hardware.resolve(tgt).name
+        strat = oc.strategy
+        if strat is not None and not isinstance(strat, str):
+            strat = getattr(strat, "name", str(strat))
+        return cls(mode=oc.mode, curated=oc.curated,
+                   extended=oc.extended_rules, max_steps=oc.max_steps,
+                   seed=oc.seed, validate=oc.validate, workers=workers,
+                   seed_stride=seed_stride, target=tgt, strategy=strat,
+                   rerank_top_k=oc.rerank_top_k)
+
+    def to_optimize(self, *, measurer=None,
+                    cost_model=None) -> OptimizeConfig:
+        return OptimizeConfig(
+            mode=self.mode, curated=self.curated,
+            extended_rules=self.extended, max_steps=self.max_steps,
+            seed=self.seed, validate=self.validate, target=self.target,
+            strategy=self.strategy, cost_model=cost_model,
+            measurer=measurer, rerank_top_k=self.rerank_top_k)
+
 
 class EvalEngine:
     """Batched, cached replacement for the serial ``evaluate_suite``.
@@ -395,32 +423,70 @@ class EvalEngine:
     One store is shared by every pipeline the engine builds, across
     tasks, suites and repeat runs — a second run of the same suite
     performs zero fresh micro-coder rewrites and zero oracle runs.
+
+    Configure with ``config=OptimizeConfig(...)`` plus the engine-only
+    ``workers``/``seed_stride`` knobs.  ``cfg=EngineConfig(...)`` and
+    the flat optimizer kwargs remain as compatibility shims (the latter
+    warn ``DeprecationWarning`` once per process).
     """
 
     def __init__(self, policy=None, *,
                  store: TranspositionStore | None = None,
-                 cfg: EngineConfig | None = None, measurer=None, **kw):
+                 cfg: EngineConfig | None = None,
+                 config: OptimizeConfig | None = None,
+                 workers=UNSET, seed_stride=UNSET,
+                 mode=UNSET, curated=UNSET, extended=UNSET,
+                 max_steps=UNSET, seed=UNSET, validate=UNSET,
+                 target=UNSET, strategy=UNSET, rerank_top_k=UNSET,
+                 measurer=UNSET, cost_model=UNSET):
         self.policy = policy
-        if cfg is not None and kw:
-            raise TypeError("pass either cfg or keyword options, not both")
-        self.cfg = cfg or EngineConfig(**kw)
-        self.store = store if store is not None else TranspositionStore()
+        legacy = {"mode": mode, "curated": curated,
+                  "extended_rules": extended, "max_steps": max_steps,
+                  "seed": seed, "validate": validate, "target": target,
+                  "strategy": strategy, "rerank_top_k": rerank_top_k,
+                  "cost_model": cost_model}
+        if cfg is not None:
+            if config is not None:
+                raise TypeError("pass either cfg or config, not both")
+            if (any(v is not UNSET for v in legacy.values())
+                    or workers is not UNSET or seed_stride is not UNSET):
+                raise TypeError(
+                    "pass either cfg or keyword options, not both")
+            # measurer was historically allowed alongside cfg (it never
+            # lived in EngineConfig) — keep that pairing working
+            oc = cfg.to_optimize(
+                measurer=None if measurer is UNSET else measurer)
+            self.cfg = cfg
+        else:
+            if measurer is not UNSET:
+                legacy["measurer"] = measurer
+            oc = resolve_config("EvalEngine", config, legacy)
+            self.cfg = EngineConfig.from_optimize(
+                oc, workers=0 if workers is UNSET else int(workers),
+                seed_stride=(0 if seed_stride is UNSET
+                             else int(seed_stride)))
+        # the resolved optimizer config every pipeline is built from
+        self.config = oc
+        if store is None:
+            store = (TranspositionStore(cost_model=oc.cost_model)
+                     if oc.cost_model is not None
+                     else TranspositionStore())
+        self.store = store
         # optional measure.ExecutionHarness: pipelines rerank their
-        # top-K survivors by measured time (cfg.rerank_top_k)
-        self.measurer = measurer
+        # top-K survivors by measured time (config.rerank_top_k)
+        self.measurer = oc.measurer
 
     def pipeline(self, seed: int | None = None,
                  target=None) -> MTMCPipeline:
-        c = self.cfg
-        return MTMCPipeline(self.policy, mode=c.mode, curated=c.curated,
-                            extended_rules=c.extended,
-                            max_steps=c.max_steps,
-                            seed=c.seed if seed is None else seed,
-                            validate=c.validate, store=self.store,
-                            target=c.target if target is None else target,
-                            strategy=c.strategy,
-                            measurer=self.measurer,
-                            rerank_top_k=c.rerank_top_k)
+        oc = self.config
+        over = {}
+        if seed is not None:
+            over["seed"] = seed
+        if target is not None:
+            over["target"] = target
+        if over:
+            oc = oc.replace(**over)
+        return MTMCPipeline(self.policy, config=oc, store=self.store)
 
     def optimize(self, task: KernelProgram, seed: int | None = None,
                  target=None):

@@ -14,6 +14,20 @@ re-applying no-op optimizations late in an episode earns ~nothing.
 training replays materialized transitions only (the paper's offline tree
 built from pre-collected trajectories — no live Micro Coding latency in
 the PPO loop).
+
+**Reward sources.**  The paper's reward is *measured* performance; the
+seed trained on the analytic roofline only.  ``RewardSource`` is the
+pricing seam the environments (and ``OfflineTree`` node costs) draw
+their speedup rewards from:
+
+  analytic    — the roofline cost model (the seed's behavior);
+  calibrated  — roofline scaled by per-(target, bottleneck) factors fit
+                from a measurement DB (``measure/calibrate.py``);
+  measured    — wall-clock times REPLAYED from a persistent ``MeasureDB``
+                (``measure/db.py``), falling back to the calibrated/
+                analytic model for programs the DB never timed.  Replay
+                only: training stays hermetic — no kernel is ever
+                executed inside the PPO loop.
 """
 from __future__ import annotations
 
@@ -23,6 +37,123 @@ from repro.core import actions as A
 from repro.core import cost_model, hardware, rules
 from repro.core.kernel_ir import KernelProgram
 from repro.core.micro_coding import MicroCoder, StructuredMicroCoder
+
+
+# ---------------------------------------------------------------------------
+# reward sources
+# ---------------------------------------------------------------------------
+
+class RewardSource:
+    """Prices programs for reward shaping: ``cost(task, prog, target)``
+    -> seconds.  Environments compute speedup deltas from these costs;
+    swapping the source changes WHAT the policy is rewarded for
+    (analytic model vs measured reality) without touching the shaping.
+    """
+
+    name = "base"
+
+    def cost(self, task: KernelProgram, prog: KernelProgram,
+             target=None) -> float:
+        raise NotImplementedError
+
+
+class AnalyticRewardSource(RewardSource):
+    """The roofline cost model (optionally a pluggable drop-in)."""
+
+    name = "analytic"
+
+    def __init__(self, model=None):
+        # duck-typed ``program_cost(prog, target)``; None = the
+        # analytic module itself
+        self.model = model if model is not None else cost_model
+
+    def cost(self, task, prog, target=None) -> float:
+        return self.model.program_cost(
+            prog, hardware.resolve(target)).total_s
+
+
+class CalibratedRewardSource(RewardSource):
+    """Roofline scaled by measured per-(target, bottleneck) factors."""
+
+    name = "calibrated"
+
+    def __init__(self, calibration):
+        from repro.measure.calibrate import CalibratedCostModel
+        self.model = CalibratedCostModel(calibration)
+
+    def cost(self, task, prog, target=None) -> float:
+        return self.model.total_s(prog, hardware.resolve(target))
+
+
+class MeasuredRewardSource(RewardSource):
+    """Wall-clock rewards replayed from a persistent ``MeasureDB``.
+
+    The DB's samples are indexed once by ``(task_fp, prog_fp, target)``;
+    ``cost`` answers from that index and falls back to ``fallback``
+    (default: analytic) for never-measured programs.  Strictly replay —
+    this source never lowers or times anything, so PPO training over it
+    is hermetic and deterministic given the DB contents.  Samples
+    spanning more than one environment fingerprint are refused unless
+    one is selected (``env_fp=``): wall times from incomparable
+    environments must not compete inside one reward stream (same rule
+    as ``measure.fit_calibration``).
+    """
+
+    name = "measured"
+
+    def __init__(self, db, *, fallback: RewardSource | None = None,
+                 env_fp: str | None = None):
+        self.fallback = fallback if fallback is not None \
+            else AnalyticRewardSource()
+        self.index: dict[tuple[str, str, str], float] = {}
+        envs: set[str] = set()
+        for s in db.iter_samples(env_fp=env_fp):
+            envs.add(s.env_fp)
+            if len(envs) > 1:
+                raise ValueError(
+                    f"measurement DB spans {len(envs)} environment "
+                    f"fingerprints ({sorted(envs)}); pass env_fp= to "
+                    f"select one (MeasuredRewardSource(db, env_fp=...))")
+            self.index[(s.task_fp, s.prog_fp, s.target)] = s.time_s
+        self.hits = 0
+        self.misses = 0
+
+    def cost(self, task, prog, target=None) -> float:
+        key = (task.fingerprint(), prog.fingerprint(),
+               hardware.resolve(target).name)
+        t = self.index.get(key)
+        if t is not None:
+            self.hits += 1
+            return t
+        self.misses += 1
+        return self.fallback.cost(task, prog, target)
+
+
+def get_reward_source(spec, *, db=None,
+                      env_fp: str | None = None) -> RewardSource:
+    """Name/instance -> ``RewardSource``.
+
+    ``"analytic"`` | ``None`` -> the roofline; ``"calibrated"`` -> fit
+    from ``db``'s samples; ``"measured"`` -> DB replay with a
+    calibrated fallback (both require ``db``).  Instances pass through.
+    """
+    if spec is None or spec == "analytic":
+        return AnalyticRewardSource()
+    if isinstance(spec, RewardSource):
+        return spec
+    if spec in ("calibrated", "measured"):
+        if db is None:
+            raise ValueError(f"reward source {spec!r} needs a "
+                             f"MeasureDB (db=...)")
+        from repro.measure.calibrate import fit_calibration
+        cal = fit_calibration(db.iter_samples(env_fp=env_fp))
+        calibrated = CalibratedRewardSource(cal)
+        if spec == "calibrated":
+            return calibrated
+        return MeasuredRewardSource(db, fallback=calibrated,
+                                    env_fp=env_fp)
+    raise ValueError(f"unknown reward source {spec!r}; expected "
+                     f"analytic|calibrated|measured or a RewardSource")
 
 
 @dataclasses.dataclass
@@ -56,7 +187,8 @@ class KernelEnv:
     """
 
     def __init__(self, task: KernelProgram, coder: MicroCoder | None = None,
-                 cfg: EnvConfig | None = None, store=None, target=None):
+                 cfg: EnvConfig | None = None, store=None, target=None,
+                 reward_source: RewardSource | None = None):
         self.task = task
         self.coder = coder or StructuredMicroCoder()
         # None -> fresh config: a dataclass-instance default would be
@@ -66,9 +198,15 @@ class KernelEnv:
         # the chip rewards are priced against (None = registry default);
         # rewrite legality stays target-independent (DESIGN.md §9)
         self.target = hardware.resolve(target)
+        # pricing seam for rewards: when set it OVERRIDES the store's
+        # analytic memo (the store still memoizes rewrites/oracle runs
+        # — only what the reward is worth changes)
+        self.reward_source = reward_source
         self.baseline_s = self._cost(task)
 
     def _cost(self, prog: KernelProgram) -> float:
+        if self.reward_source is not None:
+            return self.reward_source.cost(self.task, prog, self.target)
         if self.store is not None:
             return self.store.cost(prog, self.target)
         return cost_model.program_cost(prog, self.target).total_s
@@ -148,25 +286,34 @@ class OfflineTree:
     pipelines and other trees reuse its transitions (and vice versa).
     """
 
-    def __init__(self, task: KernelProgram, store=None, target=None):
+    def __init__(self, task: KernelProgram, store=None, target=None,
+                 reward_source: RewardSource | None = None):
         self.task = task
         self.store = store
         self.target = hardware.resolve(target)
+        # node costs — what OfflineEnv rewards replay — come from the
+        # reward source when one is given; the store keeps memoizing
+        # the transitions either way
+        self.reward_source = reward_source
         self.nodes: dict[str, TreeNode] = {}
         self.root = self._intern(task)
+
+    def _node_cost(self, prog: KernelProgram) -> float:
+        if self.reward_source is not None:
+            return self.reward_source.cost(self.task, prog, self.target)
+        if self.store is not None:
+            return self.store.cost(prog, self.target)
+        return cost_model.program_cost(prog, self.target).total_s
 
     def _intern(self, prog: KernelProgram) -> str:
         if self.store is not None:
             fp = self.store.intern(prog, self.target)
             if fp not in self.nodes:
-                self.nodes[fp] = TreeNode(prog,
-                                          self.store.cost(prog,
-                                                          self.target))
+                self.nodes[fp] = TreeNode(prog, self._node_cost(prog))
             return fp
         fp = prog.fingerprint()
         if fp not in self.nodes:
-            self.nodes[fp] = TreeNode(
-                prog, cost_model.program_cost(prog, self.target).total_s)
+            self.nodes[fp] = TreeNode(prog, self._node_cost(prog))
         return fp
 
     def expand(self, fp: str, action: A.Action,

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import actions as A
 from repro.core import cost_model, hardware, rules, search as S
+from repro.core.config import UNSET, OptimizeConfig, resolve_config
 from repro.core.env import EnvConfig, KernelEnv
 from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
 from repro.core.micro_coding import StructuredMicroCoder
@@ -62,51 +63,59 @@ class OptimizationResult:
 
 class MTMCPipeline:
     def __init__(self, policy: MacroPolicy | None = None, *,
-                 mode: str = "policy", curated: bool = True,
-                 extended_rules: bool = False,
-                 max_steps: int = 8, seed: int = 0,
-                 validate: bool = True, store=None, target=None,
-                 strategy: "S.SearchStrategy | str | None" = None,
-                 cost_model_override=None, measurer=None,
-                 rerank_top_k: int = 0):
+                 config: OptimizeConfig | None = None, store=None,
+                 mode=UNSET, curated=UNSET, extended_rules=UNSET,
+                 max_steps=UNSET, seed=UNSET, validate=UNSET,
+                 target=UNSET, strategy=UNSET,
+                 cost_model_override=UNSET, measurer=UNSET,
+                 rerank_top_k=UNSET):
+        cfg = resolve_config("MTMCPipeline", config, {
+            "mode": mode, "curated": curated,
+            "extended_rules": extended_rules, "max_steps": max_steps,
+            "seed": seed, "validate": validate, "target": target,
+            "strategy": strategy, "cost_model": cost_model_override,
+            "measurer": measurer, "rerank_top_k": rerank_top_k})
+        self.config = cfg
         self.policy = policy
-        self.mode = mode
-        self.curated = curated
+        self.mode = cfg.mode
+        self.curated = cfg.curated
         # True adds the non-default registry rules (dtype, split_k) to
         # the proposal space; False keeps the classic four
-        self.extended_rules = extended_rules
-        self.max_steps = max_steps
-        self.seed = seed
-        self.validate = validate
+        self.extended_rules = cfg.extended_rules
+        self.max_steps = cfg.max_steps
+        self.seed = cfg.seed
+        self.validate = cfg.validate
         # optional TranspositionStore (core.engine): memoizes rewrites,
-        # costs and oracle checks; None keeps the uncached serial path
+        # costs and oracle checks; None keeps the uncached serial path.
+        # The store is an object-sharing seam, not optimizer config, so
+        # it stays a first-class argument
         self.store = store
         # the hardware target every cost/reward is priced against
         # (None = registry default, tpu_v5e)
-        self.target = hardware.resolve(target)
+        self.target = hardware.resolve(cfg.target)
         # optional SearchStrategy (core.search) — when set, optimize()
         # explores the macro action space with it instead of running a
         # single mode-driven rollout
-        self.strategy = (None if strategy is None
-                         else S.get_strategy(strategy))
-        # optional pluggable pricing (e.g. measure.CalibratedCostModel,
+        self.strategy = (None if cfg.strategy is None
+                         else S.get_strategy(cfg.strategy))
+        # pluggable pricing (e.g. measure.CalibratedCostModel,
         # duck-typed: program_cost/total_s).  A store is bound to ONE
         # cost model — its (fp, target) memo does not encode the model
         # — so a mismatched pair would silently mix price systems
-        self.cost_model = cost_model_override
-        if (store is not None and cost_model_override is not None
+        self.cost_model = cfg.cost_model
+        if (store is not None and cfg.cost_model is not None
                 and getattr(store, "cost_model", None)
-                is not cost_model_override):
+                is not cfg.cost_model):
             raise ValueError(
-                "store and cost_model_override disagree: build the "
-                "TranspositionStore with cost_model=<the same object> "
-                "(DESIGN.md §11)")
+                "store and OptimizeConfig.cost_model disagree: build "
+                "the TranspositionStore with cost_model=<the same "
+                "object> (DESIGN.md §11)")
         # optional measured-execution reranking (measure/harness.py):
         # after the search, the top ``rerank_top_k`` candidate programs
         # are actually executed and timed, and the measured winner is
         # returned instead of the analytic one
-        self.measurer = measurer
-        self.rerank_top_k = int(rerank_top_k)
+        self.measurer = cfg.measurer
+        self.rerank_top_k = int(cfg.rerank_top_k)
         self._coder = StructuredMicroCoder()
 
     # -- cached primitives ---------------------------------------------------
@@ -207,7 +216,8 @@ class MTMCPipeline:
         out = self.strategy.search(
             task, coder=self._coder, store=store, target=self.target,
             max_steps=self.max_steps, seed=self.seed,
-            curated=self.curated, extended=self.extended_rules)
+            curated=self.curated, extended=self.extended_rules,
+            policy=self.policy)
         best, best_s, meas, meas_base, reranked = self._maybe_rerank(
             task, out.candidates, out.program, out.cost_s)
         steps = out.steps if not reranked else \

@@ -217,9 +217,10 @@ def make_scorer(cfg: PolicyConfig):
 class MacroPolicy:
     """Bundles params + scoring; used by PPO and the inference pipeline."""
 
-    def __init__(self, cfg: PolicyConfig = PolicyConfig(), key=None,
+    def __init__(self, cfg: PolicyConfig | None = None, key=None,
                  params: dict | None = None):
-        self.cfg = cfg
+        # None -> fresh config (no config construction at import time)
+        self.cfg = cfg = cfg if cfg is not None else PolicyConfig()
         self.params = params if params is not None else init_policy(
             cfg, key if key is not None else jax.random.PRNGKey(0))
         self._scorer = make_scorer(cfg)

@@ -95,14 +95,16 @@ def make_loss_fn(pcfg: PolicyConfig, cfg: PPOConfig):
 
 class PPOTrainer:
     def __init__(self, trees: dict[str, OfflineTree],
-                 pcfg: PolicyConfig = PolicyConfig(),
+                 pcfg: PolicyConfig | None = None,
                  cfg: PPOConfig | None = None,
                  env_cfg: EnvConfig | None = None):
-        # PolicyConfig is frozen (a shared default is harmless);
-        # PPOConfig/EnvConfig are mutable — a dataclass-instance
-        # default would be one object shared by every trainer
+        # all config defaults are None -> fresh per call: a dataclass-
+        # instance default is constructed once at import time and (for
+        # the mutable PPOConfig/EnvConfig) SHARED by every trainer;
+        # PolicyConfig is frozen but gets the same hygiene so no config
+        # object is ever built at import time (DESIGN.md §14)
         self.trees = trees
-        self.pcfg = pcfg
+        self.pcfg = pcfg = pcfg if pcfg is not None else PolicyConfig()
         self.cfg = cfg = cfg if cfg is not None else PPOConfig()
         self.env_cfg = env_cfg if env_cfg is not None else EnvConfig()
         self.policy = MacroPolicy(pcfg, jax.random.PRNGKey(cfg.seed))

@@ -23,6 +23,17 @@ module makes the search pluggable:
             (same guarantee), later restarts follow the greedy child
             with probability 1-eps and a uniform valid child otherwise,
             with eps decaying per restart.
+  policy  — the trained Macro policy PRUNES the frontier expansion:
+            at each frontier node only the ``expand_k`` actions the LM
+            ranks highest are materialized through the store, instead
+            of beam's every-child sweep.  A greedy backbone keeps the
+            never-worse-than-greedy guarantee; the point is the budget
+            — the policy reaches beam-quality programs at a fraction
+            of the node expansions (Table 7's budget-matched grid).
+
+Strategies register themselves in a name -> factory registry
+(``register_strategy``); ``get_strategy("beam")`` et al. consult it, so
+out-of-tree strategies plug in without editing this module.
 
 All strategies share transition/cost/oracle memos through the store, so
 beam siblings and restarts never re-rewrite a visited (state, action)
@@ -97,8 +108,12 @@ class SearchStrategy:
 
     def search(self, task: KernelProgram, *, coder, store,
                target=None, max_steps: int = 8, seed: int = 0,
-               curated: bool = True,
-               extended: bool = False) -> SearchOutcome:
+               curated: bool = True, extended: bool = False,
+               policy=None) -> SearchOutcome:
+        """``policy`` (a ``MacroPolicy``) guides strategies that can use
+        one (``PolicySearch``); the undirected strategies ignore it, so
+        the pipeline can hand its policy to whatever strategy is
+        configured."""
         raise NotImplementedError
 
     def _children(self, store, coder, prog: KernelProgram,
@@ -127,7 +142,8 @@ class GreedySearch(SearchStrategy):
     name = "greedy"
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True, extended=False) -> SearchOutcome:
+               seed=0, curated=True, extended=False,
+               policy=None) -> SearchOutcome:
         tgt = hardware.resolve(target)
         cur, cur_c = task, store.cost(task, tgt)
         base = cur_c
@@ -184,7 +200,8 @@ class BeamSearch(SearchStrategy):
         self.per_parent = per_parent
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True, extended=False) -> SearchOutcome:
+               seed=0, curated=True, extended=False,
+               policy=None) -> SearchOutcome:
         tgt = hardware.resolve(target)
         backbone = GreedySearch().search(
             task, coder=coder, store=store, target=tgt,
@@ -251,7 +268,8 @@ class AnnealedSearch(SearchStrategy):
         self.decay = decay
 
     def search(self, task, *, coder, store, target=None, max_steps=8,
-               seed=0, curated=True, extended=False) -> SearchOutcome:
+               seed=0, curated=True, extended=False,
+               policy=None) -> SearchOutcome:
         tgt = hardware.resolve(target)
         rng = np.random.default_rng(seed)
         base = store.cost(task, tgt)
@@ -287,11 +305,138 @@ class AnnealedSearch(SearchStrategy):
                              n_fail, top_candidates(visited))
 
 
-STRATEGIES: dict[str, type[SearchStrategy]] = {
-    GreedySearch.name: GreedySearch,
-    BeamSearch.name: BeamSearch,
-    AnnealedSearch.name: AnnealedSearch,
-}
+# the default policy used when PolicySearch runs unbound (no trained
+# policy handed in): an untrained MacroPolicy — deterministic (PRNGKey
+# 0) and shared so its jitted scorer compiles once per process
+_DEFAULT_POLICY = None
+
+
+def _default_policy():
+    global _DEFAULT_POLICY
+    if _DEFAULT_POLICY is None:
+        from repro.core.policy import MacroPolicy
+        _DEFAULT_POLICY = MacroPolicy()
+    return _DEFAULT_POLICY
+
+
+class PolicySearch(SearchStrategy):
+    """Policy-pruned beam: the Macro LM decides WHAT to expand.
+
+    Beam's cost is its exhaustive frontier sweep — every candidate
+    action of every frontier program is materialized through the store
+    just to be priced.  Here the trained policy ranks each frontier
+    node's candidate actions first (one batched LM forward, no rewrites)
+    and only the top ``expand_k`` are materialized; admitted children
+    then compete by modeled cost exactly like beam's (width cap,
+    ``per_parent`` diversity cap, fingerprint dedup, dropped children
+    stay rediscoverable).  A greedy backbone is folded in, so
+    ``cost(policy) <= cost(greedy)`` is an invariant even under an
+    UNTRAINED policy (property-tested), and only ``status == "ok"``
+    edges are ever walked, so the returned program always passes the
+    oracle.  The budget win is the point: Table 7's budget-matched grid
+    gates that the trained policy reaches beam's solution quality at a
+    fraction of beam's node expansions.
+    """
+
+    name = "policy"
+
+    def __init__(self, policy=None, width: int = 3, expand_k: int = 6,
+                 per_parent: int = 2):
+        self.policy = policy
+        self.width = width
+        self.expand_k = expand_k
+        self.per_parent = per_parent
+
+    def _ranked_actions(self, pol, prog, target, curated, extended):
+        """Candidate actions, LM-ranked best-first, terminals dropped."""
+        enum = (A.candidate_actions if curated
+                else A.unrestricted_actions)
+        acts = [a for a in enum(prog, target=target, extended=extended)
+                if not rules.is_terminal(a)]
+        if len(acts) <= self.expand_k:
+            return acts
+        logp, _ = pol.action_dist(prog, acts)
+        order = np.argsort(-np.asarray(logp), kind="stable")
+        return [acts[i] for i in order[: self.expand_k]]
+
+    def search(self, task, *, coder, store, target=None, max_steps=8,
+               seed=0, curated=True, extended=False,
+               policy=None) -> SearchOutcome:
+        pol = policy if policy is not None else self.policy
+        if pol is None:
+            pol = _default_policy()
+        tgt = hardware.resolve(target)
+        backbone = GreedySearch().search(
+            task, coder=coder, store=store, target=tgt,
+            max_steps=max_steps, seed=seed, curated=curated,
+            extended=extended)
+        base = backbone.baseline_s
+        best, best_c = backbone.program, backbone.cost_s
+        best_depth = backbone.steps
+        n_exp, n_fail = backbone.n_expanded, backbone.n_failures
+        frontier = [(base, task)]
+        expanded = {task.fingerprint()}
+        visited = list(backbone.candidates) or [(base, task)]
+        for depth in range(max_steps):
+            pool, depth_fps = [], set()
+            for pi, (_, prog) in enumerate(frontier):
+                for a in self._ranked_actions(pol, prog, tgt, curated,
+                                              extended):
+                    r = store.apply(coder, prog, a)
+                    if r.status != "ok":
+                        n_fail += 1
+                        continue
+                    fp = r.program.fingerprint()
+                    if fp in expanded or fp in depth_fps:
+                        continue
+                    depth_fps.add(fp)
+                    n_exp += 1
+                    pool.append((store.cost(r.program, tgt), fp, pi,
+                                 r.program))
+            if not pool:
+                break
+            pool.sort(key=lambda e: (e[0], e[1]))
+            frontier, taken = [], {}
+            for c, fp, pi, ch in pool:
+                if taken.get(pi, 0) >= self.per_parent:
+                    continue
+                taken[pi] = taken.get(pi, 0) + 1
+                frontier.append((c, ch))
+                visited.append((c, ch))
+                expanded.add(fp)
+                if len(frontier) >= self.width:
+                    break
+            if frontier[0][0] < best_c:
+                best_c, best = frontier[0]
+                best_depth = depth + 1
+        return SearchOutcome(best, best_c, base, best_depth, n_exp,
+                             n_fail, top_candidates(visited))
+
+
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+# name -> zero-arg factory (usually the class itself); strategies
+# register themselves below and out-of-tree ones via register_strategy
+STRATEGIES: dict[str, "type[SearchStrategy]"] = {}
+
+
+def register_strategy(name: str, factory, *, replace: bool = False):
+    """Register ``factory`` (class or zero-arg callable returning a
+    ``SearchStrategy``) under ``name`` for ``get_strategy`` and every
+    config surface that takes a strategy name (``OptimizeConfig``,
+    serve/fleet).  Re-registering an existing name requires
+    ``replace=True`` — a silent overwrite would re-route every config
+    mentioning the name."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"strategy name must be a non-empty str, "
+                         f"got {name!r}")
+    if name in STRATEGIES and not replace:
+        raise ValueError(f"strategy {name!r} already registered; pass "
+                         f"replace=True to override")
+    STRATEGIES[name] = factory
+    return factory
 
 
 def get_strategy(strategy: "SearchStrategy | str") -> SearchStrategy:
@@ -299,7 +444,14 @@ def get_strategy(strategy: "SearchStrategy | str") -> SearchStrategy:
     if isinstance(strategy, SearchStrategy):
         return strategy
     try:
-        return STRATEGIES[strategy]()
+        factory = STRATEGIES[strategy]
     except KeyError:
         raise KeyError(f"unknown search strategy {strategy!r}; "
                        f"registered: {sorted(STRATEGIES)}") from None
+    return factory()
+
+
+register_strategy(GreedySearch.name, GreedySearch)
+register_strategy(BeamSearch.name, BeamSearch)
+register_strategy(AnnealedSearch.name, AnnealedSearch)
+register_strategy(PolicySearch.name, PolicySearch)

@@ -48,17 +48,23 @@ def _greedy_action(tree: OfflineTree, fp: str, cands, coder, rng):
 
 
 def collect(task: KernelProgram, ccfg: CollectConfig | None = None,
-            env_cfg: EnvConfig | None = None, store=None) -> OfflineTree:
+            env_cfg: EnvConfig | None = None, store=None, target=None,
+            reward_source=None) -> OfflineTree:
     """``store`` (core.engine.TranspositionStore) lets collection reuse —
     and feed — the same transposition table the evaluation engine uses.
+    ``reward_source`` (core.env.RewardSource) prices the tree's node
+    costs — the costs PPO's offline replay rewards against — e.g. a
+    ``MeasuredRewardSource`` replaying a MeasureDB (DESIGN.md §14).
     Config defaults are None (fresh per call), never shared dataclass
     instances."""
     ccfg = ccfg if ccfg is not None else CollectConfig()
     env_cfg = env_cfg if env_cfg is not None else EnvConfig()
     rng = np.random.default_rng(ccfg.seed)
     coder = StructuredMicroCoder()
-    tree = OfflineTree(task, store=store)
-    env = KernelEnv(task, coder, env_cfg, store=store)
+    tree = OfflineTree(task, store=store, target=target,
+                       reward_source=reward_source)
+    env = KernelEnv(task, coder, env_cfg, store=store, target=target,
+                    reward_source=reward_source)
 
     def rollout(pick):
         fp = tree.root
@@ -92,13 +98,15 @@ def collect(task: KernelProgram, ccfg: CollectConfig | None = None,
 
 def collect_suite(tasks: list[KernelProgram],
                   ccfg: CollectConfig | None = None,
-                  env_cfg: EnvConfig | None = None, store=None
+                  env_cfg: EnvConfig | None = None, store=None,
+                  target=None, reward_source=None
                   ) -> dict[str, OfflineTree]:
     ccfg = ccfg if ccfg is not None else CollectConfig()
     out = {}
     for i, t in enumerate(tasks):
         c = dataclasses.replace(ccfg, seed=ccfg.seed + i)
-        out[t.name] = collect(t, c, env_cfg, store=store)
+        out[t.name] = collect(t, c, env_cfg, store=store, target=target,
+                              reward_source=reward_source)
     return out
 
 

@@ -40,10 +40,11 @@ def _tokens_for(cfg: ModelConfig, shape, rows: np.ndarray, seed: int,
 
 
 def host_batch(cfg: ModelConfig, shape: ShapeConfig, step: int, *,
-               dcfg: DataConfig = DataConfig(),
+               dcfg: DataConfig | None = None,
                process_index: int | None = None,
                process_count: int | None = None) -> dict:
     """The host-local shard of the global batch at ``step``."""
+    dcfg = dcfg if dcfg is not None else DataConfig()
     pi = jax.process_index() if process_index is None else process_index
     pc = jax.process_count() if process_count is None else process_count
     B = shape.global_batch
@@ -75,7 +76,8 @@ class Prefetcher:
     """Background-thread prefetch of host batches."""
 
     def __init__(self, cfg, shape, start_step: int = 0,
-                 dcfg: DataConfig = DataConfig()):
+                 dcfg: DataConfig | None = None):
+        dcfg = dcfg if dcfg is not None else DataConfig()
         self.cfg, self.shape, self.dcfg = cfg, shape, dcfg
         self._q: queue.Queue = queue.Queue(maxsize=dcfg.prefetch)
         self._step = start_step

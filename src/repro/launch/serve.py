@@ -57,6 +57,7 @@ def run_fleet_demo(args) -> None:
 
     import numpy as np
 
+    from repro.core import OptimizeConfig
     from repro.core import tasks as T
     from repro.measure.harness import MeasureConfig
     from repro.serve.fleet import Fleet, FleetConfig
@@ -73,7 +74,8 @@ def run_fleet_demo(args) -> None:
                FleetConfig(replicas=args.fleet,
                            max_pending=args.max_pending),
                measure_cfg=MeasureConfig(repeats=1, warmup=0),
-               max_steps=args.max_steps)
+               config=OptimizeConfig(mode="greedy_cost",
+                                     max_steps=args.max_steps))
     t0 = time.perf_counter()
     futs = [fl.submit(suite[p], tenant=t)
             for p, t in zip(picks, tens)]

@@ -21,7 +21,8 @@ one (property-tested in ``tests/test_measure.py``).
 
 ``CalibratedCostModel`` is a drop-in for the analytic pricing used by
 ``core/search.py``: hand it to ``TranspositionStore(cost_model=...)``
-(or ``MTMCPipeline(cost_model_override=...)`` for the uncached path)
+(or ``MTMCPipeline(config=OptimizeConfig(cost_model=...))`` for the
+uncached path)
 and every strategy searches under calibrated costs.  A store is bound to ONE cost
 model for its lifetime — the cost memo keys ``(fp, target)`` do not
 encode the model, so swapping models means a fresh store, exactly like
@@ -135,7 +136,7 @@ class CalibratedCostModel:
 
     Drop-in for ``cost_model.program_cost`` wherever pricing is
     pluggable (``TranspositionStore(cost_model=...)``,
-    ``MTMCPipeline(cost_model_override=...)``): each group's time is
+    ``OptimizeConfig(cost_model=...)``): each group's time is
     scaled by the calibration factor of its (target, bottleneck) bucket
     and the program total re-summed.  Identity calibration reproduces
     the analytic model exactly.

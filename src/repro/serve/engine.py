@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.config import UNSET, OptimizeConfig
 from repro.models import api
 
 
@@ -263,21 +264,31 @@ class KernelService:
       ``warm_starts``.
     """
 
-    def __init__(self, policy=None, *, mode: str = "greedy_cost",
-                 max_steps: int = 8, workers: int = 0, store=None,
-                 max_programs: int = 200_000, target=None,
-                 strategy: str | None = None, serve_workers: int = 4,
-                 evict_slab: int | None = None, measure: bool = False,
-                 measure_db: str | None = None, rerank_top_k: int = 4,
-                 measure_cfg=None):
+    #: historical service defaults: cheap greedy descent, measured
+    #: reranking depth 4 (only active once a harness is attached)
+    DEFAULTS = None  # filled below the class (needs OptimizeConfig)
+
+    def __init__(self, policy=None, *, config=None, workers: int = 0,
+                 store=None, max_programs: int = 200_000,
+                 serve_workers: int = 4, evict_slab: int | None = None,
+                 measure: bool = False, measure_db: str | None = None,
+                 measure_cfg=None, mode=UNSET, max_steps=UNSET,
+                 target=UNSET, strategy=UNSET, rerank_top_k=UNSET):
         from repro.core import hardware
+        from repro.core.config import resolve_config
         from repro.core.engine import EvalEngine, TranspositionStore
+        cfg = resolve_config(
+            "KernelService", config,
+            {"mode": mode, "max_steps": max_steps, "target": target,
+             "strategy": strategy, "rerank_top_k": rerank_top_k},
+            defaults=KernelService.DEFAULTS)
+        self.config = cfg
         self.store = store if store is not None else TranspositionStore()
         # default hardware target requests are priced against; a single
         # service instance serves mixed-target traffic (per-request
         # override) because the store keys costs by (program, target)
         # and shares rewrites/oracle checks across targets
-        self.target = hardware.resolve(target)
+        self.target = hardware.resolve(cfg.target)
         self.harness = None
         if measure or measure_db is not None:
             from repro.measure.db import MeasureDB
@@ -286,13 +297,11 @@ class KernelService:
             db = MeasureDB(measure_db) if measure_db else None
             self.harness = ExecutionHarness(
                 db=db, cfg=measure_cfg or MeasureConfig())
-        self._engine = EvalEngine(policy, store=self.store, mode=mode,
-                                  max_steps=max_steps, workers=workers,
-                                  target=self.target.name,
-                                  strategy=strategy,
-                                  measurer=self.harness,
-                                  rerank_top_k=(rerank_top_k
-                                                if self.harness else 0))
+        self._engine = EvalEngine(
+            policy, store=self.store, workers=workers,
+            config=cfg.replace(
+                target=self.target.name, measurer=self.harness,
+                rerank_top_k=(cfg.rerank_top_k if self.harness else 0)))
         # capacity bound: the store never invalidates for correctness
         # (all entries are pure functions of their keys) but a server
         # fed a stream of DISTINCT kernels grows without bound — evict
@@ -543,3 +552,7 @@ class KernelService:
                     db_tmp_reaped=m.get("db_tmp_reaped", 0),
                     db_lock_timeouts=m.get("db_lock_timeouts", 0),
                     db_winner_refreshes=m.get("db_winner_refreshes", 0))
+
+
+KernelService.DEFAULTS = OptimizeConfig(mode="greedy_cost",
+                                        rerank_top_k=4)

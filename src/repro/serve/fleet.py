@@ -49,6 +49,7 @@ import concurrent.futures as cf
 import dataclasses
 import threading
 
+from repro.core.config import UNSET, resolve_config
 from repro.serve.engine import KernelService
 
 
@@ -74,9 +75,10 @@ class Fleet:
 
     ``submit(task, tenant=...)`` returns a Future exactly like
     ``KernelService.submit``; ``close()`` drains queued work, resolves
-    every handed-out future, and shuts the replicas down.  Extra
-    keyword arguments (``mode``, ``strategy``, ``max_steps``,
-    ``target``, ...) configure every replica identically — replicas
+    every handed-out future, and shuts the replicas down.
+    ``config=OptimizeConfig(...)`` (or the deprecated flat ``mode`` /
+    ``strategy`` / ``max_steps`` / ``target`` kwargs) plus any extra
+    service kwargs configure every replica identically — replicas
     answering the same question MUST share a search signature, or their
     winner records would answer nobody (see
     ``KernelService._winner_db_key``).
@@ -93,16 +95,31 @@ class Fleet:
         self.db_dir = str(db_dir)
         kw = dict(service_kwargs)
         kw.setdefault("serve_workers", 2)
+        if "rerank_top_k" in kw:
+            raise TypeError(
+                "Fleet fixes rerank_top_k per role (replicas 0, the "
+                "refiner FleetConfig.rerank_top_k) — set "
+                "FleetConfig.rerank_top_k instead")
+        # fold the optimizer surface — config=OptimizeConfig(...) or the
+        # flat legacy kwargs — into ONE shared config: replicas and the
+        # refiner must agree on the search signature (docstring above),
+        # differing only in the reranking depth of their role
+        opt = resolve_config(
+            "Fleet", kw.pop("config", None),
+            {k: kw.pop(k, UNSET)
+             for k in ("mode", "max_steps", "target", "strategy")},
+            defaults=KernelService.DEFAULTS)
         self.replicas = [
             KernelService(measure=True, measure_db=self.db_dir,
-                          rerank_top_k=0, measure_cfg=measure_cfg, **kw)
+                          config=opt.replace(rerank_top_k=0),
+                          measure_cfg=measure_cfg, **kw)
             for _ in range(self.cfg.replicas)]
         self.refiner = None
         if self.cfg.refine:
             kw_r = dict(kw, serve_workers=1)
             self.refiner = KernelService(
                 measure=True, measure_db=self.db_dir,
-                rerank_top_k=self.cfg.rerank_top_k,
+                config=opt.replace(rerank_top_k=self.cfg.rerank_top_k),
                 measure_cfg=measure_cfg, **kw_r)
 
         self._lock = threading.Lock()

@@ -70,9 +70,10 @@ def make_prepare(cfg: ModelConfig, rules):
 
 
 def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
-                    run: RunConfig = RunConfig(), *, rules=None,
+                    run: RunConfig | None = None, *, rules=None,
                     opt_cfg: adamw.AdamWConfig | None = None,
                     donate: bool = True) -> Callable:
+    run = run if run is not None else RunConfig()
     opt_cfg = opt_cfg or adamw.AdamWConfig(
         lr=run.learning_rate, weight_decay=run.weight_decay,
         grad_clip=run.grad_clip, warmup_steps=run.warmup_steps)
@@ -153,10 +154,11 @@ class TrainerState:
 
 class Trainer:
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
-                 run: RunConfig = RunConfig(), *, rules=None,
+                 run: RunConfig | None = None, *, rules=None,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
                  straggler_monitor=None):
         from repro import ckpt as ckpt_mod
+        run = run if run is not None else RunConfig()
         self.cfg, self.shape, self.run, self.rules = cfg, shape, run, rules
         self.train_step = make_train_step(cfg, shape, run, rules=rules)
         self.jit_step = jax.jit(self.train_step, donate_argnums=(0, 1))

@@ -1,0 +1,270 @@
+"""The unified ``OptimizeConfig`` surface (core/config.py, DESIGN.md §14).
+
+Covers: every entry point accepting ``config=``, the deprecation shims
+(legacy kwargs -> identical outcomes + exactly one DeprecationWarning
+per entry point), the config-xor-legacy TypeError, the cost-model
+consistency check, strategy-registry semantics, and the repo-wide AST
+gate that no in-repo call site still uses the deprecated kwargs.
+"""
+import ast
+import os
+import warnings
+
+import pytest
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import (EvalEngine, MTMCPipeline, OptimizeConfig,
+                        TranspositionStore,
+                        reset_deprecation_warnings)
+from repro.core import tasks as T
+from repro.core.autotune import tune_model_kernels
+from repro.core.search import (PolicySearch, STRATEGIES, get_strategy,
+                               register_strategy)
+from repro.measure.calibrate import CalibratedCostModel, Calibration
+from repro.serve.engine import KernelService
+from repro.serve.fleet import Fleet, FleetConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TASK = T.kb_level1()[0]
+FAST = OptimizeConfig(mode="greedy_cost", max_steps=3, validate=False)
+
+
+def _outcome(res):
+    return (res.program.fingerprint(), res.speedup, tuple(res.trace),
+            res.correct)
+
+
+# ---------------------------------------------------------------------------
+# config= everywhere, shims produce identical outcomes
+# ---------------------------------------------------------------------------
+
+def test_pipeline_config_and_legacy_agree():
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = MTMCPipeline(mode="greedy_cost", max_steps=3,
+                              validate=False)
+        MTMCPipeline(mode="greedy_cost", max_steps=3, validate=False)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1, "legacy kwargs must warn exactly once"
+    assert "OptimizeConfig" in str(deps[0].message)
+    new = MTMCPipeline(config=FAST)
+    assert _outcome(legacy.optimize(TASK)) == _outcome(new.optimize(TASK))
+    assert new.config == FAST
+
+
+def test_pipeline_rejects_config_plus_legacy():
+    with pytest.raises(TypeError, match="not both"):
+        MTMCPipeline(config=FAST, max_steps=5)
+
+
+def test_engine_config_and_legacy_agree():
+    reset_deprecation_warnings()
+    store = TranspositionStore()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = EvalEngine(store=store, mode="greedy_cost",
+                            max_steps=3, validate=False, seed=1)
+    assert sum(issubclass(x.category, DeprecationWarning)
+               for x in w) == 1
+    new = EvalEngine(store=store, config=FAST.replace(seed=1))
+    assert legacy.cfg == new.cfg
+    m_legacy = legacy.evaluate_suite([TASK])
+    m_new = new.evaluate_suite([TASK])
+    assert m_legacy["mean_speedup"] == m_new["mean_speedup"]
+    assert m_legacy["accuracy"] == m_new["accuracy"]
+
+
+def test_engine_keeps_cfg_and_workers_first_class():
+    eng = EvalEngine(config=FAST, workers=3, seed_stride=2)
+    assert eng.cfg.workers == 3 and eng.cfg.seed_stride == 2
+    # the EngineConfig object path still works, without warnings
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng2 = EvalEngine(cfg=eng.cfg)
+    assert not [x for x in w
+                if issubclass(x.category, DeprecationWarning)]
+    assert eng2.cfg == eng.cfg
+    with pytest.raises(TypeError, match="not both"):
+        EvalEngine(cfg=eng.cfg, config=FAST)
+    with pytest.raises(TypeError, match="not both"):
+        EvalEngine(cfg=eng.cfg, mode="random")
+
+
+def test_service_config_and_legacy_agree():
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = KernelService(mode="greedy_cost", max_steps=3,
+                               serve_workers=1)
+    assert sum(issubclass(x.category, DeprecationWarning)
+               for x in w) == 1
+    new = KernelService(config=OptimizeConfig(mode="greedy_cost",
+                                              max_steps=3,
+                                              rerank_top_k=4),
+                        serve_workers=1)
+    try:
+        assert legacy._engine.cfg == new._engine.cfg
+        r1 = legacy.optimize(TASK)
+        r2 = new.optimize(TASK)
+        assert r1.program.fingerprint() == r2.program.fingerprint()
+    finally:
+        legacy.close()
+        new.close()
+
+
+def test_service_defaults_unchanged():
+    svc = KernelService(serve_workers=1)
+    try:
+        assert svc.config.mode == "greedy_cost"
+        assert svc.config.rerank_top_k == 4
+        # without a harness the engine's effective rerank depth is 0
+        assert svc._engine.cfg.rerank_top_k == 0
+    finally:
+        svc.close()
+
+
+def test_fleet_accepts_config_and_folds_legacy(tmp_path):
+    cfg = OptimizeConfig(mode="greedy_cost", max_steps=3)
+    fl = Fleet(str(tmp_path / "db1"), FleetConfig(replicas=1),
+               auto_start=False, config=cfg, serve_workers=1)
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        fl2 = Fleet(str(tmp_path / "db2"), FleetConfig(replicas=1),
+                    auto_start=False, max_steps=3, serve_workers=1)
+    try:
+        assert sum(issubclass(x.category, DeprecationWarning)
+                   for x in w) == 1
+        assert (fl.replicas[0]._engine.cfg
+                == fl2.replicas[0]._engine.cfg)
+        # per-role rerank depths: replicas 0, refiner FleetConfig's
+        assert fl.replicas[0].config.rerank_top_k == 0
+        assert fl.refiner.config.rerank_top_k == \
+            FleetConfig().rerank_top_k
+        with pytest.raises(TypeError, match="rerank_top_k"):
+            Fleet(str(tmp_path / "db3"), auto_start=False,
+                  rerank_top_k=2)
+    finally:
+        fl.close()
+        fl2.close()
+
+
+def test_tune_model_kernels_accepts_config():
+    mcfg = ModelConfig(name="cfgtest", family="dense", n_layers=1,
+                       d_model=128, n_heads=2, n_kv_heads=2, d_ff=256,
+                       vocab_size=256)
+    shape = ShapeConfig("tiny", 128, 1, "train")
+    report = tune_model_kernels(
+        mcfg, shape, config=OptimizeConfig(mode="greedy_cost",
+                                           validate=False, max_steps=2))
+    assert report and all("speedup" in v for v in report.values())
+    with pytest.raises(ValueError, match="not both"):
+        tune_model_kernels(mcfg, shape,
+                           pipeline=MTMCPipeline(config=FAST),
+                           config=FAST)
+
+
+# ---------------------------------------------------------------------------
+# cost-model duality collapsed into one field
+# ---------------------------------------------------------------------------
+
+def test_cost_model_field_consistency_check():
+    cal = CalibratedCostModel(Calibration(factors=(), n_samples=()))
+    store = TranspositionStore(cost_model=cal)
+    # matching pair: fine, and the pipeline prices through it
+    pipe = MTMCPipeline(config=FAST.replace(cost_model=cal),
+                        store=store)
+    assert pipe.cost_model is cal
+    # mismatched pair: refused (the store is bound to ONE model)
+    other = TranspositionStore()
+    with pytest.raises(ValueError, match="cost_model"):
+        MTMCPipeline(config=FAST.replace(cost_model=cal), store=other)
+    # legacy spelling routes through the same field and check
+    reset_deprecation_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(ValueError, match="cost_model"):
+            MTMCPipeline(cost_model_override=cal, store=other)
+
+
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+def test_strategy_registry_semantics():
+    assert set(STRATEGIES) >= {"greedy", "beam", "anneal", "policy"}
+    assert isinstance(get_strategy("policy"), PolicySearch)
+    inst = PolicySearch(width=2)
+    assert get_strategy(inst) is inst
+    with pytest.raises(KeyError, match="registered"):
+        get_strategy("mcts")
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy("policy", PolicySearch)
+    with pytest.raises(ValueError, match="non-empty"):
+        register_strategy("", PolicySearch)
+    # replace=True swaps the factory; restore the original after
+    class _Custom(PolicySearch):
+        pass
+    register_strategy("policy", _Custom, replace=True)
+    try:
+        assert isinstance(get_strategy("policy"), _Custom)
+    finally:
+        register_strategy("policy", PolicySearch, replace=True)
+
+
+# ---------------------------------------------------------------------------
+# repo-wide gate: no in-repo call site uses the deprecated kwargs
+# ---------------------------------------------------------------------------
+
+_DEPRECATED = {
+    "MTMCPipeline": {"mode", "curated", "extended_rules", "max_steps",
+                     "seed", "validate", "target", "strategy",
+                     "cost_model_override", "measurer", "rerank_top_k"},
+    "EvalEngine": {"mode", "curated", "extended", "max_steps", "seed",
+                   "validate", "target", "strategy", "rerank_top_k",
+                   "measurer", "cost_model"},
+    "KernelService": {"mode", "max_steps", "target", "strategy",
+                      "rerank_top_k"},
+    "Fleet": {"mode", "max_steps", "target", "strategy",
+              "rerank_top_k"},
+    "tune_model_kernels": {"target", "strategy", "measurer",
+                           "rerank_top_k"},
+}
+
+
+def _call_name(node):
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def test_no_in_repo_call_site_uses_deprecated_kwargs():
+    """src/, benchmarks/ and examples/ must construct through
+    ``config=OptimizeConfig(...)``; only tests exercise the shims."""
+    offenders = []
+    for root in ("src", "benchmarks", "examples"):
+        for dirpath, _, files in os.walk(os.path.join(REPO, root)):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=path)
+                for node in ast.walk(tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    bad = _DEPRECATED.get(_call_name(node))
+                    if not bad:
+                        continue
+                    used = {k.arg for k in node.keywords} & bad
+                    if used:
+                        offenders.append(
+                            f"{os.path.relpath(path, REPO)}:"
+                            f"{node.lineno} {_call_name(node)}"
+                            f"({sorted(used)})")
+    assert not offenders, (
+        "deprecated optimizer kwargs at:\n" + "\n".join(offenders))

@@ -1,0 +1,154 @@
+"""RewardSource seam (core/env.py, DESIGN.md §14).
+
+Covers: measured replay determinism against the committed fixture DB,
+fallback routing + hit/miss accounting, the mixed-environment refusal,
+the ``get_reward_source`` factory contract, and reward-source pricing
+of ``OfflineTree`` node costs (what PPO's offline replay rewards
+against).
+"""
+import os
+
+import pytest
+
+from repro.core import cost_model, tasks as T
+from repro.core.env import (AnalyticRewardSource, CalibratedRewardSource,
+                            MeasuredRewardSource, RewardSource,
+                            get_reward_source)
+from repro.core.trajectories import CollectConfig, collect
+from repro.measure.db import MeasureDB, MeasureSample
+
+FIXTURE_DB = os.path.join(os.path.dirname(__file__), "fixtures",
+                          "measure_db")
+
+
+class _Stub:
+    """Duck-typed program: fingerprint() is all a replay source reads."""
+
+    def __init__(self, fp):
+        self._fp = fp
+
+    def fingerprint(self):
+        return self._fp
+
+
+class _CountingSource(RewardSource):
+    name = "counting"
+
+    def __init__(self, value=123.0):
+        self.value = value
+        self.calls = 0
+
+    def cost(self, task, prog, target=None):
+        self.calls += 1
+        return self.value
+
+
+def _sample(task_fp, prog_fp, env_fp, t=1e-5):
+    return MeasureSample(task_fp=task_fp, prog_fp=prog_fp,
+                        target="tpu_v5e", env_fp=env_fp, time_s=t,
+                        samples=(t,), n_rejected=0, mode="injected",
+                        analytic_s=t / 2, bottleneck="compute",
+                        env=(("mode", "injected"),))
+
+
+# ---------------------------------------------------------------------------
+# measured replay
+# ---------------------------------------------------------------------------
+
+def test_measured_replay_is_deterministic_on_fixture_db():
+    """Two independent sources over the committed DB answer the same
+    measured time for a known (task, prog) — replay, not re-timing."""
+    db = MeasureDB(FIXTURE_DB)
+    a = MeasuredRewardSource(db)
+    b = MeasuredRewardSource(db)
+    task, prog = _Stub("task00"), _Stub("prog00")
+    ca = a.cost(task, prog, target="tpu_v5e")
+    cb = b.cost(task, prog, target="tpu_v5e")
+    assert ca == cb == pytest.approx(2e-05)
+    assert a.hits == 1 and a.misses == 0
+    # index covers every committed sample
+    assert len(a.index) == 6
+
+
+def test_measured_falls_back_on_unknown_program():
+    db = MeasureDB(FIXTURE_DB)
+    fb = _CountingSource(0.5)
+    rs = MeasuredRewardSource(db, fallback=fb)
+    got = rs.cost(_Stub("taskXX"), _Stub("progXX"), target="tpu_v5e")
+    assert got == 0.5 and fb.calls == 1
+    assert rs.misses == 1 and rs.hits == 0
+    # a hit never consults the fallback
+    rs.cost(_Stub("task01"), _Stub("prog01"), target="tpu_v5e")
+    assert fb.calls == 1 and rs.hits == 1
+
+
+def test_measured_target_mismatch_is_a_miss():
+    db = MeasureDB(FIXTURE_DB)
+    rs = MeasuredRewardSource(db, fallback=_CountingSource(7.0))
+    assert rs.cost(_Stub("task00"), _Stub("prog00"),
+                   target="gpu_a100") == 7.0
+    assert rs.misses == 1
+
+
+def test_mixed_environment_db_is_refused(tmp_path):
+    db = MeasureDB(str(tmp_path / "db"))
+    db.put(_sample("t0", "p0", "envAAAAAAAAA"))
+    db.put(_sample("t1", "p1", "envBBBBBBBBB"))
+    with pytest.raises(ValueError, match="environment"):
+        MeasuredRewardSource(db)
+    # selecting one env works and only indexes its samples
+    rs = MeasuredRewardSource(db, env_fp="envAAAAAAAAA")
+    assert len(rs.index) == 1
+
+
+# ---------------------------------------------------------------------------
+# the factory
+# ---------------------------------------------------------------------------
+
+def test_get_reward_source_factory():
+    assert isinstance(get_reward_source(None), AnalyticRewardSource)
+    assert isinstance(get_reward_source("analytic"),
+                      AnalyticRewardSource)
+    inst = _CountingSource()
+    assert get_reward_source(inst) is inst
+    with pytest.raises(ValueError, match="needs a"):
+        get_reward_source("measured")
+    with pytest.raises(ValueError, match="unknown reward source"):
+        get_reward_source("wallclock")
+    db = MeasureDB(FIXTURE_DB)
+    cal = get_reward_source("calibrated", db=db)
+    assert isinstance(cal, CalibratedRewardSource)
+    meas = get_reward_source("measured", db=db)
+    assert isinstance(meas, MeasuredRewardSource)
+    # measured's fallback is the calibrated model, not the raw roofline
+    assert isinstance(meas.fallback, CalibratedRewardSource)
+
+
+def test_analytic_source_matches_cost_model():
+    task = T.kb_level1()[0]
+    rs = AnalyticRewardSource()
+    assert rs.cost(task, task) == pytest.approx(
+        cost_model.program_cost(task).total_s)
+
+
+# ---------------------------------------------------------------------------
+# tree pricing: the costs PPO replays against
+# ---------------------------------------------------------------------------
+
+def test_offline_tree_node_costs_come_from_reward_source():
+    task = T.kb_level1()[0]
+    rs = _CountingSource(42.0)
+    tree = collect(task, CollectConfig(episodes_random=1,
+                                       episodes_greedy=1, max_steps=2),
+                   reward_source=rs)
+    assert rs.calls >= tree.size
+    assert all(n.cost_s == 42.0 for n in tree.nodes.values())
+
+
+def test_offline_tree_default_pricing_is_analytic():
+    task = T.kb_level1()[0]
+    tree = collect(task, CollectConfig(episodes_random=1,
+                                       episodes_greedy=0, max_steps=2))
+    root = tree.nodes[tree.root]
+    assert root.cost_s == pytest.approx(
+        cost_model.program_cost(task).total_s)

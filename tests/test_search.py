@@ -123,6 +123,45 @@ def test_beam_cap_collision_keeps_dropped_children_rediscoverable():
     assert b.program.name == "D"
 
 
+@settings(max_examples=25, deadline=None)
+@given(ti=st.integers(0, len(SUITE) - 1),
+       seed=st.integers(0, 3),
+       target=st.sampled_from(["tpu_v5e", "gpu_a100"]))
+def test_policy_search_untrained_never_worse_than_greedy(ti, seed,
+                                                         target):
+    """The ISSUE's safety property: an UNTRAINED policy ranking the
+    frontier must never cost PolicySearch correctness or the greedy
+    floor — the greedy backbone is folded into the search, so a
+    useless ranker degrades to greedy, not below it."""
+    from repro.core import MacroPolicy
+    from repro.core.search import PolicySearch
+    task = SUITE[ti]
+    g = _greedy(task, target)
+    out = PolicySearch().search(task, coder=CODER, store=STORE,
+                                target=target, max_steps=8, seed=seed,
+                                policy=MacroPolicy())
+    assert out.cost_s <= g.cost_s * (1 + 1e-12), task.name
+    assert STORE.check(task, out.program), task.name
+
+
+def test_policy_search_expands_fewer_nodes_than_beam():
+    """The budget claim at test scale: on the same store and depth,
+    PolicySearch's pruned frontier expands strictly fewer nodes than
+    beam while keeping the greedy floor (quality is gated for the
+    TRAINED policy in benchmarks/table7_policy.py)."""
+    from repro.core import MacroPolicy
+    from repro.core.search import PolicySearch
+    pol = MacroPolicy()
+    for task in (T.kb_level2()[0], T.kb_level3()[0]):
+        b = BeamSearch().search(task, coder=CODER, store=STORE,
+                                max_steps=8, extended=True)
+        p = PolicySearch().search(task, coder=CODER, store=STORE,
+                                  max_steps=8, extended=True,
+                                  policy=pol)
+        assert p.n_expanded < b.n_expanded, task.name
+        assert p.cost_s <= _greedy(task).cost_s * (1 + 1e-12)
+
+
 def test_anneal_restart_zero_is_greedy():
     task = T.kb_level2()[0]
     a = AnnealedSearch(restarts=1).search(task, coder=CODER,
