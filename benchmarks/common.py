@@ -50,7 +50,7 @@ def build_reward_db(db_dir: str = REWARD_DB, seed: int = 0,
         T.train_tasks(),
         CollectConfig(episodes_random=5, episodes_greedy=6, seed=seed),
         env_cfg=EnvConfig(extended_rules=True), store=STORE)
-    for name, tree in trees.items():
+    for tree in trees.values():
         task = tree.nodes[tree.root].program
         ranked = sorted(tree.nodes.values(), key=lambda n: n.cost_s)
         picked, seen = [], set()

@@ -145,10 +145,12 @@ def run(fast: bool, db_dir: str) -> tuple[list[str], list[str],
             a_t = next(t for t, fp, _, _ in meas if fp == a_fp)
             changed = m_fp != a_fp
             n_changed += changed
+            ratio = a_t / max(m_t, 1e-12)
+            verdict = (f"WINNER CHANGED x{ratio:.2f}" if changed
+                       else "same winner")
             task_lines.append(
                 f"    {task.name:<22s} analytic-pick {a_t * 1e3:8.2f} ms"
-                f"  measured-pick {m_t * 1e3:8.2f} ms  "
-                f"{'WINNER CHANGED x%.2f' % (a_t / max(m_t, 1e-12)) if changed else 'same winner'}")
+                f"  measured-pick {m_t * 1e3:8.2f} ms  {verdict}")
 
         rho = spearman([a for a, _, _ in pairs],
                        [m for _, m, _ in pairs])

@@ -1,0 +1,47 @@
+"""repro.analysis — static verification of programs and schedules.
+
+Three diagnostic-producing passes (DESIGN.md §15):
+
+  verifier   — well-formedness of the ``KernelProgram`` graph
+               (MT001-MT015)
+  legality   — schedule legality against a ``HardwareTarget`` or the
+               portability envelope (MT020-MT028)
+  soundness  — differential harness proving every rule's enumerated
+               candidates rewrite into analyzable programs
+               (MT030-MT031)
+
+plus the ``python -m repro.analysis.lint`` CLI.
+
+Only ``diagnostics`` is imported eagerly: ``core/rules.py`` attaches
+``Diagnostic``s to its ``CompileError``s, and importing this package's
+analysis passes from there would re-enter ``repro.core`` mid-import.
+The pass entry points resolve lazily (PEP 562).
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import (AnalysisError, CODES, Diagnostic,
+                                        error, warning)
+
+__all__ = [
+    "AnalysisError", "CODES", "Diagnostic", "error", "warning",
+    "verify_program", "analyze_legality", "analyze_program",
+    "check_program", "check_rule_soundness", "soundness_report",
+]
+
+_LAZY = {
+    "verify_program": "repro.analysis.verifier",
+    "analyze_legality": "repro.analysis.legality",
+    "analyze_program": "repro.analysis.legality",
+    "check_program": "repro.analysis.legality",
+    "check_rule_soundness": "repro.analysis.soundness",
+    "soundness_report": "repro.analysis.soundness",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

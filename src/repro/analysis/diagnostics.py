@@ -1,0 +1,124 @@
+"""Diagnostic records and the stable MT0xx code registry.
+
+Every static-analysis finding — and every legality failure the rewrite
+rules raise — is one ``Diagnostic``: a stable code, a severity, the
+node/group span it anchors to, a human message and a fix-hint.  Codes
+are REGISTERED here and never renumbered (tests golden-match them;
+external tooling may grep logs for them), exactly like a compiler's
+diagnostic registry.
+
+This module is a leaf: it imports nothing from ``repro.core`` so the
+rule registry (``core/rules.py``) can attach diagnostics to its
+``CompileError``s without an import cycle (the analysis passes import
+the core; the core imports only this record type).
+
+Code blocks (DESIGN.md §15):
+
+  MT001-MT019   well-formedness (verifier pass)
+  MT020-MT029   target legality (schedule analyzer pass)
+  MT030-MT039   rule soundness (differential harness)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+ERROR = "error"
+WARNING = "warning"
+
+#: code -> (default severity, one-line meaning).  Append-only: codes
+#: are stable identifiers (golden-tested); never renumber or reuse.
+CODES: dict[str, tuple[str, str]] = {
+    # -- well-formedness (verifier) -------------------------------------
+    "MT001": (ERROR, "duplicate tensor name (node shadows a node or input)"),
+    "MT002": (ERROR, "reference to an undefined tensor"),
+    "MT003": (ERROR, "unknown op kind"),
+    "MT004": (ERROR, "wrong operand count for op"),
+    "MT005": (ERROR, "operand shapes incompatible with op"),
+    "MT006": (WARNING, "operand dtypes inconsistent with shape inference"),
+    "MT007": (ERROR, "program output names no node or input"),
+    "MT008": (WARNING, "dead node: result feeds no node and no output"),
+    "MT009": (WARNING, "unused program input"),
+    "MT010": (ERROR, "fusion groups are not a partition of the nodes"),
+    "MT011": (ERROR, "fused group matches no kernel template"),
+    "MT012": (ERROR, "schedule keyed on a name that is no group root"),
+    "MT013": (ERROR, "cyclic or forward reference (use before def)"),
+    "MT014": (ERROR, "fusion group is not dataflow-connected"),
+    "MT015": (ERROR, "invalid or unsupported tensor dtype"),
+    # -- target legality (schedule analyzer) ----------------------------
+    "MT020": (ERROR, "tile parameter not applicable to kernel kind"),
+    "MT021": (ERROR, "tile does not divide its dimension (grid)"),
+    "MT022": (ERROR, "tile violates lane/sublane alignment"),
+    "MT023": (ERROR, "VMEM overflow: tiles x pipeline depth exceed capacity"),
+    "MT024": (ERROR, "pipeline depth out of range"),
+    "MT025": (ERROR, "invalid loop order"),
+    "MT026": (ERROR, "compute dtype unsupported on target"),
+    "MT027": (ERROR, "invalid split_k schedule flag"),
+    "MT028": (ERROR, "unknown schedule epilogue"),
+    # -- rule soundness (differential harness) --------------------------
+    "MT030": (ERROR, "rule rewrite produced a program the verifier rejects"),
+    "MT031": (WARNING, "enumerated candidate rejected by its own rule"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One analysis finding, anchored to the nodes/groups it concerns.
+
+    ``span`` is a tuple of node (or input/group-root) names — the IR has
+    no source text, so names are its line numbers.  ``render()`` is the
+    stable one-line form golden tests and the lint CLI print.
+    """
+
+    code: str
+    message: str
+    span: tuple[str, ...] = ()
+    hint: str = ""
+    severity: str = ""      # "" -> the code's registered default
+
+    def __post_init__(self):
+        if self.code not in CODES:
+            raise ValueError(f"unregistered diagnostic code {self.code!r}")
+        if not self.severity:
+            object.__setattr__(self, "severity", CODES[self.code][0])
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity == ERROR
+
+    def render(self, program: str = "") -> str:
+        where = ",".join(self.span) if self.span else "<program>"
+        head = f"{program}:{where}" if program else where
+        out = f"{head}: {self.severity} {self.code}: {self.message}"
+        if self.hint:
+            out += f" [hint: {self.hint}]"
+        return out
+
+
+def error(code: str, message: str, *, span: tuple[str, ...] = (),
+          hint: str = "") -> Diagnostic:
+    return Diagnostic(code, message, span=span, hint=hint,
+                      severity=ERROR)
+
+
+def warning(code: str, message: str, *, span: tuple[str, ...] = (),
+            hint: str = "") -> Diagnostic:
+    return Diagnostic(code, message, span=span, hint=hint,
+                      severity=WARNING)
+
+
+class AnalysisError(Exception):
+    """A program was rejected by static analysis.
+
+    Raised by the gating integrations (measure harness, serve path) so
+    callers get the diagnostics themselves instead of a deep stack
+    trace out of a lowerer.  ``diagnostics`` holds every finding, worst
+    first; ``str()`` renders them one per line.
+    """
+
+    def __init__(self, diagnostics: tuple[Diagnostic, ...],
+                 program: str = ""):
+        self.diagnostics = tuple(diagnostics)
+        self.program = program
+        super().__init__("\n".join(
+            d.render(program) for d in self.diagnostics)
+            or "static analysis rejected the program")

@@ -1,0 +1,224 @@
+"""Target-legality analyzer over schedules (pass 2) + the combined API.
+
+Statically proves every fusion group's schedule lowerable: tile names
+applicable to the kernel kind, grid divisibility and lane/sublane
+alignment of the tiles the lowerer will ACTUALLY use (lowerers clamp a
+tile to its dimension before building the grid, so the analyzer
+reasons about ``eff = min(tile, dim)``, not the raw schedule value —
+a default 128-tile on a 64-wide dim is legal and lowers as one block),
+pipelined VMEM footprint against the capacity budget, loop orders,
+split-K flags, epilogues, and compute-dtype support.
+
+``target=None`` analyzes against the portability envelope of
+DESIGN.md §9 (16 MiB VMEM, 8-sublane alignment — legal everywhere, the
+same budget ``rules.check_tiles`` enforces at rewrite time); an
+explicit ``HardwareTarget`` analyzes against that chip's real
+lane/sublane/VMEM geometry and dtype tables, catching e.g. a float16
+compute dtype on a TPU before any lowering is attempted.
+
+``analyze_program`` composes pass 1 + pass 2 (legality only runs when
+well-formedness holds — schedules over a broken graph produce noise,
+not signal); ``check_program`` is the raising form the gates use.
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import (AnalysisError, Diagnostic, error,
+                                        warning)
+from repro.core import hardware, rules
+from repro.core.kernel_ir import KernelProgram, sched_kind, \
+    sched_kind_of_group
+
+# kinds whose matrix-unit tiles must respect sublane alignment
+ALIGNED_KINDS = ("matmul", "grouped_matmul", "flash_attention")
+MAX_PIPELINE_DEPTH = 8
+
+# legal loop-order letter sets per kernel kind (sorted)
+_ORDERS = {"matmul": (["k", "m", "n"],),
+           "grouped_matmul": (["k", "m", "n"], ["c", "d", "f"])}
+
+_EPILOGUES: set[str] = set()
+
+
+def _legal_epilogues() -> set[str]:
+    if not _EPILOGUES:
+        ops = sorted(rules.FUSABLE_EPILOGUES)
+        _EPILOGUES.update(ops)
+        _EPILOGUES.update(f"{a}_{b}" for a in ops for b in ops)
+    return _EPILOGUES
+
+
+def _group_schedule_diags(prog: KernelProgram, group: tuple[str, ...],
+                          tgt, envelope: bool) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    kind = sched_kind_of_group(prog, group)
+    sched = prog.schedule_for(group)
+    root = prog.group_root(group)
+    span = (root,)
+    nm = prog.node_map
+    main = next((nm[n] for n in group
+                 if sched_kind(nm[n].op) == kind), nm[group[0]])
+    dims = rules.tileable_dims(main, prog.shapes(), prog.input_specs)
+    align = 8 if envelope else max(8, tgt.sublane)
+
+    # tiles: applicability, divisibility of the CLAMPED tile, alignment
+    eff: dict[str, int] = {}
+    for tname, t in sched.blocks_dict.items():
+        if dims and tname not in dims:
+            out.append(error(
+                "MT020", f"tile parameter {tname!r} not applicable to "
+                f"{kind} kernel {main.name!r} (has {sorted(dims)})",
+                span=span,
+                hint=f"use one of {sorted(dims)}"))
+            continue
+        if tname not in dims:
+            continue
+        d = dims[tname]
+        if t <= 0:
+            out.append(error(
+                "MT021", f"tile {tname}={t} must be positive",
+                span=span))
+            continue
+        e = min(int(t), d)
+        eff[tname] = e
+        if e and d % e != 0:
+            # the rmsnorm lowerer degrades a non-dividing rows tile to
+            # row-at-a-time instead of refusing — report, don't gate
+            mk = warning if kind == "rmsnorm" else error
+            out.append(mk(
+                "MT021", f"tile {tname}={t} (clamped to {e}) does not "
+                f"divide dim {d} of {main.name!r}", span=span,
+                hint=f"pick a divisor of {d}"))
+        if kind in ALIGNED_KINDS and e % align != 0 and e != d:
+            out.append(error(
+                "MT022", f"tile {tname}={e} is not {align}-aligned for "
+                f"{kind} on {tgt.name}", span=span,
+                hint=f"tiles must be multiples of {align} (sublane)"))
+
+    # pipelined VMEM footprint of the effective tiles
+    depth = sched.pipeline_depth
+    if not 1 <= depth <= MAX_PIPELINE_DEPTH:
+        out.append(error(
+            "MT024", f"pipeline depth {depth} out of range "
+            f"[1, {MAX_PIPELINE_DEPTH}]", span=span))
+    else:
+        budget = rules.VMEM_BYTES if envelope else tgt.vmem_bytes
+        vmem = rules.vmem_tile_bytes(kind, eff, dims)
+        if vmem * max(1, depth) > budget:
+            out.append(error(
+                "MT023", f"VMEM overflow on {tgt.name}: "
+                f"{vmem * max(1, depth) / 2**20:.1f} MiB (depth "
+                f"{depth}) > {budget / 2**20:.0f} MiB budget",
+                span=span,
+                hint="shrink tiles or lower pipeline_depth"))
+
+    # loop order
+    order = sched.loop_order
+    if order:
+        legal = _ORDERS.get(kind)
+        if legal is None:
+            out.append(error(
+                "MT025", f"{kind} kernels take no loop order; schedule "
+                f"has {order}", span=span))
+        elif sorted(order) not in [list(o) for o in legal]:
+            out.append(error(
+                "MT025", f"invalid loop order {order} for {kind}",
+                span=span,
+                hint=f"a permutation of one of {legal}"))
+
+    # split-K flags
+    for f in sched.flags:
+        if not f.startswith(rules.SplitKRule.FLAG):
+            continue
+        raw = f[len(rules.SplitKRule.FLAG):]
+        try:
+            S = int(raw)
+        except ValueError:
+            out.append(error(
+                "MT027", f"unparseable split_k flag {f!r}", span=span))
+            continue
+        msg = ""
+        if kind != "matmul":
+            msg = f"split_k on a {kind} kernel (matmul only)"
+        elif not 2 <= S <= 16:
+            msg = f"split factor {S} out of range [2, 16]"
+        else:
+            skr = rules.SplitKRule()
+            d2 = skr._anchor_dims(prog, group)
+            if d2 is None:
+                msg = "split_k kernel has no single matmul anchor"
+            else:
+                M, K = d2
+                if M > skr.SKINNY_M:
+                    msg = (f"split_k is for skinny-M matmuls "
+                           f"(M={M} > {skr.SKINNY_M})")
+                elif K % S != 0 or (K // S) % 8 != 0:
+                    msg = (f"split factor {S} does not divide K={K} "
+                           "into lane-aligned chunks")
+        if msg:
+            out.append(error("MT027", msg, span=span,
+                             hint="see rules.SplitKRule legality"))
+
+    # epilogue: "" | "none" | op | op_op over the fusable vocabulary
+    # (ops themselves contain underscores — row_max — so membership is
+    # checked against the enumerated legal strings, not split tokens)
+    epi = sched.epilogue
+    if epi not in ("", "none") and epi not in _legal_epilogues():
+        out.append(error(
+            "MT028", f"unknown schedule epilogue {epi!r}", span=span,
+            hint="an epilogue is one or two '_'-joined ops from "
+                 f"{sorted(rules.FUSABLE_EPILOGUES)}"))
+
+    # compute dtype vs the target's matrix-unit tables
+    if not envelope:
+        table = dict(tgt.matmul_flops_by_dtype)
+        for n in group:
+            dt = nm[n].attr("compute_dtype")
+            if dt is None or dt == "float32":
+                continue
+            key = hardware._DTYPE_TABLE_KEYS.get(dt, dt)
+            if key not in table:
+                out.append(error(
+                    "MT026", f"compute dtype {dt!r} on node {n!r} has "
+                    f"no matmul rate on {tgt.name} "
+                    f"(supports {sorted(table)})", span=(n,),
+                    hint="pick a dtype the target's matrix unit "
+                         "supports, or float32"))
+    return out
+
+
+def analyze_legality(prog: KernelProgram,
+                     target=None) -> list[Diagnostic]:
+    """Pass 2 alone — assumes ``prog`` is well-formed (run the
+    verifier first; ``analyze_program`` composes both)."""
+    envelope = target is None
+    tgt = hardware.resolve(target)
+    out: list[Diagnostic] = []
+    for g in prog.fusion_groups:
+        out += _group_schedule_diags(prog, g, tgt, envelope)
+    return out
+
+
+def analyze_program(prog: KernelProgram,
+                    target=None) -> list[Diagnostic]:
+    """Full static analysis: well-formedness, then (only when no
+    errors — schedules over a broken graph are noise) target
+    legality.  Errors first, then warnings, each stably ordered."""
+    from repro.analysis.verifier import verify_program
+    diags = verify_program(prog)
+    if not any(d.is_error for d in diags):
+        diags += analyze_legality(prog, target)
+    return (sorted((d for d in diags if d.is_error),
+                   key=lambda d: (d.code, d.span))
+            + sorted((d for d in diags if not d.is_error),
+                     key=lambda d: (d.code, d.span)))
+
+
+def check_program(prog: KernelProgram, target=None,
+                  name: str = "") -> list[Diagnostic]:
+    """Gate form: raise ``AnalysisError`` carrying every ERROR
+    diagnostic; return the warnings (callers may log them)."""
+    diags = analyze_program(prog, target)
+    errors = tuple(d for d in diags if d.is_error)
+    if errors:
+        raise AnalysisError(errors, program=name)
+    return [d for d in diags if not d.is_error]

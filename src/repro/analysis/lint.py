@@ -1,0 +1,203 @@
+"""``python -m repro.analysis.lint`` — lint suites, DBs, program JSON.
+
+Runs the full static analysis (verifier + legality, DESIGN.md §15)
+over every program it can find in the named sources and prints one
+rendered diagnostic per line.  Exit status 1 when any ERROR diagnostic
+is produced (``--strict``: warnings fail too), so CI can gate on it.
+
+Sources:
+
+  --suites kb,tb,ext,train   committed task suites (default: all)
+  --db DIR                   a MeasureDB directory: every winner
+                             record's embedded program is analyzed;
+                             sample records are structurally validated
+                             (required keys present, numbers finite)
+  --soundness                additionally run the rule-soundness
+                             differential harness over the suite
+                             programs x every registered rule
+  --target NAME              analyze against one registered
+                             HardwareTarget instead of the portability
+                             envelope
+  PATH...                    JSON files: one ``program_to_json`` dict,
+                             or a winner-style record with a
+                             ``program`` key
+
+Examples:
+
+  PYTHONPATH=src python -m repro.analysis.lint
+  PYTHONPATH=src python -m repro.analysis.lint --db tests/fixtures/measure_db \
+      --db results/policy_reward_db --soundness
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.legality import analyze_program
+
+SUITES = {
+    "kb": ("kb_level1", "kb_level2", "kb_level3"),
+    "tb": ("tb_t", "tb_g"),
+    "ext": ("ext_tasks",),
+    "train": ("train_tasks",),
+}
+
+# keys a MeasureDB sample record must carry (measure/db.py layout)
+SAMPLE_KEYS = ("analytic_s", "env_fp", "mode", "prog_fp", "samples",
+               "target", "task_fp", "time_s")
+
+
+def _suite_programs(names) -> list[tuple[str, "object"]]:
+    from repro.core import tasks
+    out = []
+    for short in names:
+        for fn_name in SUITES[short]:
+            for t in getattr(tasks, fn_name)():
+                prog = t.program if hasattr(t, "program") else t
+                out.append((f"{fn_name}/{prog.name}", prog))
+    return out
+
+
+def _load_program(payload: dict, where: str):
+    from repro.core.kernel_ir import program_from_json
+    if "program" in payload and isinstance(payload["program"], dict):
+        payload = payload["program"]
+    try:
+        return program_from_json(payload), ""
+    except Exception as e:
+        return None, f"{where}: unreadable program JSON: {e}"
+
+
+def _check_sample(rec: dict, where: str) -> list[str]:
+    probs = [f"{where}: sample record missing key {k!r}"
+             for k in SAMPLE_KEYS if k not in rec]
+    for k in ("analytic_s", "time_s"):
+        v = rec.get(k)
+        if isinstance(v, (int, float)) and not math.isfinite(v):
+            probs.append(f"{where}: non-finite {k}={v}")
+    if isinstance(rec.get("time_s"), (int, float)) and rec["time_s"] < 0:
+        probs.append(f"{where}: negative time_s={rec['time_s']}")
+    return probs
+
+
+def _db_sources(db_dir: str):
+    """(kind, path, record) for every JSON record under a DB dir."""
+    for sub, kind in (("winners", "winner"), ("samples", "sample")):
+        for p in sorted(glob.glob(os.path.join(db_dir, sub, "*.json"))):
+            try:
+                with open(p) as f:
+                    yield kind, p, json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                yield "corrupt", p, {"error": str(e)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="static analysis over task suites, measure DBs "
+                    "and program JSON files")
+    ap.add_argument("paths", nargs="*", help="program JSON files")
+    ap.add_argument("--suites", default="kb,tb,ext,train",
+                    help=f"comma list of {'/'.join(SUITES)} "
+                         "(empty to skip)")
+    ap.add_argument("--db", action="append", default=[],
+                    help="MeasureDB directory (repeatable)")
+    ap.add_argument("--target", default=None,
+                    help="HardwareTarget name (default: portability "
+                         "envelope)")
+    ap.add_argument("--soundness", action="store_true",
+                    help="run the rule-soundness harness over the "
+                         "suite programs")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings fail the run too")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-source OK lines")
+    args = ap.parse_args(argv)
+
+    n_errors = n_warnings = n_programs = 0
+    structural: list[str] = []
+
+    def report(where: str, diags: list[Diagnostic]) -> None:
+        nonlocal n_errors, n_warnings
+        for d in diags:
+            print(d.render(where))
+            if d.is_error:
+                n_errors += 1
+            else:
+                n_warnings += 1
+        if not diags and not args.quiet:
+            print(f"{where}: OK")
+
+    suite_names = [s for s in args.suites.split(",") if s]
+    bad = [s for s in suite_names if s not in SUITES]
+    if bad:
+        ap.error(f"unknown suites {bad}; pick from {sorted(SUITES)}")
+    progs = _suite_programs(suite_names)
+    for where, prog in progs:
+        n_programs += 1
+        report(where, analyze_program(prog, args.target))
+
+    for db_dir in args.db:
+        if not os.path.isdir(db_dir):
+            structural.append(f"{db_dir}: not a directory")
+            continue
+        for kind, path, rec in _db_sources(db_dir):
+            if kind == "corrupt":
+                structural.append(f"{path}: corrupt record: "
+                                  f"{rec['error']}")
+            elif kind == "winner":
+                prog, err = _load_program(rec, path)
+                if prog is None:
+                    structural.append(err)
+                else:
+                    n_programs += 1
+                    report(path, analyze_program(prog, args.target))
+            else:
+                structural.extend(_check_sample(rec, path))
+
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            structural.append(f"{path}: unreadable: {e}")
+            continue
+        prog, err = _load_program(payload, path)
+        if prog is None:
+            structural.append(err)
+        else:
+            n_programs += 1
+            report(path, analyze_program(prog, args.target))
+
+    if args.soundness and progs:
+        from repro.analysis.soundness import soundness_report
+        diags = soundness_report([p for _, p in progs],
+                                 target=args.target)
+        errs = [d for d in diags if d.is_error]
+        for d in errs:
+            print(d.render("soundness"))
+        n_errors += len(errs)
+        # MT031 self-rejections are by design (legality floats to
+        # rewrite time) — count them, don't print hundreds of lines
+        n_self = len(diags) - len(errs)
+        print(f"soundness: {len(errs)} errors, {n_self} "
+              "self-rejected candidates (expected)")
+
+    for line in structural:
+        print(f"{line}")
+    n_errors += len(structural)
+
+    print(f"linted {n_programs} programs: {n_errors} errors, "
+          f"{n_warnings} warnings")
+    if n_errors or (args.strict and n_warnings):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Rule-soundness differential harness (pass 3).
+
+A ``RewriteRule`` is SOUND when every candidate it enumerates as legal
+rewrites a well-formed program into another program the verifier +
+legality analyzer accept.  This pass proves that property statically,
+with no oracle evaluation: for each seed program it enumerates each
+rule's curated candidates, applies the rewrite, and re-analyzes the
+result — an analyzer rejection of a rule-accepted rewrite is an MT030
+error (the rule's legality predicate and the analyzer disagree: one of
+them is wrong, and either way the search space is poisoned).  A
+candidate a rule enumerates but then rejects in its own ``rewrite``
+is only an MT031 warning — self-rejection wastes a search expansion
+but cannot corrupt state (``candidate_actions`` intentionally floats
+some legality to rewrite time).
+
+CI runs this over every committed suite × every registered rule
+(``tests/test_analysis.py``); ``repro.analysis.lint --soundness``
+exposes the same sweep from the command line.
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import Diagnostic, error, warning
+from repro.core import rules as rules_mod
+from repro.core.kernel_ir import KernelProgram, sched_kind_of_group
+
+
+def rule_candidates(prog: KernelProgram, rule, target=None):
+    """One rule's curated candidates for ``prog`` (the same
+    enumeration ``candidate_actions`` aggregates)."""
+    from repro.core import hardware
+    tgt = hardware.resolve(target)
+    acts = []
+    for g in prog.fusion_groups:
+        root = prog.group_root(g)
+        kind = sched_kind_of_group(prog, g)
+        acts += rule.group_actions(prog, g, root, kind, tgt)
+    acts += rule.global_actions(prog, tgt)
+    return acts
+
+
+def check_rule_soundness(prog: KernelProgram, rule, target=None,
+                         depth: int = 1) -> list[Diagnostic]:
+    """Differentially test one rule against one seed program.
+
+    ``depth`` > 1 re-enumerates on each rewritten program and descends
+    (bounded breadth-first), catching rules that are sound on pristine
+    seeds but unsound after their own rewrites compose.
+    """
+    from repro.analysis.legality import analyze_program
+    out: list[Diagnostic] = []
+    frontier = [prog]
+    for _ in range(max(1, depth)):
+        nxt: list[KernelProgram] = []
+        for p in frontier:
+            for act in rule_candidates(p, rule, target):
+                if rules_mod.is_terminal(act):
+                    continue
+                try:
+                    new = rule.rewrite(p, act)
+                except rules_mod.CompileError as e:
+                    out.append(warning(
+                        "MT031",
+                        f"{rule.kind} enumerated {rules_mod.describe(act)} "
+                        f"then rejected it: {e}",
+                        span=(act.region,)))
+                    continue
+                bad = [d for d in analyze_program(new, target)
+                       if d.is_error]
+                if bad:
+                    out.append(error(
+                        "MT030",
+                        f"{rule.kind} rewrite {rules_mod.describe(act)} "
+                        f"produced a rejected program: "
+                        f"{bad[0].code}: {bad[0].message}"
+                        + (f" (+{len(bad) - 1} more)"
+                           if len(bad) > 1 else ""),
+                        span=(act.region,),
+                        hint="the rule's legality predicate and the "
+                             "analyzer disagree — align them"))
+                else:
+                    nxt.append(new)
+        frontier = nxt
+        if not frontier:
+            break
+    return out
+
+
+def soundness_report(progs, target=None, extended: bool = True,
+                     depth: int = 1) -> list[Diagnostic]:
+    """The full sweep: every program × every registered rule."""
+    out: list[Diagnostic] = []
+    for prog in progs:
+        for rule in rules_mod.registered_rules(extended):
+            if rule.terminal:
+                continue
+            out += check_rule_soundness(prog, rule, target, depth)
+    return out

@@ -1,0 +1,329 @@
+"""Well-formedness verifier over ``KernelProgram`` IR (pass 1).
+
+Proves — statically, with no oracle evaluation and no lowering — that a
+program is structurally sound: every referenced tensor is defined
+before use (the node tuple is the execution order, so a forward or self
+reference IS a cycle), every op has the operand count and operand
+shapes/dtypes its evaluator semantics require, outputs exist, the
+fusion groups partition the node set into dataflow-connected kernels
+whose multi-node patterns the kernel library can actually emit, and
+schedules key on real group roots.
+
+Shape/dtype inference mirrors ``kernel_ir.infer_shape`` and the
+``_eval_op`` reference semantics EXACTLY — a diagnostic here means the
+evaluator would either crash or silently disagree with the IR's own
+``shapes()`` (the cost model and the lowerers trust those specs).
+
+Dead nodes and unused inputs are WARNINGS, not errors: in this IR an
+unconsumed node is still executed and priced (several committed
+network-block tasks model layout breaks by splitting dataflow through
+fresh inputs on purpose), so the verifier flags them for the linter
+without failing the gate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.diagnostics import Diagnostic, error, warning
+from repro.core.kernel_ir import (ELEMENTWISE, KernelProgram, OpNode,
+                                  TensorSpec)
+
+# op -> operand count (the evaluator indexes exactly these)
+ARITY: dict[str, int] = {
+    "matmul": 2, "grouped_matmul": 2,
+    "bias": 2, "add": 2, "mul": 2,
+    "relu": 1, "gelu": 1, "silu": 1, "square": 1,
+    "softmax": 1, "row_max": 1, "row_sum": 1,
+    "rmsnorm": 2,
+    "attention": 3, "qk_scores": 2, "av": 2,
+    "rwkv_chunk": 5, "ssm_chunk": 5,
+}
+
+# dtypes the oracle / input generators / hardware tables understand
+KNOWN_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _broadcastable(a: tuple[int, ...], b: tuple[int, ...]) -> bool:
+    try:
+        np.broadcast_shapes(a, b)
+        return True
+    except ValueError:
+        return False
+
+
+def _check_shapes(n: OpNode, specs: list[TensorSpec],
+                  out: list[Diagnostic]) -> None:
+    """Operand-shape validity per op, mirroring ``_eval_op``."""
+    sh = [s.shape for s in specs]
+    bad = None
+    hint = ""
+    if n.op == "matmul":
+        if len(sh[0]) < 2 or len(sh[1]) < 2:
+            bad = "matmul operands must be at least rank-2"
+        elif sh[0][-1] != sh[1][-2]:
+            bad = (f"matmul contraction mismatch: "
+                   f"{sh[0]} @ {sh[1]} (K {sh[0][-1]} != {sh[1][-2]})")
+            hint = "the lhs last dim must equal the rhs second-to-last"
+    elif n.op == "grouped_matmul":
+        if len(sh[0]) != 3 or len(sh[1]) != 3:
+            bad = "grouped_matmul operands must be (E,C,D) and (E,D,F)"
+        elif sh[0][0] != sh[1][0] or sh[0][2] != sh[1][1]:
+            bad = (f"grouped_matmul mismatch: {sh[0]} x {sh[1]} "
+                   "(expert or contraction dims differ)")
+    elif n.op in ("bias", "add", "mul"):
+        if not _broadcastable(sh[0], sh[1]):
+            bad = f"operands {sh[0]} and {sh[1]} do not broadcast"
+        elif np.broadcast_shapes(sh[0], sh[1]) != sh[0]:
+            bad = (f"broadcast of {sh[0]} and {sh[1]} widens the first "
+                   "operand (shape inference keeps the first operand's "
+                   "shape)")
+            hint = "put the full-shape operand first"
+    elif n.op == "rmsnorm":
+        if len(sh[1]) != 1 or not sh[0] or sh[1][0] != sh[0][-1]:
+            bad = (f"rmsnorm scale must be ({sh[0][-1] if sh[0] else '?'},)"
+                   f", got {sh[1]}")
+    elif n.op in ("softmax", "row_max", "row_sum"):
+        if len(sh[0]) < 1:
+            bad = f"{n.op} needs at least rank-1 input"
+    elif n.op == "attention":
+        q, k, v = sh
+        if len(q) != 4 or len(k) != 4 or len(v) != 4:
+            bad = "attention operands must be rank-4 (B,S,H,hd)"
+        elif k != v:
+            bad = f"attention K {k} and V {v} shapes differ"
+        elif q[0] != k[0] or q[3] != k[3]:
+            bad = f"attention Q {q} incompatible with K {k}"
+        elif k[2] == 0 or q[2] % k[2] != 0:
+            bad = (f"attention Q heads {q[2]} not a multiple of KV "
+                   f"heads {k[2]}")
+            hint = "GQA needs H % KV == 0"
+    elif n.op == "qk_scores":
+        q, k = sh
+        if len(q) != 4 or len(k) != 4:
+            bad = "qk_scores operands must be rank-4 (B,S,H,hd)"
+        elif q[0] != k[0] or q[2] != k[2] or q[3] != k[3]:
+            bad = f"qk_scores Q {q} incompatible with K {k}"
+    elif n.op == "av":
+        p, v = sh
+        if len(p) != 4 or len(v) != 4:
+            bad = "av operands must be rank-4"
+        elif p[0] != v[0] or p[1] != v[2] or p[3] != v[1]:
+            bad = (f"av probs {p} incompatible with V {v} "
+                   "(expect (B,H,Sq,Sk) x (B,Sk,H,hd))")
+    elif n.op == "rwkv_chunk":
+        r = sh[0]
+        if len(r) != 4:
+            bad = "rwkv_chunk r must be rank-4 (B,T,H,dk)"
+        elif any(s != r for s in sh[1:4]):
+            bad = f"rwkv_chunk r/k/v/w shapes differ: {sh[:4]}"
+        elif tuple(sh[4]) != (r[2], r[3]):
+            bad = f"rwkv_chunk u must be (H,dk)={r[2:]}; got {sh[4]}"
+    elif n.op == "ssm_chunk":
+        x, dt, a, b, c = sh
+        if len(x) != 4:
+            bad = "ssm_chunk x must be rank-4 (B,T,H,P)"
+        elif tuple(dt) != tuple(x[:3]):
+            bad = f"ssm_chunk dt must be (B,T,H)={x[:3]}; got {dt}"
+        elif tuple(a) != (x[2],):
+            bad = f"ssm_chunk A must be (H,)=({x[2]},); got {a}"
+        elif len(b) != 3 or b != c or tuple(b[:2]) != tuple(x[:2]):
+            bad = f"ssm_chunk B/C must be (B,T,N) matching x; got {b}/{c}"
+    if bad:
+        out.append(error("MT005", bad, span=(n.name,)))
+
+
+def _check_dtypes(n: OpNode, specs: list[TensorSpec],
+                  out: list[Diagnostic]) -> None:
+    """Dtype consistency where the evaluator and ``infer_shape`` could
+    diverge.  Elementwise mixes are fine (the evaluator casts to the
+    first operand's dtype, which is what inference records); a mixed
+    matmul WITHOUT the dtype rule's attrs is not — jnp would promote
+    while inference keeps the lhs dtype, so pricing and lowering would
+    disagree with execution."""
+    if n.op in ("matmul", "grouped_matmul") \
+            and specs[0].dtype != specs[1].dtype \
+            and not n.attr("compute_dtype"):
+        # the evaluator promotes; inference keeps the lhs dtype — a
+        # real divergence, but one the dtype rule's downstream
+        # consumers carry legitimately (the oracle's marker-tainted
+        # tolerances absorb it), so this is lint signal, not a gate
+        out.append(warning(
+            "MT006",
+            f"{n.op} operand dtypes differ ({specs[0].dtype} vs "
+            f"{specs[1].dtype}) without a compute_dtype attr",
+            span=(n.name,),
+            hint="apply the dtype rule (compute_dtype/out_dtype attrs) "
+                 "or cast the operands to one dtype"))
+    for key in ("compute_dtype", "out_dtype"):
+        v = n.attr(key)
+        if v is not None and v not in KNOWN_DTYPES:
+            out.append(error(
+                "MT015", f"{key}={v!r} on {n.name} is not a known "
+                f"dtype {KNOWN_DTYPES}", span=(n.name,)))
+
+
+def _infer(n: OpNode, env: dict[str, TensorSpec]) -> TensorSpec:
+    """``kernel_ir.infer_shape`` on pre-validated operands."""
+    from repro.core.kernel_ir import infer_shape
+    return infer_shape(n, env)
+
+
+def _group_connected(group: tuple[str, ...],
+                     nodes: dict[str, OpNode]) -> bool:
+    """Weak dataflow connectivity over the group's internal edges."""
+    members = [m for m in group if m in nodes]
+    if len(members) <= 1:
+        return True
+    adj: dict[str, set[str]] = {m: set() for m in members}
+    mset = set(members)
+    for m in members:
+        for i in nodes[m].inputs:
+            if i in mset:
+                adj[m].add(i)
+                adj[i].add(m)
+    seen = {members[0]}
+    stack = [members[0]]
+    while stack:
+        for nb in adj[stack.pop()]:
+            if nb not in seen:
+                seen.add(nb)
+                stack.append(nb)
+    return len(seen) == len(members)
+
+
+def verify_program(prog: KernelProgram) -> list[Diagnostic]:
+    """Run the well-formedness pass; returns diagnostics (worst first
+    is NOT guaranteed — callers sort or filter by severity)."""
+    out: list[Diagnostic] = []
+    env: dict[str, TensorSpec] = {}
+    broken: set[str] = set()       # names whose spec is unknown
+
+    # inputs: unique names, known dtypes, positive shapes
+    for name, spec in prog.inputs:
+        if name in env:
+            out.append(error("MT001", f"duplicate input {name!r}",
+                             span=(name,)))
+        try:
+            _ = np.dtype(spec.dtype) if spec.dtype != "bfloat16" else None
+            known = spec.dtype in KNOWN_DTYPES
+        except TypeError:
+            known = False
+        if not known:
+            out.append(error(
+                "MT015", f"input {name!r} has unsupported dtype "
+                f"{spec.dtype!r}", span=(name,),
+                hint=f"use one of {KNOWN_DTYPES}"))
+        env[name] = spec
+
+    # nodes in execution order: def-before-use IS acyclicity here
+    node_names = set()
+    for n in prog.nodes:
+        if n.name in env:
+            out.append(error(
+                "MT001", f"node {n.name!r} redefines an existing tensor",
+                span=(n.name,)))
+        node_names.add(n.name)
+        ok = True
+        if n.op not in ARITY:
+            out.append(error(
+                "MT003", f"unknown op {n.op!r} on node {n.name!r}",
+                span=(n.name,),
+                hint="the op vocabulary is listed in core/kernel_ir.py"))
+            ok = False
+        elif len(n.inputs) != ARITY[n.op]:
+            out.append(error(
+                "MT004", f"{n.op} takes {ARITY[n.op]} operand(s); node "
+                f"{n.name!r} has {len(n.inputs)}", span=(n.name,)))
+            ok = False
+        for i in n.inputs:
+            if i not in env:
+                later = i == n.name or any(m.name == i
+                                           for m in prog.nodes)
+                code = "MT013" if later else "MT002"
+                what = ("itself" if i == n.name else
+                        f"{i!r} before its definition" if later
+                        else f"undefined tensor {i!r}")
+                out.append(error(
+                    code, f"node {n.name!r} reads {what}",
+                    span=(n.name, i),
+                    hint=("nodes execute in tuple order; a backward "
+                          "edge is a cycle" if code == "MT013" else "")))
+                ok = False
+        if ok and not any(i in broken for i in n.inputs):
+            specs = [env[i] for i in n.inputs]
+            before = len(out)
+            _check_shapes(n, specs, out)
+            _check_dtypes(n, specs, out)
+            if any(d.is_error for d in out[before:]):
+                broken.add(n.name)
+            try:
+                env[n.name] = _infer(n, env)
+            except Exception:
+                broken.add(n.name)
+        else:
+            broken.add(n.name)
+        env.setdefault(n.name, TensorSpec(()))
+
+    # outputs
+    for o in prog.outputs:
+        if o not in env:
+            out.append(error(
+                "MT007", f"program output {o!r} is not produced by any "
+                "node or input", span=(o,)))
+
+    # liveness: a node no node reads and no output names is dead code
+    used: set[str] = set(prog.outputs)
+    for n in prog.nodes:
+        used.update(n.inputs)
+    for n in prog.nodes:
+        if n.name not in used:
+            out.append(warning(
+                "MT008", f"node {n.name!r} feeds no node and no output",
+                span=(n.name,),
+                hint="drop it or add it to outputs if intended"))
+    for name, _ in prog.inputs:
+        if name not in used:
+            out.append(warning(
+                "MT009", f"input {name!r} is never read", span=(name,)))
+
+    # fusion groups: exact partition, connected, templates exist
+    seen: set[str] = set()
+    for g in prog.fusion_groups:
+        for m in g:
+            if m not in node_names:
+                out.append(error(
+                    "MT010", f"fusion group member {m!r} is not a node",
+                    span=g))
+            elif m in seen:
+                out.append(error(
+                    "MT010", f"node {m!r} appears in more than one "
+                    "fusion group", span=g))
+            seen.add(m)
+        if not _group_connected(g, prog.node_map):
+            out.append(error(
+                "MT014", f"fusion group {g} is not dataflow-connected",
+                span=g,
+                hint="fusion may only merge dataflow-adjacent kernels"))
+        if len(g) > 1 and all(m in node_names for m in g):
+            from repro.core import rules
+            try:
+                rules.check_fusion_pattern(prog, g)
+            except rules.CompileError as e:
+                d = getattr(e, "diagnostic", None)
+                out.append(d if d is not None else error(
+                    "MT011", str(e), span=g))
+    missing = node_names - seen
+    if missing:
+        out.append(error(
+            "MT010", f"nodes {sorted(missing)} belong to no fusion "
+            "group", span=tuple(sorted(missing))))
+
+    # schedules key on group roots
+    roots = {g[0] for g in prog.fusion_groups}
+    for root, _sched in prog.schedules:
+        if root not in roots:
+            out.append(error(
+                "MT012", f"schedule keyed on {root!r}, which is not a "
+                "fusion-group root", span=(root,),
+                hint="schedules attach to the first node of a group"))
+    return out

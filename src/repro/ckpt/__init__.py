@@ -92,7 +92,7 @@ def restore(directory: str, step: int, *, shardings=None):
         arr = np.load(os.path.join(d, leaf["file"]))
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != leaf["crc"]:
-            raise IOError(f"checkpoint corruption in {leaf['name']}")
+            raise OSError(f"checkpoint corruption in {leaf['name']}")
         arrays[leaf["name"]] = arr
     params = _unflatten_prefix(arrays, "params")
     opt = _unflatten_prefix(arrays, "opt") if any(

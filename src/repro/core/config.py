@@ -67,7 +67,7 @@ class OptimizeConfig:
     measurer: object = None
     rerank_top_k: int = 0
 
-    def replace(self, **kw) -> "OptimizeConfig":
+    def replace(self, **kw) -> OptimizeConfig:
         return dataclasses.replace(self, **kw)
 
 

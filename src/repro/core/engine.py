@@ -88,6 +88,10 @@ class TranspositionStore:
         self.edges: dict[tuple[str, str], tuple[str, str | None, str]] = {}
         # (task_fp, prog_fp, seed) -> bool
         self.checks: dict[tuple[str, str, int], bool] = {}
+        # prog_fp -> static analysis verdict (error-free?) — the cheap
+        # pre-oracle gate; a pure function of the program (portability
+        # envelope), so it shares the no-invalidation contract
+        self.analysis: dict[str, bool] = {}
         # (eval_fp, seed) -> oracle outputs
         self.outputs: dict[tuple[str, int], list[jax.Array]] = {}
         # (input-spec repr, seed) -> generated inputs: a task and its
@@ -98,6 +102,8 @@ class TranspositionStore:
                       "check_evals": 0, "check_hits": 0,
                       "check_structural": 0,
                       "oracle_runs": 0, "oracle_hits": 0,
+                      "analysis_evals": 0, "analysis_hits": 0,
+                      "analysis_rejects": 0,
                       "evictions": 0, "evicted_programs": 0}
         # segmented-LRU bookkeeping for capacity eviction: a logical
         # clock of last use and a touch count per fingerprint (entries
@@ -246,16 +252,42 @@ class TranspositionStore:
             self.outputs[key] = outs
         return outs
 
+    def analysis_ok(self, prog: KernelProgram) -> bool:
+        """Memoized static-analysis verdict (``repro.analysis``,
+        portability envelope): True when the program carries no ERROR
+        diagnostics.  Milliseconds vs the oracle's compile+execute, so
+        ``check`` consults it first and statically-rejected programs
+        never cost an oracle evaluation."""
+        fp = self.fingerprint(prog)
+        hit = self.analysis.get(fp)
+        if hit is not None:
+            self._bump("analysis_hits")
+            return hit
+        self._bump("analysis_evals")
+        from repro.analysis.legality import analyze_program
+        try:
+            ok = not any(d.is_error for d in analyze_program(prog))
+        except Exception:
+            # the analyzer must never turn a checkable program into an
+            # unserved request: an analyzer crash means "no verdict"
+            ok = True
+        with self._lock:
+            self.analysis[fp] = ok
+        return ok
+
     def check(self, task: KernelProgram, prog: KernelProgram, *,
               seed: int = CHECK_SEED, rtol: float = CHECK_RTOL,
               atol: float = CHECK_ATOL) -> bool:
         """Memoized tier-2 validation of ``prog`` against ``task``.
 
-        Schedule-only rewrites (equal eval-fingerprints: same op graph,
-        different tilings/pipelining/loop orders) are accepted
-        structurally — the oracle would compare an array with itself.
-        Everything else runs through the memoized oracle, at the
-        per-output tolerances the program's rewrite rules declare (a
+        Static analysis gates first (memoized by fingerprint): a
+        program the verifier/legality passes reject is failed
+        immediately and never costs an oracle run.  Schedule-only
+        rewrites (equal eval-fingerprints: same op graph, different
+        tilings/pipelining/loop orders) are then accepted structurally
+        — the oracle would compare an array with itself.  Everything
+        else runs through the memoized oracle, at the per-output
+        tolerances the program's rewrite rules declare (a
         reduced-precision rewrite relaxes only the outputs its marked
         nodes reach; the relaxation is a pure function of the program,
         so the memo key stays sound)."""
@@ -267,6 +299,11 @@ class TranspositionStore:
         if hit is not None:
             self._bump("check_hits")
             return hit
+        if not self.analysis_ok(prog):
+            self._bump("analysis_rejects")
+            with self._lock:
+                self.checks[key] = False
+            return False
         self._bump("check_evals")
         if task.eval_fingerprint() == prog.eval_fingerprint():
             self._bump("check_structural")
@@ -288,7 +325,7 @@ class TranspositionStore:
 
     # -- capacity: segmented-LRU slab eviction ----------------------------------
     def evict_lru(self, keep: int, *,
-                  protect: "set[str] | frozenset[str]" = frozenset()
+                  protect: set[str] | frozenset[str] = frozenset()
                   ) -> int:
         """Evict the coldest programs down to ``keep``, dropping their
         cost/edge/check/oracle entries in the same slab; returns the
@@ -338,6 +375,8 @@ class TranspositionStore:
                           if k[0] not in drop and v[1] not in drop}
             self.checks = {k: v for k, v in self.checks.items()
                            if k[0] not in drop and k[1] not in drop}
+            self.analysis = {k: v for k, v in self.analysis.items()
+                             if k not in drop}
             # oracle outputs/inputs key by eval-fingerprint / input
             # spec, shared across programs: the refcounts maintained at
             # register time say which keys just became unreachable, so
@@ -391,7 +430,7 @@ class EngineConfig:
 
     @classmethod
     def from_optimize(cls, oc: OptimizeConfig, *, workers: int = 0,
-                      seed_stride: int = 0) -> "EngineConfig":
+                      seed_stride: int = 0) -> EngineConfig:
         """Project an OptimizeConfig onto the engine's legacy config
         record (kept because serve-side keys and logs stringify it).
         Instance-valued target/strategy collapse to their names."""

@@ -335,7 +335,7 @@ class OfflineTree:
         node = self.nodes[fp]
         out = []
         import ast
-        for k, (child, status) in node.children.items():
+        for k, (_child, status) in node.children.items():
             kind, region, param = k.split("|", 2)
             out.append((A.Action(kind, region,
                                  ast.literal_eval(param)), status))

@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Mapping
+from collections.abc import Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -105,11 +106,11 @@ class KernelProgram:
         return self.schedule_map.get(self.group_root(group),
                                      KernelSchedule())
 
-    def replace(self, **kw) -> "KernelProgram":
+    def replace(self, **kw) -> KernelProgram:
         return dataclasses.replace(self, **kw)
 
     def with_schedule(self, group_root: str,
-                      sched: KernelSchedule) -> "KernelProgram":
+                      sched: KernelSchedule) -> KernelProgram:
         sm = self.schedule_map
         sm[group_root] = sched
         return self.replace(schedules=tuple(sorted(sm.items())))
@@ -385,7 +386,8 @@ def _np_dtype(name: str):
         try:
             import ml_dtypes
         except ImportError:  # pragma: no cover - ml_dtypes ships w/ jax
-            raise NotImplementedError("bfloat16 mirror needs ml_dtypes")
+            raise NotImplementedError(
+                "bfloat16 mirror needs ml_dtypes") from None
         return ml_dtypes.bfloat16
     return np.dtype(name)
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -124,7 +124,7 @@ class PPOTrainer:
         traj: list[Transition] = []
         env.reset()
         final_speedup = 1.0
-        for t in range(self.env_cfg.max_steps):
+        for _t in range(self.env_cfg.max_steps):
             prog = env.program()
             cands = env.candidates()[: self.cfg.max_candidates]
             tokens, mask, _ = build_candidate_batch(self.pcfg, prog,
@@ -168,7 +168,7 @@ class PPOTrainer:
         for it in range(iters or cfg.iters):
             batch_tr: list[Transition] = []
             advs, rets, speedups = [], [], []
-            for e in range(cfg.episodes_per_iter):
+            for _e in range(cfg.episodes_per_iter):
                 tree = self.trees[names[rng.integers(len(names))]]
                 env = OfflineEnv(tree, self.env_cfg)
                 key, sub = jax.random.split(key)

@@ -35,6 +35,7 @@ import itertools
 
 import numpy as np
 
+from repro.analysis.diagnostics import Diagnostic, error
 from repro.core import hardware
 from repro.core.actions import Action, STOP, fusion_candidates
 from repro.core.kernel_ir import (ELEMENTWISE, KernelProgram,
@@ -72,7 +73,21 @@ def bucket(v: int) -> str:
 
 
 class CompileError(Exception):
-    pass
+    """A rewrite/legality failure.  When the failure maps to a stable
+    analysis code the raiser attaches the ``Diagnostic`` (code + node
+    span + fix-hint, see ``repro.analysis.diagnostics``) so callers —
+    the serve path, the measure harness, the lint CLI — can surface
+    structured context instead of a bare string."""
+
+    def __init__(self, message: str, diagnostic: Diagnostic = None):
+        super().__init__(message)
+        self.diagnostic = diagnostic
+
+
+def _compile_error(code: str, message: str, *, span: tuple = (),
+                   hint: str = "") -> CompileError:
+    return CompileError(message, error(code, message, span=span,
+                                       hint=hint))
 
 
 def group_for_root(prog: KernelProgram, root: str) -> tuple[str, ...]:
@@ -142,26 +157,35 @@ def check_tiles(prog: KernelProgram, group, tiles) -> None:
     main = next((nm[n] for n in group
                  if sched_kind(nm[n].op) == kind), nm[group[0]])
     dims = tileable_dims(main, shapes, prog.input_specs)
+    span = (main.name,)
     for tname, t in tiles.items():
         if dims and tname not in dims:
-            raise CompileError(
+            raise _compile_error(
+                "MT020",
                 f"tile parameter {tname!r} not applicable to "
-                f"{kind} kernel {main.name} (has {sorted(dims)})")
+                f"{kind} kernel {main.name} (has {sorted(dims)})",
+                span=span, hint=f"use one of {sorted(dims)}")
         if tname in dims:
             if dims[tname] % t != 0:
-                raise CompileError(
+                raise _compile_error(
+                    "MT021",
                     f"tile {tname}={t} does not divide dim "
-                    f"{dims[tname]} of {main.name}")
+                    f"{dims[tname]} of {main.name}",
+                    span=span, hint=f"pick a divisor of {dims[tname]}")
             if kind in ("matmul", "grouped_matmul",
                         "flash_attention") and t % 8 != 0:
-                raise CompileError(
-                    f"tile {tname}={t} violates TPU lane alignment")
+                raise _compile_error(
+                    "MT022",
+                    f"tile {tname}={t} violates TPU lane alignment",
+                    span=span, hint="tiles must be multiples of 8")
     vmem = vmem_tile_bytes(kind, tiles, dims)
     depth = max(1, sched.pipeline_depth)
     if vmem * (1 + (depth - 1)) > VMEM_BYTES:
-        raise CompileError(
+        raise _compile_error(
+            "MT023",
             f"VMEM overflow: {vmem * depth / 2**20:.1f}MiB "
-            f"(depth {depth}) > 16MiB")
+            f"(depth {depth}) > 16MiB",
+            span=span, hint="shrink tiles or lower pipeline_depth")
 
 
 def check_fusion_pattern(prog: KernelProgram, merged) -> None:
@@ -183,8 +207,10 @@ def check_fusion_pattern(prog: KernelProgram, merged) -> None:
     if anchors and anchors[0] in ("rwkv_chunk", "ssm_chunk") and \
             all(o in ELEMENTWISE or o == anchors[0] for o in ops):
         return
-    raise CompileError(
-        f"no fused-kernel template for op pattern {ops}")
+    raise _compile_error(
+        "MT011", f"no fused-kernel template for op pattern {ops}",
+        span=tuple(merged),
+        hint="legal patterns are listed in check_fusion_pattern")
 
 
 def epilogue_of(prog: KernelProgram, merged) -> str:

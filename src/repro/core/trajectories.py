@@ -85,9 +85,9 @@ def collect(task: KernelProgram, ccfg: CollectConfig | None = None,
                 continue                      # stay, try another action
             fp = child
 
-    for ep in range(ccfg.episodes_random):
+    for _ep in range(ccfg.episodes_random):
         rollout(lambda fp, cands: cands[rng.integers(len(cands))])
-    for ep in range(ccfg.episodes_greedy):
+    for _ep in range(ccfg.episodes_greedy):
         def pick(fp, cands):
             if rng.random() < ccfg.eps:
                 return cands[rng.integers(len(cands))]

@@ -72,7 +72,7 @@ class ShardingRules:
                             for a in self.rules.get("batch", ())] or [1]))
 
     # -- functional updates ------------------------------------------------
-    def replace(self, **kw) -> "ShardingRules":
+    def replace(self, **kw) -> ShardingRules:
         """Override individual logical-axis rules (values: mesh-axis
         tuples), e.g. ``rules.replace(kv_seq=("data", "model"))``."""
         new = dict(self.rules)
@@ -80,12 +80,12 @@ class ShardingRules:
             new[k] = tuple(v)
         return ShardingRules(self.mesh, new, self.flags)
 
-    def with_fsdp(self) -> "ShardingRules":
+    def with_fsdp(self) -> ShardingRules:
         """Shard the embed (weight-column) axis over data: FSDP."""
         return self.replace(embed=("data",) if "data" in
                             self.mesh.axis_names else ())
 
-    def with_flags(self, *flags: str) -> "ShardingRules":
+    def with_flags(self, *flags: str) -> ShardingRules:
         return ShardingRules(self.mesh, self.rules,
                              self.flags | set(flags))
 

@@ -9,4 +9,4 @@ from __future__ import annotations
 from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
-    getattr(_pltpu, "TPUCompilerParams")
+    _pltpu.TPUCompilerParams

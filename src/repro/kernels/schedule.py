@@ -14,7 +14,7 @@ the Pallas kernels below consume them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from collections.abc import Mapping
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +41,7 @@ class KernelSchedule:
     def block(self, name: str, default: int) -> int:
         return int(self.blocks_dict.get(name, default))
 
-    def replace(self, **kw) -> "KernelSchedule":
+    def replace(self, **kw) -> KernelSchedule:
         if isinstance(kw.get("blocks"), Mapping):
             kw["blocks"] = tuple(sorted(kw["blocks"].items()))
         return dataclasses.replace(self, **kw)

@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Iterable
+from collections.abc import Iterable
 
 from repro.core import cost_model, hardware
 from repro.core.cost_model import GroupCost, ProgramCost
@@ -67,7 +67,7 @@ class Calibration:
                 "residual_rms": self.residual_rms}
 
     @classmethod
-    def from_json(cls, d: dict) -> "Calibration":
+    def from_json(cls, d: dict) -> Calibration:
         return cls(
             factors=tuple((tuple(k), float(v))
                           for k, v in d["factors"]),
@@ -80,7 +80,7 @@ class Calibration:
             json.dump(self.to_json(), f, indent=1, sort_keys=True)
 
     @classmethod
-    def load(cls, path: str) -> "Calibration":
+    def load(cls, path: str) -> Calibration:
         with open(path) as f:
             return cls.from_json(json.load(f))
 

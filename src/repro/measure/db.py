@@ -64,7 +64,7 @@ import json
 import os
 import threading
 import time
-from typing import Callable, Iterator
+from collections.abc import Callable, Iterator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +90,7 @@ class MeasureSample:
         return d
 
     @classmethod
-    def from_json(cls, d: dict) -> "MeasureSample":
+    def from_json(cls, d: dict) -> MeasureSample:
         return cls(task_fp=d["task_fp"], prog_fp=d["prog_fp"],
                    target=d["target"], env_fp=d["env_fp"],
                    time_s=float(d["time_s"]),

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -356,11 +356,12 @@ class ExecutionHarness:
         self.cfg = cfg or MeasureConfig()
         self.runner = runner
         self.stats = {"measured": 0, "db_hits": 0, "db_misses": 0,
-                      "verify_fallbacks": 0}
+                      "verify_fallbacks": 0, "analysis_rejects": 0}
         self._lock = threading.RLock()
         self._env_fps: dict[str, tuple[str, tuple]] = {}
         self._lowered: dict[str, LoweredProgram] = {}
         self._inputs: dict[tuple[str, int], dict] = {}
+        self._analysis: dict[str, tuple] = {}   # prog_fp -> error diags
 
     # -- environment ---------------------------------------------------------
     def env_fp(self, target=None) -> str:
@@ -385,6 +386,22 @@ class ExecutionHarness:
         return self._env_fps[hardware.resolve(target).name][1]
 
     # -- measurement ---------------------------------------------------------
+    def _analysis_errors(self, prog: KernelProgram) -> tuple:
+        """Memoized ERROR diagnostics for ``prog`` (portability
+        envelope) — the static gate in front of lowering/timing."""
+        fp = prog.fingerprint()
+        hit = self._analysis.get(fp)
+        if hit is None:
+            from repro.analysis.legality import analyze_program
+            try:
+                hit = tuple(d for d in analyze_program(prog)
+                            if d.is_error)
+            except Exception:
+                hit = ()     # analyzer crash must not block measuring
+            with self._lock:
+                self._analysis[fp] = hit
+        return hit
+
     def measure(self, task: KernelProgram, prog: KernelProgram, *,
                 target=None) -> MeasureSample:
         tgt = hardware.resolve(target)
@@ -396,6 +413,17 @@ class ExecutionHarness:
                 with self._lock:
                     self.stats["db_hits"] += 1
                 return hit
+        # refuse to spend lowering + wall-clock on a program static
+        # analysis already rejects; the MeasureError carries the
+        # diagnostics (rerankers skip the candidate, like any failure)
+        errs = self._analysis_errors(prog)
+        if errs:
+            with self._lock:
+                self.stats["analysis_rejects"] += 1
+            raise MeasureError(
+                f"static analysis rejects {prog.name!r}: "
+                + "; ".join(d.render() for d in errs[:3])
+                + (f" (+{len(errs) - 3} more)" if len(errs) > 3 else ""))
         pc = cost_model.program_cost(prog, tgt)
         with self._lock:
             if self.db is not None:

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from collections.abc import Callable
 
 
 @dataclasses.dataclass
@@ -32,7 +32,7 @@ class Stopwatch:
     t0: float = 0.0
     s: float = 0.0
 
-    def __enter__(self) -> "Stopwatch":
+    def __enter__(self) -> Stopwatch:
         self.t0 = time.perf_counter()
         return self
 
@@ -42,7 +42,7 @@ class Stopwatch:
     # phase-timing API (dryrun's lower -> compile sequence):
     #   sw = stopwatch().start(); ...; t_lower = sw.lap(); ...;
     #   t_compile = sw.lap()
-    def start(self) -> "Stopwatch":
+    def start(self) -> Stopwatch:
         self.t0 = time.perf_counter()
         return self
 

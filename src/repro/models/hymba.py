@@ -193,7 +193,7 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     blocks = params["blocks"]
 
     for i in range(cfg.n_layers):
-        p = jax.tree.map(lambda a: a[i], blocks)
+        p = jax.tree.map(lambda a, i=i: a[i], blocks)
         is_global = i in cfg.global_layers
         h = ops.rmsnorm(x, p["attn_norm"], eps=cfg.norm_eps)
         q = linear(h, p["wq"], p.get("bq")).reshape(B, 1, H, hd)

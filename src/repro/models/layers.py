@@ -10,7 +10,7 @@ builders, and forwards take per-layer slices.
 """
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

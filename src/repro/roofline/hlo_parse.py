@@ -303,7 +303,7 @@ def _reach_multipliers(txt: str, comps) -> dict[str, float]:
 
 def _fused_bodies(comps) -> set[str]:
     bodies = set()
-    for cname, lines in comps.items():
+    for lines in comps.values():
         for line in lines:
             for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
                                   line):
@@ -372,12 +372,12 @@ def hlo_flops_bytes(txt: str) -> dict[str, float]:
         uses: dict[str, int] = defaultdict(int)
         consumers: dict[str, list[str]] = defaultdict(list)
         op_of = {name: op for name, _, op, _, _ in pending}
-        for name, tstr, op, operands, attrs in pending:
+        for _name, _tstr, op, operands, _attrs in pending:
             for oname in re.findall(r"%([\w.\-]+)", operands):
                 uses[oname] += 1
                 consumers[oname].append(op)
         virtual: set[str] = set()
-        for name, tstr, op, operands, attrs in pending:
+        for name, _tstr, op, _operands, _attrs in pending:
             if op == "fusion" and uses[name] == 1 and \
                     consumers[name] == ["fusion"]:
                 virtual.add(name)

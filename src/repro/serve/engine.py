@@ -312,6 +312,7 @@ class KernelService:
         self.n_requests = 0
         self.n_coalesced = 0
         self.n_warm_starts = 0
+        self.n_analysis_rejects = 0   # submissions refused at admission
         self._closed = False
         self._lock = threading.Lock()
         self._inflight: dict[tuple, cf.Future] = {}
@@ -328,11 +329,28 @@ class KernelService:
         return (task.fingerprint(), tgt.name,
                 None if seed is None else int(seed))
 
+    def _admit(self, task) -> None:
+        """Static-analysis admission gate: an ill-formed submission is
+        rejected synchronously with its diagnostics
+        (``repro.analysis.AnalysisError``) instead of a deep stack
+        trace out of the search/lowering machinery.  Memoized through
+        the store's per-fingerprint verdict, so the well-formed steady
+        state pays one dict lookup per request."""
+        if self.store.analysis_ok(task):
+            return
+        with self._lock:
+            self.n_analysis_rejects += 1
+        from repro.analysis.legality import check_program
+        check_program(task, name=task.name)       # raises AnalysisError
+
     def submit(self, task, seed: int | None = None,
                target=None) -> cf.Future:
         """Enqueue one optimize request; returns a Future resolving to
         its ``OptimizationResult``.  An identical in-flight request is
-        joined rather than re-searched (coalescing)."""
+        joined rather than re-searched (coalescing).  Submissions that
+        fail static analysis raise ``AnalysisError`` here, before any
+        search work is enqueued."""
+        self._admit(task)
         key = self._key(task, seed, target)
         with self._lock:
             if self._closed:
@@ -540,9 +558,11 @@ class KernelService:
             # this lock on the request path, and stats() may race it
             n_req, n_coal = self.n_requests, self.n_coalesced
             n_warm, inflight = self.n_warm_starts, len(self._inflight)
+            n_rej = self.n_analysis_rejects
         return dict(self.store.stats_dict(), requests=n_req,
                     coalesced=n_coal,
                     inflight=inflight,
+                    submit_analysis_rejects=n_rej,
                     target=self.target.name,
                     measured=m["measured"], db_hits=m["db_hits"],
                     db_misses=m["db_misses"],

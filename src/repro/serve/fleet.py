@@ -132,6 +132,7 @@ class Fleet:
         self._started = False
         self.dispatch_log: list[str] = []  # tenant per dispatch (tests)
         self.fleet_stats = {"admitted": 0, "rejected": 0,
+                            "analysis_rejects": 0,
                             "dispatched": 0, "completed": 0,
                             "failed": 0, "refined": 0,
                             "refine_errors": 0, "hot_swaps": 0}
@@ -198,6 +199,16 @@ class Fleet:
     # -- request path --------------------------------------------------------
     def submit(self, task, *, tenant: str = "default",
                seed: int | None = None, target=None) -> cf.Future:
+        # static-analysis admission: an ill-formed task never takes a
+        # queue slot — reject synchronously with the diagnostics, the
+        # same door ``max_pending`` saturation sheds load at.  The
+        # verdict memo lives in the first replica's store, so the
+        # steady state pays one dict lookup
+        if not self.replicas[0].store.analysis_ok(task):
+            with self._lock:
+                self.fleet_stats["analysis_rejects"] += 1
+            from repro.analysis.legality import check_program
+            check_program(task, name=task.name)   # raises AnalysisError
         fut: cf.Future = cf.Future()
         with self._lock:
             if self._closed:
@@ -369,6 +380,8 @@ class Fleet:
                       "verify_fallbacks", "fresh_applies",
                       "db_corrupt_records", "db_tmp_reaped",
                       "db_lock_timeouts", "db_winner_refreshes",
+                      "submit_analysis_rejects", "analysis_evals",
+                      "analysis_hits",
                       "evictions", "evicted_programs", "inflight"):
                 agg[k] += st.get(k, 0)
         with self._lock:

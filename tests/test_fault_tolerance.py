@@ -48,7 +48,7 @@ def test_ckpt_detects_corruption():
         arr = np.load(os.path.join(target, victim))
         arr.ravel()[0] += 1.0
         np.save(os.path.join(target, victim), arr)
-        with pytest.raises(IOError, match="corruption"):
+        with pytest.raises(OSError, match="corruption"):
             ckpt.restore(d, 1)
 
 

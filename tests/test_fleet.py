@@ -96,7 +96,7 @@ def test_threaded_put_get_no_torn_reads(tmp_path):
     bad = []
 
     def writer(wid):
-        for i in range(30):
+        for _i in range(30):
             db.put_winner(*KEY, {"id": wid, "blob": f"x{wid}" * 500})
 
     def reader():

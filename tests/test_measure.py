@@ -284,7 +284,7 @@ def test_harness_db_caching_and_env_keying(tmp_path):
                           cfg=MeasureConfig(repeats=2, warmup=0))
     assert h2.measure(task, task) == s1
     assert h2.stats == {"measured": 0, "db_hits": 1, "db_misses": 0,
-                        "verify_fallbacks": 0}
+                        "verify_fallbacks": 0, "analysis_rejects": 0}
     # a different MODE fingerprints differently -> fresh measurement
     h3 = ExecutionHarness(db=db, cfg=MeasureConfig(repeats=2, warmup=0,
                                                    mode="xla"))

@@ -6,8 +6,8 @@ per entry point), the config-xor-legacy TypeError, the cost-model
 consistency check, strategy-registry semantics, and the repo-wide AST
 gate that no in-repo call site still uses the deprecated kwargs.
 """
-import ast
 import os
+import sys
 import warnings
 
 import pytest
@@ -217,54 +217,16 @@ def test_strategy_registry_semantics():
 # repo-wide gate: no in-repo call site uses the deprecated kwargs
 # ---------------------------------------------------------------------------
 
-_DEPRECATED = {
-    "MTMCPipeline": {"mode", "curated", "extended_rules", "max_steps",
-                     "seed", "validate", "target", "strategy",
-                     "cost_model_override", "measurer", "rerank_top_k"},
-    "EvalEngine": {"mode", "curated", "extended", "max_steps", "seed",
-                   "validate", "target", "strategy", "rerank_top_k",
-                   "measurer", "cost_model"},
-    "KernelService": {"mode", "max_steps", "target", "strategy",
-                      "rerank_top_k"},
-    "Fleet": {"mode", "max_steps", "target", "strategy",
-              "rerank_top_k"},
-    "tune_model_kernels": {"target", "strategy", "measurer",
-                           "rerank_top_k"},
-}
-
-
-def _call_name(node):
-    f = node.func
-    if isinstance(f, ast.Name):
-        return f.id
-    if isinstance(f, ast.Attribute):
-        return f.attr
-    return None
-
-
 def test_no_in_repo_call_site_uses_deprecated_kwargs():
     """src/, benchmarks/ and examples/ must construct through
-    ``config=OptimizeConfig(...)``; only tests exercise the shims."""
-    offenders = []
-    for root in ("src", "benchmarks", "examples"):
-        for dirpath, _, files in os.walk(os.path.join(REPO, root)):
-            for fn in files:
-                if not fn.endswith(".py"):
-                    continue
-                path = os.path.join(dirpath, fn)
-                with open(path) as f:
-                    tree = ast.parse(f.read(), filename=path)
-                for node in ast.walk(tree):
-                    if not isinstance(node, ast.Call):
-                        continue
-                    bad = _DEPRECATED.get(_call_name(node))
-                    if not bad:
-                        continue
-                    used = {k.arg for k in node.keywords} & bad
-                    if used:
-                        offenders.append(
-                            f"{os.path.relpath(path, REPO)}:"
-                            f"{node.lineno} {_call_name(node)}"
-                            f"({sorted(used)})")
+    ``config=OptimizeConfig(...)``; only tests exercise the shims.
+    The AST walk lives in tools/repolint.py (shared with CI); this
+    test pins it into tier 1."""
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import repolint
+    finally:
+        sys.path.pop(0)
+    offenders = repolint.lint_config_kwargs(REPO)
     assert not offenders, (
         "deprecated optimizer kwargs at:\n" + "\n".join(offenders))

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""repolint — the repo's own source-level lint gates.
+
+One reusable home for the project-specific invariants that used to
+live as ad-hoc assertions inside two test files:
+
+  kind-literal   no layer outside ``core/rules.py`` dispatches on
+                 ``act.kind`` string literals (the PR-5 registry
+                 contract: behavior differences live in RewriteRule
+                 methods, not caller switches)
+  config-kwargs  no in-repo call site constructs ``MTMCPipeline`` /
+                 ``EvalEngine`` / ``KernelService`` / ``Fleet`` /
+                 ``tune_model_kernels`` through the deprecated flat
+                 optimizer kwargs — everything passes
+                 ``config=OptimizeConfig(...)`` (the PR-7 contract;
+                 only tests exercise the shims)
+
+Walks ``src/``, ``benchmarks/`` and ``examples/``.  Both CI and
+``tests/test_repolint.py`` call ``run_lints``; the CLI prints one
+``path:line: message`` per finding and exits 1 when any exist.
+
+  python tools/repolint.py [--repo DIR]
+
+No third-party dependencies — stdlib ``ast`` + ``re`` only, so it runs
+in any CI job before the package environment is even installed.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+
+ROOTS = ("src", "benchmarks", "examples")
+
+# -- kind-literal gate -------------------------------------------------------
+
+# action-ish receivers whose ``.kind`` must not be compared to literals
+KIND_LITERAL = re.compile(
+    r"\b(?:act|action|a|c|cand)\.kind\s*(?:==|!=)\s*['\"]"
+    r"|\b(?:act|action|a|c|cand)\.kind\s+in\s*[(\[]")
+
+# the registry itself is the one legitimate home of kind dispatch
+KIND_EXEMPT_FILES = ("rules.py",)
+
+# -- config-kwargs gate ------------------------------------------------------
+
+DEPRECATED_KWARGS: dict[str, set[str]] = {
+    "MTMCPipeline": {"mode", "curated", "extended_rules", "max_steps",
+                     "seed", "validate", "target", "strategy",
+                     "cost_model_override", "measurer", "rerank_top_k"},
+    "EvalEngine": {"mode", "curated", "extended", "max_steps", "seed",
+                   "validate", "target", "strategy", "rerank_top_k",
+                   "measurer", "cost_model"},
+    "KernelService": {"mode", "max_steps", "target", "strategy",
+                      "rerank_top_k"},
+    "Fleet": {"mode", "max_steps", "target", "strategy",
+              "rerank_top_k"},
+    "tune_model_kernels": {"target", "strategy", "measurer",
+                           "rerank_top_k"},
+}
+
+
+def _py_files(repo: str):
+    for root in ROOTS:
+        top = os.path.join(repo, root)
+        for dirpath, _, files in os.walk(top):
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_kind_literals(repo: str) -> list[str]:
+    """Registered-rule dispatch must go through the registry."""
+    offenders = []
+    for path in _py_files(repo):
+        if os.path.basename(path) in KIND_EXEMPT_FILES:
+            continue
+        with open(path) as f:
+            for i, line in enumerate(f, 1):
+                if KIND_LITERAL.search(line):
+                    offenders.append(
+                        f"{os.path.relpath(path, repo)}:{i}: "
+                        f"action-kind literal dispatch: {line.strip()}")
+    return offenders
+
+
+def _call_name(node: ast.Call):
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def lint_config_kwargs(repo: str) -> list[str]:
+    """In-repo construction goes through config=OptimizeConfig(...)."""
+    offenders = []
+    for path in _py_files(repo):
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            bad = DEPRECATED_KWARGS.get(_call_name(node))
+            if not bad:
+                continue
+            used = {k.arg for k in node.keywords} & bad
+            if used:
+                offenders.append(
+                    f"{os.path.relpath(path, repo)}:{node.lineno}: "
+                    f"deprecated optimizer kwargs "
+                    f"{_call_name(node)}({sorted(used)}) — pass "
+                    "config=OptimizeConfig(...)")
+    return offenders
+
+
+LINTS = (lint_kind_literals, lint_config_kwargs)
+
+
+def run_lints(repo: str) -> list[str]:
+    """All findings across every gate, ``path:line: message`` form."""
+    out: list[str] = []
+    for lint in LINTS:
+        out.extend(lint(repo))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repolint")
+    ap.add_argument("--repo", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="repository root (default: this script's parent)")
+    args = ap.parse_args(argv)
+    findings = run_lints(args.repo)
+    for f in findings:
+        print(f)
+    print(f"repolint: {len(findings)} finding(s) over "
+          f"{'/'.join(ROOTS)}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
