@@ -33,6 +33,16 @@ every row name present in BOTH files:
   speedup over beam's.  Must stay >= baseline - ``PSPD_SLACK`` (and
   the table asserts >= 1.0 absolutely): the trained policy must keep
   matching beam's solution quality.
+* ``coder_parity=`` (``benchmarks.table11_coder``): fraction of
+  closed-space tasks where the replay-LLM micro-coder lands a winner
+  fingerprint-identical to the structured coder's.  Deterministic
+  (committed transcripts, analytic search), so zero slack: a prompt,
+  parser or repair-loop change that breaks closed-space equivalence
+  fails CI.
+* ``open_gain=`` (same table): geomean LLM/structured speedup ratio on
+  the ragged-dimension open-space suite — the LLM coder's ability to
+  land verified programs outside the closed rule space.  Deterministic,
+  zero slack (the table also asserts > 1.0 absolutely).
 
 Modeled speedups are deliberately NOT gated — they move whenever the
 cost model or search deepens.
@@ -50,6 +60,8 @@ _RULES = re.compile(r"(?:^|;)rules_improved_frac=([0-9.]+)")
 _WARM = re.compile(r"(?:^|;)warm_rate=([0-9.]+)")
 _PEXP = re.compile(r"(?:^|;)policy_expansion_ratio=([0-9.]+)")
 _PSPD = re.compile(r"(?:^|;)policy_speedup_ratio=([0-9.]+)")
+_CPAR = re.compile(r"(?:^|;)coder_parity=([0-9.]+)")
+_OGAIN = re.compile(r"(?:^|;)open_gain=([0-9.]+)")
 
 RHO_SLACK = 0.3
 WARM_SLACK = 0.02
@@ -95,6 +107,14 @@ def parse_policy_expansion(path: str) -> dict[str, float]:
 
 def parse_policy_speedup(path: str) -> dict[str, float]:
     return _parse(path, _PSPD)
+
+
+def parse_coder_parity(path: str) -> dict[str, float]:
+    return _parse(path, _CPAR)
+
+
+def parse_open_gain(path: str) -> dict[str, float]:
+    return _parse(path, _OGAIN)
 
 
 def _gate(kind: str, base: dict[str, float], new: dict[str, float],
@@ -147,19 +167,26 @@ def main(argv: list[str]) -> int:
     n_pspd, pspd_drops = _gate(
         "policy_speedup_ratio", parse_policy_speedup(argv[1]),
         parse_policy_speedup(argv[2]), PSPD_SLACK)
+    n_cpar, cpar_drops = _gate(
+        "coder_parity", parse_coder_parity(argv[1]),
+        parse_coder_parity(argv[2]), 1e-9)
+    n_ogain, ogain_drops = _gate(
+        "open_gain", parse_open_gain(argv[1]),
+        parse_open_gain(argv[2]), 1e-9)
     if (n_acc == 0 and n_rho == 0 and n_rules == 0 and n_warm == 0
-            and n_pexp == 0 and n_pspd == 0):
+            and n_pexp == 0 and n_pspd == 0 and n_cpar == 0
+            and n_ogain == 0):
         print(f"error: no comparable rows between {argv[1]} and "
               f"{argv[2]}")
         return 2
     drops = (acc_drops + rho_drops + rules_drops + warm_drops
-             + pexp_drops + pspd_drops)
+             + pexp_drops + pspd_drops + cpar_drops + ogain_drops)
     for msg in drops:
         print(msg)
     if drops:
         return 1
     print("no execute-accuracy, rank-correlation, rule-ablation, "
-          "warm-start or policy-budget regressions")
+          "warm-start, policy-budget or micro-coder regressions")
     return 0
 
 

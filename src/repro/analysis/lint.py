@@ -12,6 +12,16 @@ Sources:
                              record's embedded program is analyzed;
                              sample records are structurally validated
                              (required keys present, numbers finite)
+  --transcripts DIR          recorded LLM micro-coder transcripts
+                             (``llmcoder.TranscriptStore`` jsonl
+                             shards): every embedded program is
+                             analyzed.  Repair chains are graded by
+                             their OUTCOME — a chain's highest-attempt
+                             response must analyze clean (or the chain
+                             must end in a recorded backend refusal);
+                             analyzer errors on earlier attempts are
+                             the repair loop working as designed and
+                             are counted, not failed
   --soundness                additionally run the rule-soundness
                              differential harness over the suite
                              programs x every registered rule
@@ -107,6 +117,8 @@ def main(argv=None) -> int:
                          "(empty to skip)")
     ap.add_argument("--db", action="append", default=[],
                     help="MeasureDB directory (repeatable)")
+    ap.add_argument("--transcripts", action="append", default=[],
+                    help="LLM-coder transcript directory (repeatable)")
     ap.add_argument("--target", default=None,
                     help="HardwareTarget name (default: portability "
                          "envelope)")
@@ -159,6 +171,68 @@ def main(argv=None) -> int:
                     report(path, analyze_program(prog, args.target))
             else:
                 structural.extend(_check_sample(rec, path))
+
+    for tdir in args.transcripts:
+        if not os.path.isdir(tdir):
+            structural.append(f"{tdir}: not a directory")
+            continue
+        # TranscriptStore skips undecodable lines on load; re-scan so a
+        # truncated/hand-mangled committed shard fails the lint
+        for shard in sorted(glob.glob(os.path.join(tdir, "*.jsonl"))):
+            with open(shard) as f:
+                for i, line in enumerate(f, 1):
+                    if not line.strip():
+                        continue
+                    try:
+                        json.loads(line)
+                    except json.JSONDecodeError as e:
+                        structural.append(
+                            f"{shard}:{i}: corrupt transcript line: {e}")
+        from repro.llmcoder.prompts import (ResponseParseError,
+                                            parse_response)
+        from repro.llmcoder.transcript import TranscriptStore
+        chains: dict[tuple, list[dict]] = {}
+        for rec in TranscriptStore(tdir).records():
+            ident = (rec.get("task_fp", ""), rec.get("prog_fp", ""),
+                     rec.get("action_key", ""))
+            chains.setdefault(ident, []).append(rec)
+        n_repair_rejects = n_tprogs = 0
+        for ident in sorted(chains):
+            recs = sorted(chains[ident],
+                          key=lambda r: int(r.get("attempt", 0)))
+            for rec in recs:
+                final = rec is recs[-1]
+                where = (f"{tdir}:{rec.get('task_fp', '')[:8]}/"
+                         f"{rec.get('action_key', '')}"
+                         f"@{rec.get('attempt', 0)}")
+                if rec.get("error"):
+                    # a recorded refusal: legitimate chain outcome (the
+                    # loop maps it to compile_error), nothing to analyze
+                    continue
+                try:
+                    prog = parse_response(rec.get("response") or "")
+                except ResponseParseError as e:
+                    if final:
+                        structural.append(
+                            f"{where}: chain ends on an unparseable "
+                            f"response: {e}")
+                    else:
+                        n_repair_rejects += 1
+                    continue
+                n_programs += 1
+                n_tprogs += 1
+                diags = analyze_program(prog, args.target)
+                errs = [d for d in diags if d.is_error]
+                if final:
+                    # the outcome the search consumed: must be clean
+                    report(where, diags)
+                elif errs:
+                    # expected: this reject is exactly what the next
+                    # attempt's feedback repaired
+                    n_repair_rejects += 1
+        print(f"{tdir}: {n_tprogs} transcript programs over "
+              f"{len(chains)} chains, {n_repair_rejects} repaired "
+              f"first-attempt rejects (expected)")
 
     for path in args.paths:
         try:

@@ -53,6 +53,11 @@ class OptimizeConfig:
     ``program_cost``/``total_s``, e.g. ``measure.CalibratedCostModel``);
     ``measurer`` a ``measure.ExecutionHarness`` for measured reranking
     of the search's top-``rerank_top_k`` survivors.
+    ``coder`` selects the Micro Coding implementation: the default
+    ``"structured"`` registry engine, an ``"llm*"`` spec string resolved
+    by ``repro.llmcoder.make_coder`` (``"llm-template"``, ``"llm-adapt"``,
+    ``"llm-replay:DIR"``), or a ``MicroCoder`` instance shared across
+    engines (``micro_coding.get_coder`` dispatches).
     """
 
     mode: str = "policy"
@@ -66,6 +71,7 @@ class OptimizeConfig:
     cost_model: object = None
     measurer: object = None
     rerank_top_k: int = 0
+    coder: object = "structured"   # spec string | MicroCoder instance
 
     def replace(self, **kw) -> OptimizeConfig:
         return dataclasses.replace(self, **kw)

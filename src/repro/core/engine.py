@@ -58,7 +58,7 @@ from repro.core.config import UNSET, OptimizeConfig, resolve_config
 from repro.core.env import action_key
 from repro.core.kernel_ir import (KernelProgram, evaluate, evaluate_np,
                                   make_inputs_np)
-from repro.core.micro_coding import ApplyResult, MicroCoder
+from repro.core.micro_coding import ApplyResult, MicroCoder, get_coder
 from repro.core.pipeline import (CHECK_ATOL, CHECK_RTOL, CHECK_SEED,
                                  MTMCPipeline, suite_metrics)
 
@@ -427,24 +427,28 @@ class EngineConfig:
     target: str | None = None     # hardware target name (None = default)
     strategy: str | None = None   # search strategy name (None = mode loop)
     rerank_top_k: int = 0  # measured reranking depth (needs a measurer)
+    coder: str = "structured"     # micro-coder name (serve keys stringify)
 
     @classmethod
     def from_optimize(cls, oc: OptimizeConfig, *, workers: int = 0,
                       seed_stride: int = 0) -> EngineConfig:
         """Project an OptimizeConfig onto the engine's legacy config
         record (kept because serve-side keys and logs stringify it).
-        Instance-valued target/strategy collapse to their names."""
+        Instance-valued target/strategy/coder collapse to their names."""
         tgt = oc.target
         if tgt is not None and not isinstance(tgt, str):
             tgt = hardware.resolve(tgt).name
         strat = oc.strategy
         if strat is not None and not isinstance(strat, str):
             strat = getattr(strat, "name", str(strat))
+        coder = oc.coder
+        if not isinstance(coder, str):
+            coder = getattr(coder, "name", "custom")
         return cls(mode=oc.mode, curated=oc.curated,
                    extended=oc.extended_rules, max_steps=oc.max_steps,
                    seed=oc.seed, validate=oc.validate, workers=workers,
                    seed_stride=seed_stride, target=tgt, strategy=strat,
-                   rerank_top_k=oc.rerank_top_k)
+                   rerank_top_k=oc.rerank_top_k, coder=coder)
 
     def to_optimize(self, *, measurer=None,
                     cost_model=None) -> OptimizeConfig:
@@ -453,7 +457,8 @@ class EngineConfig:
             extended_rules=self.extended, max_steps=self.max_steps,
             seed=self.seed, validate=self.validate, target=self.target,
             strategy=self.strategy, cost_model=cost_model,
-            measurer=measurer, rerank_top_k=self.rerank_top_k)
+            measurer=measurer, rerank_top_k=self.rerank_top_k,
+            coder=self.coder)
 
 
 class EvalEngine:
@@ -504,8 +509,13 @@ class EvalEngine:
                 oc, workers=0 if workers is UNSET else int(workers),
                 seed_stride=(0 if seed_stride is UNSET
                              else int(seed_stride)))
+        # ONE coder instance shared by every pipeline the engine builds:
+        # repair-loop telemetry aggregates across tasks/suites, and the
+        # store's edge memo stays coder-consistent (a store must never be
+        # shared between coders with different rewrite behavior)
+        self.coder = get_coder(oc.coder)
         # the resolved optimizer config every pipeline is built from
-        self.config = oc
+        self.config = oc.replace(coder=self.coder)
         if store is None:
             store = (TranspositionStore(cost_model=oc.cost_model)
                      if oc.cost_model is not None
@@ -552,3 +562,17 @@ class EvalEngine:
         else:
             results = [self.pipeline(s).optimize(t) for t, s in jobs]
         return suite_metrics(results)
+
+    def stats(self) -> dict:
+        """Store counters plus, for an LLM-backed coder, the repair-loop
+        telemetry (``coder_proposals``, ``coder_repairs``,
+        ``coder_analysis_rejects``, ``coder_oracle_rejects``,
+        ``coder_gave_up``, depth histogram) — ``coder_``-prefixed so the
+        store's own ``analysis_rejects`` key stays unambiguous."""
+        out = self.store.stats_dict()
+        coder_stats = getattr(self.coder, "stats_dict", None)
+        if callable(coder_stats):
+            out.update(coder_stats())
+        else:
+            out["coder_name"] = getattr(self.coder, "name", "structured")
+        return out

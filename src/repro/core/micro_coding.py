@@ -33,12 +33,7 @@ import jax
 from repro.core import rules as R
 from repro.core import actions as A
 from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
-
-# legacy re-exports (the constants moved to the registry module)
-from repro.core.rules import (CompileError, FUSABLE_EPILOGUES,  # noqa: F401
-                              VMEM_BYTES)
-
-_VALIDATE_RTOL = _VALIDATE_ATOL = 1e-3
+from repro.core.rules import CompileError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +44,9 @@ class ApplyResult:
 
 
 class MicroCoder(Protocol):
+    #: stable identity for telemetry and winner-db scoping
+    name: str
+
     def apply(self, prog: KernelProgram, act: A.Action) -> ApplyResult: ...
 
 
@@ -56,6 +54,11 @@ class MicroCoder(Protocol):
 
 class StructuredMicroCoder:
     """Deterministic rewrite engine: registry rules + tier-2 validation."""
+
+    name = "structured"
+    # tier-2 validation tolerances (opt-in via validate=True; the search
+    # engines run the oracle themselves at the rules' declared tolerances)
+    VALIDATE_RTOL = VALIDATE_ATOL = 1e-3
 
     def __init__(self, validate: bool = False, seed: int = 0):
         self.validate = validate
@@ -78,12 +81,33 @@ class StructuredMicroCoder:
     def _check(self, old: KernelProgram, new: KernelProgram) -> bool:
         key = jax.random.PRNGKey(self.seed)
         inputs = make_inputs(old, key)
-        per_tol = R.output_tolerances(new, _VALIDATE_RTOL,
-                                      _VALIDATE_ATOL)
+        per_tol = R.output_tolerances(new, self.VALIDATE_RTOL,
+                                      self.VALIDATE_ATOL)
         try:
             outs_old = evaluate(old, inputs)
             outs_new = evaluate(new, inputs)
         except Exception:
             return False
-        return R.outputs_match(outs_old, outs_new, _VALIDATE_RTOL,
-                               _VALIDATE_ATOL, per_output=per_tol)
+        return R.outputs_match(outs_old, outs_new, self.VALIDATE_RTOL,
+                               self.VALIDATE_ATOL, per_output=per_tol)
+
+
+# ---------------------------------------------------------------------------
+
+def get_coder(spec) -> MicroCoder:
+    """Resolve ``OptimizeConfig.coder`` to a ``MicroCoder`` instance.
+
+    ``None``/``"structured"`` is the deterministic registry engine;
+    ``"llm*"`` specs dispatch to ``repro.llmcoder.make_coder`` (imported
+    lazily — core stays importable without the subsystem and repolint's
+    backend-import gate holds); an object that already implements the
+    protocol passes through, so engines can share one coder instance
+    and aggregate its repair telemetry."""
+    if spec is None or spec == "structured":
+        return StructuredMicroCoder()
+    if hasattr(spec, "apply"):
+        return spec
+    if isinstance(spec, str) and spec.startswith("llm"):
+        from repro.llmcoder import make_coder
+        return make_coder(spec)
+    raise ValueError(f"unknown coder spec {spec!r}")

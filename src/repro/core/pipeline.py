@@ -25,7 +25,7 @@ from repro.core import cost_model, hardware, rules, search as S
 from repro.core.config import UNSET, OptimizeConfig, resolve_config
 from repro.core.env import EnvConfig, KernelEnv
 from repro.core.kernel_ir import KernelProgram, evaluate, make_inputs
-from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.micro_coding import get_coder
 from repro.core.policy import MacroPolicy
 
 
@@ -116,7 +116,10 @@ class MTMCPipeline:
         # returned instead of the analytic one
         self.measurer = cfg.measurer
         self.rerank_top_k = int(cfg.rerank_top_k)
-        self._coder = StructuredMicroCoder()
+        # Micro Coding implementation: the structured registry engine by
+        # default, or an LLM-backed coder ("llm*" specs / a shared
+        # MicroCoder instance from the engine) — see micro_coding.get_coder
+        self._coder = get_coder(cfg.coder)
 
     # -- cached primitives ---------------------------------------------------
     def _apply(self, prog, act):
@@ -154,6 +157,12 @@ class MTMCPipeline:
 
     # -- main loop -------------------------------------------------------------
     def optimize(self, task: KernelProgram) -> OptimizationResult:
+        # scope LLM-coder transcripts/telemetry to this request's root
+        # (no-op hook for coders without task state; thread-local inside
+        # the coder, so evaluate_suite workers don't race)
+        bind = getattr(self._coder, "bind_task", None)
+        if bind is not None:
+            bind(task)
         if self.strategy is not None:
             return self._search(task)
         rng = np.random.default_rng(self.seed)

@@ -263,6 +263,45 @@ def ext_tasks() -> list[KernelProgram]:
 
 
 # ---------------------------------------------------------------------------
+# open-space suite — outside the closed rule space's reachable set
+# ---------------------------------------------------------------------------
+
+def open_tasks() -> list[KernelProgram]:
+    """Ragged-dimension fused chains no registered rule template covers:
+    every dimension is chosen so NO closed tile preset (the 64..512
+    lane-ladder ``rules.tile_presets`` enumerates) divides it, while
+    lane-aligned divisors DO exist (e.g. 360 -> 8/24/40/72/120/360).
+    The structured coder therefore compile-errors every tiling proposal
+    and the naive default schedule is the best the closed space can do;
+    an LLM-backed micro-coder can still land a verified custom tiling.
+    The ``table11_coder.py`` open-space gate runs on these (kept out of
+    KB/TB so committed benchmark rows stay comparable across PRs).
+
+    Initial schedules carry NO explicit blocks: the stock 128-block
+    defaults do not divide ragged dims, so a default-tiled baseline
+    would be analyzer-illegal before any rewrite.  Blockless schedules
+    are legal everywhere and the cost model prices them at the implicit
+    128 defaults, so a landed custom tiling still shows up as a real
+    modeled gain."""
+    t = []
+    # ragged fused MLP: matmul -> bias -> gelu -> matmul on 360/600/840
+    t.append(chain_program("OPEN_ragged_mlp",
+                           {"x": (360, 600), "w1": (600, 840),
+                            "b1": (840,), "w2": (840, 360)},
+                           [("h", "matmul", ("x", "w1")),
+                            ("hb", "bias", ("h", "b1")),
+                            ("hg", "gelu", ("hb",)),
+                            ("y", "matmul", ("hg", "w2"))]))
+    # ragged plain GEMM: 440 x 1000 x 520
+    t.append(chain_program("OPEN_ragged_gemm",
+                           {"a": (440, 1000), "b": (1000, 520)},
+                           [("y", "matmul", ("a", "b"))]))
+    return [p.replace(schedules=tuple(
+        (root, s.replace(blocks=())) for root, s in p.schedules))
+        for p in t]
+
+
+# ---------------------------------------------------------------------------
 # policy-training tasks (disjoint from ALL benchmark instances)
 # ---------------------------------------------------------------------------
 
@@ -300,4 +339,5 @@ def train_tasks() -> list[KernelProgram]:
 
 
 SUITES = {"KB-L1": kb_level1, "KB-L2": kb_level2, "KB-L3": kb_level3,
-          "TB-T": tb_t, "TB-G": tb_g, "EXT": ext_tasks}
+          "TB-T": tb_t, "TB-G": tb_g, "EXT": ext_tasks,
+          "OPEN": open_tasks}

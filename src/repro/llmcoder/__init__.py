@@ -1,0 +1,63 @@
+"""LLM micro-coder subsystem: propose → lower → verify → repair.
+
+The paper's Micro Coding stage is a general-purpose LLM implementing
+one Macro proposal at a time; this package is that stage behind the
+``MicroCoder`` protocol.  ``make_coder`` maps the spec strings accepted
+by ``OptimizeConfig.coder`` to configured ``LLMMicroCoder`` instances —
+the only constructor the rest of the repo uses (``tools/repolint.py``
+forbids importing concrete backend classes outside this package):
+
+  "llm" / "llm-template"   deterministic strict template backend —
+                           registry-faithful, fingerprint-identical to
+                           the structured coder on the closed rule space;
+  "llm-adapt"              template backend that repairs illegal tiling
+                           requests after analyzer feedback (the
+                           open-space path);
+  "llm-replay:DIR"         serve recorded transcripts from DIR — the
+                           hermetic CI backend.
+
+Pass ``record=DIR`` to capture any backend's exchanges as replay
+fixtures (how ``benchmarks/table11_coder.py --record`` produces
+``tests/fixtures/llm_transcripts/``).
+"""
+from __future__ import annotations
+
+from repro.llmcoder.backend import (BackendError, CoderBackend,
+                                    CoderRequest, RecordingBackend,
+                                    ReplayBackend, TemplateBackend)
+from repro.llmcoder.loop import LLMMicroCoder, LoopConfig
+from repro.llmcoder.prompts import (ResponseParseError, build_prompt,
+                                    parse_response)
+from repro.llmcoder.transcript import (TranscriptStore, make_record,
+                                       transcript_key)
+
+__all__ = [
+    "BackendError", "CoderBackend", "CoderRequest", "LLMMicroCoder",
+    "LoopConfig", "RecordingBackend", "ReplayBackend",
+    "ResponseParseError", "TemplateBackend", "TranscriptStore",
+    "build_prompt", "make_coder", "make_record", "parse_response",
+    "transcript_key",
+]
+
+
+def make_coder(spec: str, *, record: str | None = None,
+               loop: LoopConfig | None = None) -> LLMMicroCoder:
+    """Build an ``LLMMicroCoder`` from an ``OptimizeConfig.coder`` spec
+    string (see module docstring for the vocabulary)."""
+    if spec in ("llm", "llm-template"):
+        backend: CoderBackend = TemplateBackend()
+    elif spec == "llm-adapt":
+        backend = TemplateBackend(adapt=True)
+    elif spec.startswith("llm-replay:"):
+        path = spec.split(":", 1)[1]
+        if not path:
+            raise ValueError("llm-replay spec needs a directory: "
+                             "'llm-replay:path/to/transcripts'")
+        backend = ReplayBackend(path)
+    else:
+        raise ValueError(
+            f"unknown coder spec {spec!r}: expected 'structured', 'llm', "
+            f"'llm-template', 'llm-adapt' or 'llm-replay:DIR'")
+    if record:
+        backend = RecordingBackend(backend, record)
+    return LLMMicroCoder(backend, loop)

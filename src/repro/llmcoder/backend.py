@@ -1,0 +1,251 @@
+"""Completion backends for the LLM micro-coder.
+
+``CoderBackend`` is the full seam a real LLM integration implements:
+one ``complete(request) -> text`` call.  Everything else — prompt
+construction, parsing, the analyzer/oracle gates, repair feedback,
+retries — lives in the loop (``loop.py``), so a backend stays a thin
+transport.  Two deterministic backends keep tier-1 CI hermetic with
+zero network:
+
+``TemplateBackend``
+    A stand-in "LLM" that perturbs registry rewrites.  In strict mode
+    (default) it emits exactly what ``rules.apply_rule`` produces and
+    refuses exactly when the registry refuses — fingerprint-identical
+    to ``StructuredMicroCoder`` on the closed rule space, which is what
+    the protocol-conformance suite and the store-cache parity gate
+    exercise.  In ``adapt`` mode it reproduces the failure-then-repair
+    shape of a real model on *tiling* requests the registry rejects:
+    attempt 0 eagerly stamps the requested tiles verbatim (the
+    analyzer rejects them with MT02x), and attempt >= 1 — after the
+    loop has fed those diagnostics back — legalizes the tiles against
+    the group's actual dimensions (nearest divisor, lane-aligned).
+    That legalized schedule is how the coder lands programs the closed
+    preset enumeration cannot reach (the open-space tasks).
+
+``ReplayBackend``
+    Serves recorded transcripts (``transcript.TranscriptStore``) keyed
+    by ``(task_fp, prog_fp, action_key, attempt)``.  Falls back to an
+    any-task record for the same (parent, action, attempt) edge —
+    sound because the coder contract requires task-independent answers
+    — and raises a non-transient ``BackendError`` on a true miss.
+    Recorded backend failures replay as failures.
+
+``RecordingBackend``
+    Wraps any backend and appends every exchange (refusals included)
+    to a ``TranscriptStore`` — how the committed fixtures under
+    ``tests/fixtures/llm_transcripts/`` are produced.
+
+Only ``repro.llmcoder`` may import these classes directly; every other
+module selects a coder by spec string through ``OptimizeConfig.coder``
+(``tools/repolint.py`` gates the seam).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+from repro.core import rules as R
+from repro.core.kernel_ir import (program_from_json, program_to_json,
+                                  sched_kind, sched_kind_of_group)
+from repro.llmcoder.transcript import TranscriptStore, make_record
+
+
+class BackendError(Exception):
+    """A completion failure.  ``transient=True`` marks retryable
+    faults (timeouts, rate limits, connection resets) the loop wraps
+    in exponential backoff; non-transient errors mean the backend
+    cannot answer this request at all (no recorded transcript, a
+    refusal) and map straight to a ``compile_error``."""
+
+    def __init__(self, message: str, *, transient: bool = False):
+        super().__init__(message)
+        self.transient = transient
+
+
+@dataclasses.dataclass(frozen=True)
+class CoderRequest:
+    """One completion request: the rendered prompt plus the structured
+    fields deterministic backends and the transcript store key on."""
+    task_fp: str
+    prog_fp: str
+    action_key: str
+    attempt: int
+    prompt: str
+    program: dict          # program_to_json of the parent
+    action: object         # the Macro Action being implemented
+    feedback: tuple = ()   # rendered diagnostics from prior attempts
+
+
+class CoderBackend:
+    """Abstract completion interface."""
+
+    name = "backend"
+    #: deterministic/local backends set True: the loop then skips the
+    #: per-attempt timeout thread (there is nothing to time out)
+    instant = False
+
+    def complete(self, req: CoderRequest) -> str:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+
+def _tile_request(prog, act):
+    """(group, kind, dims, requested_tiles) when ``act`` is a tiling-
+    shaped request against a real group, else None.  Detected
+    structurally (param = pairs naming the group's tileable dims), not
+    by kind literal — the registry owns kind dispatch."""
+    if not (act.param and isinstance(act.param[0], tuple)
+            and len(act.param[0]) == 2
+            and isinstance(act.param[0][0], str)):
+        return None
+    try:
+        g = R.group_for_root(prog, act.region)
+    except R.CompileError:
+        return None
+    kind = sched_kind_of_group(prog, g)
+    nm = prog.node_map
+    main = next((nm[n] for n in g if sched_kind(nm[n].op) == kind),
+                nm[g[0]])
+    dims = R.tileable_dims(main, prog.shapes(), prog.input_specs)
+    try:
+        tiles = dict(act.param)
+    except (TypeError, ValueError):
+        return None
+    if not tiles or not dims or not all(k in dims for k in tiles):
+        return None
+    return g, kind, dims, tiles
+
+
+def _legalize_tiles(kind: str, dims: dict, tiles: dict) -> dict:
+    """Snap each requested tile to the legal value nearest in log
+    space: a divisor of its dimension, aligned to the kind's lane
+    requirement.  Tiles with no legal value are dropped."""
+    align = 8 if kind in ("matmul", "grouped_matmul",
+                          "flash_attention") else 1
+    out = {}
+    for name, req in tiles.items():
+        dim = int(dims[name])
+        legal = [d for d in range(align, dim + 1, align)
+                 if dim % d == 0]
+        if not legal:
+            continue
+        out[name] = min(
+            legal, key=lambda d: (abs(math.log(d / max(req, 1))), d))
+    return out
+
+
+class TemplateBackend(CoderBackend):
+    """Deterministic registry-perturbing stand-in LLM (see module
+    docstring).  Pure function of the request — the transposition
+    store's coder contract."""
+
+    instant = True
+
+    def __init__(self, adapt: bool = False):
+        self.adapt = adapt
+        self.name = "template-adapt" if adapt else "template"
+
+    def complete(self, req: CoderRequest) -> str:
+        prog = program_from_json(req.program)
+        act = req.action
+        try:
+            child = R.apply_rule(prog, act)
+            return json.dumps(program_to_json(child), sort_keys=True)
+        except R.CompileError as e:
+            if not self.adapt:
+                raise BackendError(
+                    f"cannot implement {R.describe(act)}: {e}") from e
+            reject = e
+        tr = _tile_request(prog, act)
+        if tr is None:
+            raise BackendError(
+                f"cannot implement {R.describe(act)}: "
+                f"{reject}") from reject
+        g, kind, dims, tiles = tr
+        if req.attempt == 0:
+            # eager first draft: take the planner's numbers at face
+            # value — the loop's analyzer rejects this with the MT02x
+            # diagnostics the repair attempt then consumes
+            blocks = tiles
+        else:
+            blocks = _legalize_tiles(kind, dims, tiles)
+            if not blocks:
+                raise BackendError(
+                    f"no legal tiling for {R.describe(act)}: "
+                    f"{reject}") from reject
+        sched = prog.schedule_for(g).replace(blocks=blocks)
+        child = prog.with_schedule(act.region, sched)
+        if req.attempt > 0:
+            try:
+                R.check_tiles(child, g, blocks)
+            except R.CompileError as e2:
+                raise BackendError(
+                    f"legalized tiling still illegal: {e2}") from e2
+        return json.dumps(program_to_json(child), sort_keys=True)
+
+
+class ReplayBackend(CoderBackend):
+    """Serves recorded transcripts; the hermetic CI backend."""
+
+    name = "replay"
+    instant = True
+
+    def __init__(self, transcripts: TranscriptStore | str):
+        if isinstance(transcripts, str):
+            transcripts = TranscriptStore(transcripts)
+        self.transcripts = transcripts
+        self.stats = {"replays": 0, "fallbacks": 0, "misses": 0}
+
+    def complete(self, req: CoderRequest) -> str:
+        rec = self.transcripts.lookup(req.task_fp, req.prog_fp,
+                                      req.action_key, req.attempt)
+        if rec is None:
+            rec = self.transcripts.lookup_any(req.prog_fp,
+                                              req.action_key,
+                                              req.attempt)
+            if rec is not None:
+                self.stats["fallbacks"] += 1
+        if rec is None:
+            self.stats["misses"] += 1
+            raise BackendError(
+                f"no recorded transcript for action "
+                f"{req.action_key!r} at attempt {req.attempt} "
+                f"(prog {req.prog_fp[:12]}...)")
+        self.stats["replays"] += 1
+        if rec.get("error"):
+            raise BackendError(rec["error"])
+        return rec["response"]
+
+
+class RecordingBackend(CoderBackend):
+    """Records every exchange of an inner backend to a store."""
+
+    def __init__(self, inner: CoderBackend,
+                 transcripts: TranscriptStore | str):
+        if isinstance(transcripts, str):
+            transcripts = TranscriptStore(transcripts)
+        self.inner = inner
+        self.transcripts = transcripts
+        self.name = f"recording-{inner.name}"
+
+    @property
+    def instant(self) -> bool:
+        return self.inner.instant
+
+    def complete(self, req: CoderRequest) -> str:
+        try:
+            resp = self.inner.complete(req)
+        except BackendError as e:
+            if not e.transient:
+                # refusals are part of the behavior replay must
+                # reproduce; transient faults are not (a retry answers)
+                self.transcripts.put(make_record(
+                    req.task_fp, req.prog_fp, req.action_key,
+                    req.attempt, prompt=req.prompt, error=str(e)))
+            raise
+        self.transcripts.put(make_record(
+            req.task_fp, req.prog_fp, req.action_key, req.attempt,
+            prompt=req.prompt, response=resp))
+        return resp

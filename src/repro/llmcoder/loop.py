@@ -1,0 +1,254 @@
+"""The verify-and-repair driver: ``LLMMicroCoder``.
+
+Implements the ``MicroCoder`` protocol over any ``CoderBackend``.  One
+``apply(prog, act)`` call is a bounded conversation:
+
+  attempt 0   build the propose-one-delta prompt, complete, parse;
+  gate        static analysis first (the PR-8 verifier + schedule
+              legality — milliseconds, catches the MT0xx classes), then
+              the numeric oracle against the parent at the tolerances
+              the child's rewrite rules declare;
+  repair      every rejection is rendered into feedback bullets
+              (diagnostics, oracle per-output max-|Δ| summary, parse
+              errors) and appended to the next attempt's prompt;
+  stop        success, a non-transient backend refusal, or
+              ``max_attempts`` exhausted (``gave_up``).
+
+Transient backend faults retry with exponential backoff *within* the
+same attempt (the prompt has not changed, so the attempt index — and
+hence the transcript replay key — must not move).  Slow backends are
+bounded by a per-attempt wall-clock timeout; deterministic local
+backends advertise ``instant`` and skip the timeout thread entirely.
+
+The resulting ``ApplyResult`` vocabulary is exactly the structured
+coder's: ``ok`` (verified child, history stamped with the action),
+``compile_error`` (could not land a legal program), ``wrong_result``
+(final attempt parsed and analyzed clean but failed the oracle).
+Determinism: with a deterministic backend, ``apply`` is a pure function
+of ``(prog.fingerprint(), action_key)`` — the contract the
+transposition store memoizes on.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import rules as R
+from repro.core.kernel_ir import (KernelProgram, evaluate, evaluate_np,
+                                  make_inputs_np, program_to_json)
+from repro.core.micro_coding import ApplyResult
+from repro.core.pipeline import CHECK_ATOL, CHECK_RTOL, CHECK_SEED
+from repro.llmcoder.backend import BackendError, CoderBackend, CoderRequest
+from repro.llmcoder.prompts import (ResponseParseError, build_prompt,
+                                    parse_response)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    """Repair-loop policy knobs (all bounded; nothing blocks forever)."""
+    max_attempts: int = 3          # propose + up to 2 repair rounds
+    attempt_timeout_s: float = 60.0
+    transient_retries: int = 2     # extra tries per attempt on transient
+    backoff_base_s: float = 0.05   # 0.05, 0.1, 0.2, ... between them
+    seed: int = CHECK_SEED
+    rtol: float = CHECK_RTOL
+    atol: float = CHECK_ATOL
+
+
+_COUNTERS = ("proposals", "repairs", "parse_rejects", "analysis_rejects",
+             "oracle_rejects", "backend_errors", "repaired_ok", "gave_up")
+
+
+class LLMMicroCoder:
+    """``MicroCoder`` over a completion backend (see module docstring)."""
+
+    def __init__(self, backend: CoderBackend,
+                 cfg: LoopConfig | None = None):
+        self.backend = backend
+        self.cfg = cfg or LoopConfig()
+        self.name = f"llm-{backend.name}"
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self.counters = {k: 0 for k in _COUNTERS}
+        # attempt index of each successful apply: [0]=first-try wins,
+        # [1]=recovered after one repair round, ...
+        self.repair_depth: dict[int, int] = {}
+
+    # -- task scoping --------------------------------------------------------
+    def bind_task(self, task: KernelProgram | None) -> None:
+        """Scope subsequent transcript keys to an optimization request's
+        root program.  Thread-local: ``evaluate_suite`` runs one task per
+        worker thread over one shared coder."""
+        self._local.task_fp = task.fingerprint() if task is not None else None
+
+    def _task_fp(self, prog: KernelProgram) -> str:
+        fp = getattr(self._local, "task_fp", None)
+        # unbound (direct protocol use): the parent program scopes itself
+        return fp if fp else prog.fingerprint()
+
+    # -- telemetry -----------------------------------------------------------
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[key] += n
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            out = {f"coder_{k}": v for k, v in self.counters.items()}
+            out["coder_repair_depth"] = dict(sorted(
+                self.repair_depth.items()))
+        out["coder_name"] = self.name
+        stats = getattr(self.backend, "stats", None)
+        if isinstance(stats, dict):
+            out.update({f"coder_backend_{k}": v for k, v in stats.items()})
+        return out
+
+    # -- entry point ---------------------------------------------------------
+    def apply(self, prog: KernelProgram, act) -> ApplyResult:
+        if R.is_terminal(act):
+            return ApplyResult("ok", prog, "terminal")
+        from repro.core.env import action_key as _akey
+        akey = _akey(act)
+        task_fp = self._task_fp(prog)
+        prog_fp = prog.fingerprint()
+        prog_json = program_to_json(prog)
+        feedback: list[str] = []
+        last: ApplyResult | None = None
+        for attempt in range(self.cfg.max_attempts):
+            self._bump("proposals")
+            if attempt:
+                self._bump("repairs")
+            prompt = build_prompt(prog, act, tuple(feedback))
+            req = CoderRequest(task_fp=task_fp, prog_fp=prog_fp,
+                               action_key=akey, attempt=attempt,
+                               prompt=prompt, program=prog_json,
+                               action=act, feedback=tuple(feedback))
+            try:
+                text = self._complete(req)
+            except BackendError as e:
+                self._bump("backend_errors")
+                # the backend cannot answer this request at all — more
+                # repair context would reach the same refusal
+                last = ApplyResult("compile_error", None,
+                                   f"backend: {e}")
+                break
+            try:
+                child = parse_response(text)
+            except ResponseParseError as e:
+                self._bump("parse_rejects")
+                feedback.append(f"response rejected: {e}; reply with "
+                                f"exactly one JSON program object")
+                last = ApplyResult("compile_error", None, f"parse: {e}")
+                continue
+            # the coder owns identity/provenance, never the model
+            child = child.replace(name=prog.name,
+                                  history=prog.history + (act.describe(),))
+            errs = self._static_errors(prog, child)
+            if errs:
+                self._bump("analysis_rejects")
+                feedback.extend(errs)
+                last = ApplyResult("compile_error", None,
+                                   "; ".join(errs))
+                continue
+            mismatch = self._oracle_mismatch(prog, child)
+            if mismatch:
+                self._bump("oracle_rejects")
+                feedback.append(mismatch)
+                last = ApplyResult("wrong_result", None, mismatch)
+                continue
+            if attempt:
+                self._bump("repaired_ok")
+            with self._lock:
+                self.repair_depth[attempt] = \
+                    self.repair_depth.get(attempt, 0) + 1
+            return ApplyResult("ok", child,
+                               "repaired" if attempt else "")
+        self._bump("gave_up")
+        return last or ApplyResult("compile_error", None, "no attempts")
+
+    # -- completion with timeout + transient backoff -------------------------
+    def _complete(self, req: CoderRequest) -> str:
+        delay = self.cfg.backoff_base_s
+        for retry in range(self.cfg.transient_retries + 1):
+            try:
+                if self.backend.instant:
+                    return self.backend.complete(req)
+                return self._complete_timed(req)
+            except BackendError as e:
+                if not e.transient or retry == self.cfg.transient_retries:
+                    raise
+                time.sleep(delay)
+                delay *= 2
+        raise BackendError("unreachable")  # pragma: no cover
+
+    def _complete_timed(self, req: CoderRequest) -> str:
+        # manual shutdown(wait=False): a hung backend must not hang the
+        # search with it (the worker thread is abandoned, not joined)
+        ex = cf.ThreadPoolExecutor(max_workers=1)
+        fut = ex.submit(self.backend.complete, req)
+        try:
+            return fut.result(timeout=self.cfg.attempt_timeout_s)
+        except cf.TimeoutError:
+            raise BackendError(
+                f"attempt timed out after {self.cfg.attempt_timeout_s}s",
+                transient=True) from None
+        finally:
+            ex.shutdown(wait=False)
+
+    # -- gates ---------------------------------------------------------------
+    def _static_errors(self, parent: KernelProgram,
+                       child: KernelProgram) -> list[str]:
+        """Contract + PR-8 analyzer rejections, rendered for feedback."""
+        out = []
+        if dict(child.inputs) != dict(parent.inputs):
+            out.append("input contract changed: the rewritten program "
+                       "must declare the same inputs")
+        if len(child.outputs) != len(parent.outputs):
+            out.append("output contract changed: the rewritten program "
+                       "must produce the same outputs")
+        if out:
+            return out
+        from repro.analysis.legality import analyze_program
+        try:
+            diags = analyze_program(child)
+        except Exception:           # analyzer crash: fail-open, like the
+            diags = []              # store's analysis_ok
+        return [d.render(child.name) for d in diags if d.is_error]
+
+    def _oracle_mismatch(self, parent: KernelProgram,
+                         child: KernelProgram) -> str:
+        """Empty string when the child matches the parent numerically;
+        else a per-output max-|Δ| summary for repair feedback."""
+        if child.eval_fingerprint() == parent.eval_fingerprint():
+            return ""               # schedule-only rewrite: same graph
+        inputs = make_inputs_np(parent, self.cfg.seed)
+        try:
+            try:
+                a = evaluate_np(parent, inputs)
+            except NotImplementedError:
+                a = jax.jit(lambda i: evaluate(parent, i))(inputs)
+            try:
+                b = evaluate_np(child, inputs)
+            except NotImplementedError:
+                b = jax.jit(lambda i: evaluate(child, i))(inputs)
+        except Exception as e:
+            return f"oracle execution failed: {e}"
+        per_tol = R.output_tolerances(child, self.cfg.rtol, self.cfg.atol)
+        if R.outputs_match(a, b, self.cfg.rtol, self.cfg.atol,
+                           per_output=per_tol):
+            return ""
+        deltas = []
+        for i, (x, y) in enumerate(zip(a, b)):
+            x = np.asarray(x, dtype=np.float64)
+            y = np.asarray(y, dtype=np.float64)
+            if x.shape != y.shape:
+                deltas.append(f"out[{i}] shape {y.shape} != {x.shape}")
+            else:
+                deltas.append(f"out[{i}] max|delta|="
+                              f"{float(np.max(np.abs(x - y))):.3e}")
+        return ("numeric mismatch vs parent program: "
+                + ", ".join(deltas))

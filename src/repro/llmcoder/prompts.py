@@ -1,0 +1,115 @@
+"""Prompt construction and response parsing for the LLM micro-coder.
+
+The serialization direction: a ``KernelProgram`` plus the Macro
+``Action`` become a *propose-one-delta* prompt — the backend is asked
+to return the FULL rewritten program as one JSON object in the
+``program_to_json`` schema, implementing exactly the one semantic
+action proposed (the paper's Micro Coding contract: one atomic
+optimization per step, never a whole-kernel regeneration).
+
+The parsing direction: ``parse_response`` extracts the first JSON
+object from the completion (tolerating chat framing and markdown code
+fences) and ``kernel_ir.program_from_json`` rebuilds the program.  The
+repair loop owns everything after that — identity/history stamping,
+the static-analysis gate, the numeric oracle.
+
+Prompts are deterministic in (program structure, action, feedback):
+the program is serialized with a neutral name and an empty history so
+two routes reaching the same fingerprint ask the byte-identical
+question — the property that makes transcript replay and the
+transposition store compose (DESIGN.md §16).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import rules as R
+from repro.core.kernel_ir import (KernelProgram, program_from_json,
+                                  program_to_json)
+
+
+class ResponseParseError(ValueError):
+    """The completion held no parseable program JSON."""
+
+
+_INSTRUCTIONS = """\
+You are a GPU/TPU kernel micro-coder.  You receive one kernel program
+in a JSON IR and ONE semantic optimization action proposed by a
+planning policy.  Implement exactly that action as a rewrite of the
+program and return the FULL rewritten program as a single JSON object
+in the same schema.  Rules:
+- implement only the proposed action; change nothing else;
+- keep the "inputs" and "outputs" contracts identical (same names,
+  shapes, dtypes) — the result is verified numerically against the
+  original;
+- schedule legality: tiles must divide their dimension, matmul-family
+  tiles must be multiples of 8, tiled buffers x pipeline depth must
+  fit 16MiB of VMEM;
+- reply with the JSON object only (no prose)."""
+
+
+def render_program(prog: KernelProgram) -> str:
+    """Deterministic, route-independent serialization for prompting."""
+    neutral = prog.replace(name="kernel", history=())
+    return json.dumps(program_to_json(neutral), sort_keys=True)
+
+
+def build_prompt(prog: KernelProgram, act, feedback=()) -> str:
+    parts = [_INSTRUCTIONS,
+             "\n## Program\n" + render_program(prog),
+             "\n## Proposed action\n" + R.describe(act)]
+    if feedback:
+        parts.append(
+            "\n## Previous attempt failed verification\n"
+            "Your earlier rewrite for this action was rejected.  Fix "
+            "the problems below and return a corrected program:\n"
+            + "\n".join(f"- {f}" for f in feedback))
+    return "\n".join(parts)
+
+
+def extract_json(text: str) -> dict:
+    """First JSON object in ``text``: tolerate code fences and prose
+    around it by brace-scanning from the first ``{``."""
+    start = text.find("{")
+    if start < 0:
+        raise ResponseParseError("no JSON object in response")
+    depth = 0
+    in_str = esc = False
+    for i in range(start, len(text)):
+        ch = text[i]
+        if in_str:
+            if esc:
+                esc = False
+            elif ch == "\\":
+                esc = True
+            elif ch == '"':
+                in_str = False
+            continue
+        if ch == '"':
+            in_str = True
+        elif ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                try:
+                    return json.loads(text[start:i + 1])
+                except json.JSONDecodeError as e:
+                    raise ResponseParseError(
+                        f"malformed JSON object: {e}") from e
+    raise ResponseParseError("unterminated JSON object in response")
+
+
+def parse_response(text: str) -> KernelProgram:
+    """Completion text -> ``KernelProgram`` (identity not yet stamped:
+    the repair loop overrides name/history from the actual parent)."""
+    if not isinstance(text, str) or not text.strip():
+        raise ResponseParseError("empty response")
+    payload = extract_json(text)
+    try:
+        return program_from_json(payload)
+    except ResponseParseError:
+        raise
+    except Exception as e:
+        raise ResponseParseError(
+            f"JSON does not decode to a program: {e}") from e

@@ -1,0 +1,147 @@
+"""Content-addressed record/replay of micro-coder LLM exchanges.
+
+Every request the verify-and-repair loop sends to a ``CoderBackend`` is
+keyed by ``(task_fp, prog_fp, action_key, attempt)`` — the full identity
+of *which question was asked*:
+
+  task_fp     the optimization request's root program (scopes a
+              recording session to the task it was captured under);
+  prog_fp     the parent program the delta is proposed against;
+  action_key  the Macro action being implemented (``env.action_key``);
+  attempt     the repair round.  The attempt index MUST be part of the
+              key: attempt 0 and attempt 2 carry different prompts (the
+              later one embeds the rendered diagnostics of the earlier
+              failures) and a real LLM answers them differently, so a
+              replay that collapsed attempts would hand the repair loop
+              answer N for question 0 and silently skip the repair path
+              it is supposed to reproduce (DESIGN.md §16).
+
+Records are JSON-lines files sharded by ``task_fp`` prefix so a
+recording session adds one reviewable file per task rather than
+hundreds of blobs.  The response field holds the backend's raw
+completion (the program JSON for a successful proposal); non-transient
+backend refusals are recorded too (``error``), so replay reproduces
+failures as faithfully as successes.  Committed fixtures live under
+``tests/fixtures/llm_transcripts/`` and are swept by
+``python -m repro.analysis.lint --transcripts``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+
+
+def transcript_key(task_fp: str, prog_fp: str, action_key: str,
+                   attempt: int) -> str:
+    """Stable content address of one request identity."""
+    raw = f"{task_fp}|{prog_fp}|{action_key}|{int(attempt)}"
+    return hashlib.sha256(raw.encode()).hexdigest()[:24]
+
+
+def make_record(task_fp: str, prog_fp: str, action_key: str,
+                attempt: int, *, prompt: str = "",
+                response: str | None = None,
+                error: str | None = None) -> dict:
+    """One transcript record.  The prompt itself is reconstructible
+    from (program, action, feedback), so only its hash is stored — the
+    committed fixtures stay reviewable and small while replay can still
+    detect a prompt-schema drift (``ReplayBackend`` warns via detail,
+    it does not refuse: the recorded ANSWER is still the answer to the
+    recorded question identity)."""
+    return {
+        "key": transcript_key(task_fp, prog_fp, action_key, attempt),
+        "task_fp": task_fp,
+        "prog_fp": prog_fp,
+        "action_key": action_key,
+        "attempt": int(attempt),
+        "prompt_sha": hashlib.sha256(prompt.encode()).hexdigest()[:16],
+        "response": response,
+        "error": error,
+    }
+
+
+class TranscriptStore:
+    """Directory of ``*.jsonl`` transcript shards with an in-memory
+    index.  Thread-safe; writes are append-only and idempotent (a
+    record whose key is already present is not re-written, so a
+    re-recording session leaves committed fixtures byte-stable)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self._lock = threading.Lock()
+        self._by_key: dict[str, dict] = {}
+        # exact and any-task lookups (see ReplayBackend's fallback)
+        self._exact: dict[tuple[str, str, str, int], str] = {}
+        self._by_edge: dict[tuple[str, str, int], list[str]] = {}
+        if os.path.isdir(root):
+            for fn in sorted(os.listdir(root)):
+                if fn.endswith(".jsonl"):
+                    self._load_shard(os.path.join(root, fn))
+
+    def _load_shard(self, path: str) -> None:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue       # lint --transcripts reports these
+                self._index(rec)
+
+    def _index(self, rec: dict) -> None:
+        key = rec.get("key")
+        if not key or key in self._by_key:
+            return
+        self._by_key[key] = rec
+        ident = (rec.get("task_fp"), rec.get("prog_fp"),
+                 rec.get("action_key"), int(rec.get("attempt", 0)))
+        self._exact[ident] = key
+        self._by_edge.setdefault(ident[1:], []).append(key)
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, task_fp: str, prog_fp: str, action_key: str,
+               attempt: int) -> dict | None:
+        with self._lock:
+            key = self._exact.get((task_fp, prog_fp, action_key,
+                                   int(attempt)))
+            return self._by_key.get(key) if key else None
+
+    def lookup_any(self, prog_fp: str, action_key: str,
+                   attempt: int) -> dict | None:
+        """Any-task fallback: the same (parent, action, attempt) edge
+        recorded under a different task root.  Sound because the coder
+        contract requires task-independence of the answer (the same
+        contract that lets ``TranspositionStore`` share edges across
+        tasks); first recorded wins deterministically."""
+        with self._lock:
+            keys = self._by_edge.get((prog_fp, action_key, int(attempt)))
+            return self._by_key[keys[0]] if keys else None
+
+    # -- record --------------------------------------------------------------
+    def put(self, rec: dict) -> str:
+        key = rec["key"]
+        with self._lock:
+            if key in self._by_key:
+                return key
+            self._index(rec)
+        os.makedirs(self.root, exist_ok=True)
+        shard = os.path.join(self.root,
+                             f"{rec['task_fp'][:16] or 'anon'}.jsonl")
+        line = json.dumps(rec, sort_keys=True)
+        with self._lock:
+            with open(shard, "a") as f:
+                f.write(line + "\n")
+        return key
+
+    # -- sweep (lint --transcripts) ------------------------------------------
+    def records(self) -> list[dict]:
+        with self._lock:
+            return list(self._by_key.values())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._by_key)

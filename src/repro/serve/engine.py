@@ -407,6 +407,12 @@ class KernelService:
         # tell which kind they hold.
         ec = self._engine.cfg
         sig = f"{ec.mode}|{ec.strategy}|{ec.max_steps}|{ec.curated}"
+        # a non-default coder is a different question too (an LLM coder
+        # may land programs the structured space cannot); the default
+        # leaves the signature unchanged so pre-existing winner records
+        # keep warm-starting structured services
+        if ec.coder != "structured":
+            sig += f"|{ec.coder}"
         tkey = f"{task.fingerprint()}#{sig}" if seed is None \
             else f"{task.fingerprint()}#{sig}#s{int(seed)}"
         return (tkey, tgt.name, self.harness.env_fp(tgt))
@@ -559,7 +565,11 @@ class KernelService:
             n_req, n_coal = self.n_requests, self.n_coalesced
             n_warm, inflight = self.n_warm_starts, len(self._inflight)
             n_rej = self.n_analysis_rejects
-        return dict(self.store.stats_dict(), requests=n_req,
+        coder_stats = getattr(self._engine.coder, "stats_dict", None)
+        coder = coder_stats() if callable(coder_stats) else {
+            "coder_name": getattr(self._engine.coder, "name",
+                                  "structured")}
+        return dict(self.store.stats_dict(), **coder, requests=n_req,
                     coalesced=n_coal,
                     inflight=inflight,
                     submit_analysis_rejects=n_rej,

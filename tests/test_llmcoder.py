@@ -1,0 +1,547 @@
+"""LLM micro-coder subsystem: protocol conformance, transcripts, the
+verify-and-repair loop, and the coder seam through config/engine/serve.
+
+The conformance suite runs the SAME properties against
+``StructuredMicroCoder`` and ``LLMMicroCoder(ReplayBackend)`` over the
+committed fixtures in ``tests/fixtures/llm_transcripts/`` — fully
+offline (the CI ``coder-replay`` job runs this file with zero network).
+"""
+import dataclasses
+import json
+import os
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import actions as A
+from repro.core import rules as R
+from repro.core import tasks as T
+from repro.core.config import OptimizeConfig
+from repro.core.engine import EngineConfig, EvalEngine, TranspositionStore
+from repro.core.kernel_ir import program_to_json
+from repro.core.micro_coding import (ApplyResult, StructuredMicroCoder,
+                                     get_coder)
+from repro.llmcoder import (BackendError, CoderBackend, CoderRequest,
+                            LLMMicroCoder, LoopConfig, ReplayBackend,
+                            TranscriptStore, make_coder, make_record,
+                            transcript_key)
+from repro.llmcoder.prompts import (ResponseParseError, build_prompt,
+                                    extract_json, parse_response,
+                                    render_program)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "llm_transcripts")
+STATUSES = {"ok", "compile_error", "wrong_result"}
+
+
+def _task(name="L1_matmul_0"):
+    by_name = {t.name: t for t in T.kb_level1() + T.open_tasks()}
+    return by_name[name]
+
+
+def _replay_coder() -> LLMMicroCoder:
+    return make_coder(f"llm-replay:{FIXTURES}")
+
+
+def _applicable_action(task):
+    """(action, rewritten-child JSON) for the first root action the
+    registry can implement — a known-good scripted response."""
+    for act in R.candidate_actions(task):
+        if R.is_terminal(act):
+            continue
+        try:
+            child = R.apply_rule(task, act)
+        except R.CompileError:
+            continue
+        return act, json.dumps(program_to_json(child), sort_keys=True)
+    raise AssertionError(f"no applicable action on {task.name}")
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance: one property suite, both coders
+# ---------------------------------------------------------------------------
+
+def _coders():
+    return [("structured", StructuredMicroCoder()),
+            ("llm-replay", _replay_coder())]
+
+
+@pytest.mark.parametrize("name,coder", _coders())
+def test_conformance_status_vocabulary(name, coder):
+    task = _task()
+    if hasattr(coder, "bind_task"):
+        coder.bind_task(task)
+    for act in R.candidate_actions(task):
+        res = coder.apply(task, act)
+        assert isinstance(res, ApplyResult)
+        assert res.status in STATUSES, (name, res.status)
+        if res.status == "ok":
+            assert res.program is not None
+        else:
+            assert res.program is None and res.detail
+
+
+@pytest.mark.parametrize("name,coder", _coders())
+def test_conformance_ok_children_verified(name, coder):
+    """Every ``ok`` child passes the engine's full check (analysis gate
+    + numeric oracle) and carries sane identity/provenance."""
+    task = _task()
+    if hasattr(coder, "bind_task"):
+        coder.bind_task(task)
+    store = TranspositionStore()
+    n_ok = 0
+    for act in R.candidate_actions(task):
+        if R.is_terminal(act):
+            continue
+        res = coder.apply(task, act)
+        if res.status != "ok":
+            continue
+        n_ok += 1
+        child = res.program
+        assert child.name == task.name
+        assert child.history == task.history + (act.describe(),)
+        assert dict(child.inputs) == dict(task.inputs)
+        assert store.check(task, child), (name, act.describe())
+    assert n_ok > 0
+
+
+def test_conformance_store_cache_parity():
+    """Fingerprint-keyed store results identical across coders on the
+    closed rule space — the property that lets a replica swap coders
+    without poisoning shared transposition-store edges."""
+    task = _task()
+    llm = _replay_coder()
+    llm.bind_task(task)
+    outcomes = {}
+    for tag, coder in (("s", StructuredMicroCoder()), ("l", llm)):
+        store = TranspositionStore()
+        for act in R.candidate_actions(task):
+            res = store.apply(coder, task, act)
+            fp = res.program.fingerprint() if res.status == "ok" else None
+            outcomes.setdefault(R.describe(act), {})[tag] = (res.status, fp)
+    for desc, o in outcomes.items():
+        assert o["s"] == o["l"], (desc, o)
+
+
+def test_replay_serves_fixtures_without_misses():
+    task = _task()
+    llm = _replay_coder()
+    llm.bind_task(task)
+    for act in R.candidate_actions(task):
+        llm.apply(task, act)
+    stats = llm.stats_dict()
+    assert stats["coder_backend_misses"] == 0
+    assert stats["coder_backend_replays"] > 0
+
+
+# ---------------------------------------------------------------------------
+# transcript store
+# ---------------------------------------------------------------------------
+
+def test_transcript_key_is_attempt_scoped():
+    k0 = transcript_key("t", "p", "a", 0)
+    k1 = transcript_key("t", "p", "a", 1)
+    assert k0 != k1 and len(k0) == 24
+    assert transcript_key("t", "p", "a", 0) == k0
+
+
+def test_transcript_store_roundtrip_and_idempotence(tmp_path):
+    root = str(tmp_path / "ts")
+    st = TranscriptStore(root)
+    rec = make_record("t1", "p1", "act", 0, prompt="q", response="r")
+    st.put(rec)
+    st.put(dict(rec, response="DIFFERENT"))  # same key: first wins
+    again = TranscriptStore(root)
+    assert len(again) == 1
+    got = again.lookup("t1", "p1", "act", 0)
+    assert got["response"] == "r"
+    assert "q" not in json.dumps(got)  # prompt stored as hash only
+    assert again.lookup("t1", "p1", "act", 1) is None
+
+
+def test_transcript_any_task_fallback(tmp_path):
+    st = TranscriptStore(str(tmp_path))
+    st.put(make_record("taskA", "p1", "act", 0, response="r"))
+    assert st.lookup("taskB", "p1", "act", 0) is None
+    assert st.lookup_any("p1", "act", 0)["response"] == "r"
+
+
+def test_replay_backend_replays_recorded_refusals(tmp_path):
+    st = TranscriptStore(str(tmp_path))
+    st.put(make_record("t", "p", "act", 0, error="cannot implement"))
+    be = ReplayBackend(st)
+    req = CoderRequest("t", "p", "act", 0, "", {}, None)
+    with pytest.raises(BackendError, match="cannot implement"):
+        be.complete(req)
+    with pytest.raises(BackendError, match="no recorded transcript"):
+        be.complete(CoderRequest("t", "p", "other", 0, "", {}, None))
+    assert be.stats["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# prompts / parsing
+# ---------------------------------------------------------------------------
+
+def test_render_program_is_route_independent():
+    task = _task()
+    a = task.replace(name="x", history=("step1",))
+    b = task.replace(name="y", history=())
+    assert render_program(a) == render_program(b)
+
+
+def test_build_prompt_embeds_feedback():
+    task = _task()
+    act, _ = _applicable_action(task)
+    p0 = build_prompt(task, act)
+    p1 = build_prompt(task, act, ("MT021: tile does not divide",))
+    assert p0 != p1 and "MT021" in p1 and "failed verification" in p1
+
+
+def test_extract_json_tolerates_fences_and_prose():
+    payload = {"a": [1, 2], "s": "brace } in string"}
+    text = f"Sure thing:\n```json\n{json.dumps(payload)}\n```\ndone"
+    assert extract_json(text) == payload
+    with pytest.raises(ResponseParseError):
+        extract_json("no json here")
+    with pytest.raises(ResponseParseError):
+        extract_json('{"unterminated": ')
+
+
+def test_parse_response_roundtrips_program_json():
+    task = _task()
+    text = json.dumps(program_to_json(task))
+    prog = parse_response(text)
+    assert prog.fingerprint() == task.fingerprint()
+    with pytest.raises(ResponseParseError):
+        parse_response("")
+    with pytest.raises(ResponseParseError):
+        parse_response('{"not": "a program"}')
+
+
+# ---------------------------------------------------------------------------
+# the verify-and-repair loop
+# ---------------------------------------------------------------------------
+
+class _ScriptedBackend(CoderBackend):
+    """Returns queued responses/exceptions in order."""
+    name = "scripted"
+    instant = True
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.requests = []
+
+    def complete(self, req):
+        self.requests.append(req)
+        item = self.script.pop(0)
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+
+def test_loop_parse_reject_then_repair():
+    task = _task()
+    act, good = _applicable_action(task)
+    be = _ScriptedBackend(["utter garbage", good])
+    coder = LLMMicroCoder(be)
+    res = coder.apply(task, act)
+    assert res.status == "ok" and res.detail == "repaired"
+    assert coder.counters["parse_rejects"] == 1
+    assert coder.counters["repaired_ok"] == 1
+    assert coder.repair_depth == {1: 1}
+    # the repair prompt carried the parse feedback
+    assert be.requests[1].attempt == 1
+    assert be.requests[1].feedback
+
+
+def test_loop_rejects_contract_changes():
+    task = _task()
+    act, _ = _applicable_action(task)
+    broken = task.replace(
+        inputs=task.inputs + (("zz_pad", task.inputs[0][1]),))
+    be = _ScriptedBackend([json.dumps(program_to_json(broken))] * 3)
+    coder = LLMMicroCoder(be)
+    res = coder.apply(task, act)
+    assert res.status == "compile_error"
+    assert "contract" in res.detail
+    assert coder.counters["gave_up"] == 1
+    assert coder.counters["analysis_rejects"] == 3
+
+
+def test_loop_oracle_rejects_wrong_numerics():
+    """A graph rewrite that changes results must be caught by the
+    numeric oracle and reported as wrong_result after attempts run out."""
+    task = _task("L1_matmul_0")  # square 512x512: operands swappable
+    act, _ = _applicable_action(task)
+    # same contract, same shapes, different math: matmul(b, a)
+    wrong = task.replace(nodes=tuple(
+        dataclasses.replace(n, inputs=("b", "a")) if n.op == "matmul"
+        else n for n in task.nodes))
+    assert wrong.eval_fingerprint() != task.eval_fingerprint()
+    be = _ScriptedBackend([json.dumps(program_to_json(wrong))] * 3)
+    coder = LLMMicroCoder(be)
+    res = coder.apply(task, act)
+    assert res.status == "wrong_result"
+    assert "max|delta|" in res.detail
+    assert coder.counters["oracle_rejects"] == 3
+    assert coder.counters["gave_up"] == 1
+    # the repair prompts carried the mismatch summary forward
+    assert any("mismatch" in f for f in be.requests[-1].feedback)
+
+
+def test_loop_transient_backoff_does_not_burn_attempts():
+    task = _task()
+    act, good = _applicable_action(task)
+    be = _ScriptedBackend([BackendError("rate limited", transient=True),
+                           BackendError("rate limited", transient=True),
+                           good])
+    coder = LLMMicroCoder(be, LoopConfig(backoff_base_s=0.001))
+    res = coder.apply(task, act)
+    assert res.status == "ok" and res.detail == ""  # no repair round
+    assert [r.attempt for r in be.requests] == [0, 0, 0]
+    assert coder.counters["repairs"] == 0
+    assert coder.repair_depth == {0: 1}
+
+
+def test_loop_nontransient_backend_error_is_compile_error():
+    task = _task()
+    act, _ = _applicable_action(task)
+    be = _ScriptedBackend([BackendError("cannot implement that")])
+    coder = LLMMicroCoder(be)
+    res = coder.apply(task, act)
+    assert res.status == "compile_error" and "backend" in res.detail
+    assert coder.counters["backend_errors"] == 1
+    assert len(be.requests) == 1  # a refusal is terminal, no retry
+
+
+def test_loop_attempt_timeout():
+    task = _task()
+    act, good = _applicable_action(task)
+
+    class Slow(CoderBackend):
+        name = "slow"
+        instant = False  # opt into the timeout thread
+
+        def complete(self, req):
+            time.sleep(0.5)
+            return good
+
+    coder = LLMMicroCoder(Slow(), LoopConfig(
+        attempt_timeout_s=0.02, transient_retries=1,
+        backoff_base_s=0.001, max_attempts=1))
+    res = coder.apply(task, act)
+    assert res.status == "compile_error"
+    assert "timed out" in res.detail
+
+
+def test_loop_terminal_action_shortcut():
+    task = _task()
+    be = _ScriptedBackend([])  # must never be called
+    res = LLMMicroCoder(be).apply(task, A.STOP)
+    assert res.status == "ok" and res.program is task
+    assert not be.requests
+
+
+def test_bind_task_is_thread_local():
+    task_a, task_b = T.kb_level1()[0], T.kb_level1()[1]
+    coder = _replay_coder()
+    seen = {}
+
+    def worker(task):
+        coder.bind_task(task)
+        time.sleep(0.02)
+        seen[task.name] = coder._task_fp(task)
+
+    ts = [threading.Thread(target=worker, args=(t,))
+          for t in (task_a, task_b)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert seen[task_a.name] == task_a.fingerprint()
+    assert seen[task_b.name] == task_b.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# open space: verified programs the closed rule space cannot produce
+# ---------------------------------------------------------------------------
+
+def test_open_space_repair_recovers_analyzer_reject():
+    """On a ragged task the replayed LLM coder lands a verified tiling
+    the structured coder refuses — via a repair round recovering the
+    first attempt's analyzer reject (the acceptance-criteria counters)."""
+    task = _task("OPEN_ragged_gemm")
+    llm = _replay_coder()
+    llm.bind_task(task)
+    sc = StructuredMicroCoder()
+    store = TranspositionStore()
+    landed = None
+    for act in R.candidate_actions(task):
+        if R.is_terminal(act):
+            continue
+        rs, rl = sc.apply(task, act), llm.apply(task, act)
+        if rs.status == "compile_error" and rl.status == "ok":
+            landed = rl.program
+            break
+    assert landed is not None, "no open-space landing replayed"
+    assert store.check(task, landed)
+    blocks = {v for _, s in landed.schedules for _, v in s.blocks}
+    assert blocks - {64, 128, 256, 512}, "landed tiles are preset-shaped"
+    stats = llm.stats_dict()
+    assert stats["coder_analysis_rejects"] >= 1
+    assert stats["coder_repaired_ok"] >= 1
+    assert stats["coder_repair_depth"].get(1, 0) >= 1
+
+
+def test_template_adapt_matches_replay_on_open_space():
+    """The committed open-space transcripts are exactly what the adapt
+    template backend produces live (fixture-freshness guard)."""
+    task = _task("OPEN_ragged_gemm")
+    live = make_coder("llm-adapt")
+    rep = _replay_coder()
+    for coder in (live, rep):
+        coder.bind_task(task)
+    for act in R.candidate_actions(task)[:6]:
+        a, b = live.apply(task, act), rep.apply(task, act)
+        assert a.status == b.status, R.describe(act)
+        if a.status == "ok":
+            assert a.program.fingerprint() == b.program.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# the coder seam: get_coder / config / engine / serve
+# ---------------------------------------------------------------------------
+
+def test_get_coder_dispatch():
+    assert isinstance(get_coder(None), StructuredMicroCoder)
+    assert isinstance(get_coder("structured"), StructuredMicroCoder)
+    llm = get_coder("llm-template")
+    assert isinstance(llm, LLMMicroCoder)
+    assert get_coder(llm) is llm  # instance passthrough
+    with pytest.raises(ValueError):
+        get_coder("bogus")
+    with pytest.raises(ValueError):
+        make_coder("llm-replay:")
+
+
+def test_coder_names():
+    assert StructuredMicroCoder().name == "structured"
+    assert make_coder("llm-template").name == "llm-template"
+    assert make_coder("llm-adapt").name == "llm-template-adapt"
+    assert _replay_coder().name == "llm-replay"
+
+
+def test_engine_config_coder_roundtrip():
+    oc = OptimizeConfig(coder="llm-template")
+    ec = EngineConfig.from_optimize(oc)
+    assert ec.coder == "llm-template"
+    assert ec.to_optimize().coder == "llm-template"
+    # instance-valued coder collapses to its name in the legacy record
+    inst = make_coder("llm-template")
+    assert EngineConfig.from_optimize(
+        OptimizeConfig(coder=inst)).coder == "llm-template"
+    assert EngineConfig().coder == "structured"
+
+
+def test_engine_shares_one_coder_and_exposes_stats():
+    eng = EvalEngine(None, config=OptimizeConfig(
+        mode="greedy_cost", max_steps=2,
+        coder=f"llm-replay:{FIXTURES}"))
+    assert eng.pipeline()._coder is eng.coder
+    eng.evaluate_suite([_task()])
+    stats = eng.stats()
+    assert stats["coder_name"] == "llm-replay"
+    assert stats["coder_proposals"] > 0
+    assert stats["coder_backend_misses"] == 0
+    # store counters still present and unshadowed by the coder_ prefix
+    assert "edges" in stats and "analysis_rejects" in stats
+
+
+def test_engine_default_coder_is_structured():
+    eng = EvalEngine(None, config=OptimizeConfig(max_steps=2))
+    assert isinstance(eng.coder, StructuredMicroCoder)
+    assert eng.stats()["coder_name"] == "structured"
+
+
+def test_service_serves_replay_coder_and_stats():
+    from repro.serve.engine import KernelService
+    svc = KernelService(None, config=OptimizeConfig(
+        mode="greedy_cost", max_steps=2,
+        coder=f"llm-replay:{FIXTURES}"))
+    try:
+        res = svc.submit(_task()).result()
+        assert res.correct
+        stats = svc.stats()
+        assert stats["coder_name"] == "llm-replay"
+        assert stats["coder_proposals"] > 0
+    finally:
+        svc.close()
+
+
+def test_winner_db_key_coder_suffix(tmp_path):
+    from repro.serve.engine import KernelService
+    task = _task()
+    keys = {}
+    for spec in ("structured", "llm-template"):
+        svc = KernelService(None, measure=True,
+                            measure_db=str(tmp_path / spec),
+                            config=OptimizeConfig(
+                                mode="greedy_cost", max_steps=2,
+                                coder=spec))
+        try:
+            keys[spec] = svc._winner_db_key(task, None, None)[0]
+        finally:
+            svc.close()
+    # a non-default coder is a different warm-start question; the
+    # default leaves pre-existing winner records readable
+    assert keys["structured"] != keys["llm-template"]
+    assert "llm-template" in keys["llm-template"]
+    assert "llm-template" not in keys["structured"]
+
+
+# ---------------------------------------------------------------------------
+# lint --transcripts + repolint backend gate
+# ---------------------------------------------------------------------------
+
+def test_lint_transcripts_clean_on_fixtures(capsys):
+    from repro.analysis import lint
+    rc = lint.main(["-q", "--suites", "", "--transcripts", FIXTURES])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "repaired first-attempt rejects" in out
+
+
+def test_lint_transcripts_flags_corrupt_and_bad_final(tmp_path):
+    from repro.analysis import lint
+    tdir = str(tmp_path / "tr")
+    st = TranscriptStore(tdir)
+    # a chain ending on an unparseable response must fail the sweep
+    st.put(make_record("t", "p", "act", 0, response="not json"))
+    with open(os.path.join(tdir, "t.jsonl"), "a") as f:
+        f.write("{truncated\n")
+    rc = lint.main(["-q", "--suites", "", "--transcripts", tdir])
+    assert rc == 1
+
+
+def test_no_backend_imports_outside_llmcoder():
+    """Acceptance guard: concrete coder backends are protocol-private.
+    The gate lives in tools/repolint.py (shared with CI); this pins it
+    into tier 1."""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.join(repo, "tools"))
+    try:
+        import repolint
+    finally:
+        sys.path.pop(0)
+    offenders = repolint.lint_backend_imports(repo)
+    assert not offenders, "\n".join(offenders)
+    # and the gate actually bites: a synthetic offender is caught
+    probe = os.path.join(repo, "src", "repro", "_lint_probe.py")
+    try:
+        with open(probe, "w") as f:
+            f.write("from repro.llmcoder.backend import ReplayBackend\n")
+        assert repolint.lint_backend_imports(repo)
+    finally:
+        os.remove(probe)

@@ -14,6 +14,13 @@ live as ad-hoc assertions inside two test files:
                  optimizer kwargs — everything passes
                  ``config=OptimizeConfig(...)`` (the PR-7 contract;
                  only tests exercise the shims)
+  coder-backend  no module outside ``src/repro/llmcoder/`` imports or
+                 references a concrete ``CoderBackend`` class
+                 (``TemplateBackend``/``ReplayBackend``/
+                 ``RecordingBackend``) — the rest of the repo selects
+                 coders by ``OptimizeConfig.coder`` spec string or the
+                 ``make_coder`` factory (the PR-9 protocol-only seam,
+                 mirroring the kind-literal gate)
 
 Walks ``src/``, ``benchmarks/`` and ``examples/``.  Both CI and
 ``tests/test_repolint.py`` call ``run_lints``; the CLI prints one
@@ -117,7 +124,41 @@ def lint_config_kwargs(repo: str) -> list[str]:
     return offenders
 
 
-LINTS = (lint_kind_literals, lint_config_kwargs)
+# -- coder-backend gate ------------------------------------------------------
+
+BACKEND_CLASSES = {"TemplateBackend", "ReplayBackend",
+                   "RecordingBackend"}
+BACKEND_EXEMPT_DIR = os.path.join("src", "repro", "llmcoder")
+
+
+def lint_backend_imports(repo: str) -> list[str]:
+    """Concrete coder backends stay behind the ``MicroCoder`` seam."""
+    offenders = []
+    for path in _py_files(repo):
+        rel = os.path.relpath(path, repo)
+        if rel.startswith(BACKEND_EXEMPT_DIR + os.sep):
+            continue
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        for node in ast.walk(tree):
+            used: set[str] = set()
+            if isinstance(node, ast.ImportFrom):
+                used = {a.name for a in node.names} & BACKEND_CLASSES
+            elif isinstance(node, ast.Attribute):
+                if node.attr in BACKEND_CLASSES:
+                    used = {node.attr}
+            elif isinstance(node, ast.Name):
+                if node.id in BACKEND_CLASSES:
+                    used = {node.id}
+            if used:
+                offenders.append(
+                    f"{rel}:{node.lineno}: concrete coder backend "
+                    f"{sorted(used)} outside llmcoder/ — select via "
+                    "OptimizeConfig.coder or llmcoder.make_coder")
+    return offenders
+
+
+LINTS = (lint_kind_literals, lint_config_kwargs, lint_backend_imports)
 
 
 def run_lints(repo: str) -> list[str]:
