@@ -12,6 +12,12 @@ every row name present in BOTH files:
   wall-clock timings, so a generous slack absorbs machine noise while
   a committed floor still catches a cost model or harness that stopped
   tracking reality.
+* ``rho_learn=`` (same bench): the learned cost model's mean per-task
+  candidate rank correlation under leave-one-task-out cross
+  validation.  Same wall-clock-noise slack as ``rho=``; the bench
+  itself additionally asserts ``rho_learn`` beats the per-task
+  calibrated rho per target, so this gate guards the committed level
+  while the in-bench check guards the learned-vs-calibrated ordering.
 * ``rules_improved_frac=`` (``benchmarks.table9_rules``): the fraction
   of tasks where the extended rewrite-rule registry strictly improves
   the classic search.  Fully analytic and deterministic, so it gets no
@@ -56,6 +62,7 @@ import sys
 
 _ACC = re.compile(r"(?:^|;)acc=([0-9.]+)")
 _RHO = re.compile(r"(?:^|;)rho=(-?[0-9.]+)")
+_RHO_LEARN = re.compile(r"(?:^|;)rho_learn=(-?[0-9.]+)")
 _RULES = re.compile(r"(?:^|;)rules_improved_frac=([0-9.]+)")
 _WARM = re.compile(r"(?:^|;)warm_rate=([0-9.]+)")
 _PEXP = re.compile(r"(?:^|;)policy_expansion_ratio=([0-9.]+)")
@@ -91,6 +98,10 @@ def parse_accuracies(path: str) -> dict[str, float]:
 
 def parse_rhos(path: str) -> dict[str, float]:
     return _parse(path, _RHO)
+
+
+def parse_learned_rhos(path: str) -> dict[str, float]:
+    return _parse(path, _RHO_LEARN)
 
 
 def parse_rules_improved(path: str) -> dict[str, float]:
@@ -156,6 +167,8 @@ def main(argv: list[str]) -> int:
                              parse_accuracies(argv[2]), 1e-9)
     n_rho, rho_drops = _gate("rho", parse_rhos(argv[1]),
                              parse_rhos(argv[2]), RHO_SLACK)
+    n_lrho, lrho_drops = _gate("rho_learn", parse_learned_rhos(argv[1]),
+                               parse_learned_rhos(argv[2]), RHO_SLACK)
     n_rules, rules_drops = _gate(
         "rules_improved_frac", parse_rules_improved(argv[1]),
         parse_rules_improved(argv[2]), 1e-9)
@@ -173,14 +186,15 @@ def main(argv: list[str]) -> int:
     n_ogain, ogain_drops = _gate(
         "open_gain", parse_open_gain(argv[1]),
         parse_open_gain(argv[2]), 1e-9)
-    if (n_acc == 0 and n_rho == 0 and n_rules == 0 and n_warm == 0
-            and n_pexp == 0 and n_pspd == 0 and n_cpar == 0
-            and n_ogain == 0):
+    if (n_acc == 0 and n_rho == 0 and n_lrho == 0 and n_rules == 0
+            and n_warm == 0 and n_pexp == 0 and n_pspd == 0
+            and n_cpar == 0 and n_ogain == 0):
         print(f"error: no comparable rows between {argv[1]} and "
               f"{argv[2]}")
         return 2
-    drops = (acc_drops + rho_drops + rules_drops + warm_drops
-             + pexp_drops + pspd_drops + cpar_drops + ogain_drops)
+    drops = (acc_drops + rho_drops + lrho_drops + rules_drops
+             + warm_drops + pexp_drops + pspd_drops + cpar_drops
+             + ogain_drops)
     for msg in drops:
         print(msg)
     if drops:

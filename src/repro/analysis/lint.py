@@ -12,6 +12,16 @@ Sources:
                              record's embedded program is analyzed;
                              sample records are structurally validated
                              (required keys present, numbers finite)
+                             and a sample's embedded training program
+                             (post-§17 records) is analyzed too
+  --artifact PATH            a pickled model artifact (learned cost
+                             model, macro policy): must unpickle, be
+                             structurally sound (finite parameters)
+                             and carry provenance ``meta``; a learned
+                             cost model's feature schema must match
+                             the current ``FEATURE_VERSION`` — a stale
+                             artifact would silently price everything
+                             through the analytic fallback
   --transcripts DIR          recorded LLM micro-coder transcripts
                              (``llmcoder.TranscriptStore`` jsonl
                              shards): every embedded program is
@@ -106,6 +116,70 @@ def _db_sources(db_dir: str):
                 yield "corrupt", p, {"error": str(e)}
 
 
+def _check_artifact(path: str) -> list[str]:
+    """Provenance/structure problems with a pickled model artifact."""
+    import pickle
+
+    import numpy as np
+    try:
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+    except Exception as e:
+        return [f"{path}: unreadable artifact: {type(e).__name__}: {e}"]
+    if not isinstance(blob, dict):
+        return [f"{path}: artifact is {type(blob).__name__}, not a "
+                f"provenance-carrying dict"]
+    probs = []
+    meta = blob.get("meta")
+    if not isinstance(meta, dict) or not meta:
+        probs.append(f"{path}: artifact carries no provenance meta")
+        meta = {}
+    if blob.get("kind") == "learned_cost_model" \
+            or meta.get("kind") == "learned_cost_model":
+        from repro.measure.learned import FEATURE_NAMES, FEATURE_VERSION
+        if meta.get("feature_version") != FEATURE_VERSION:
+            probs.append(
+                f"{path}: feature_version "
+                f"{meta.get('feature_version')!r} != current "
+                f"{FEATURE_VERSION} (stale artifact: every prediction "
+                f"would fall back to analytic)")
+        names = tuple(blob.get("feature_names", ()))
+        if names != FEATURE_NAMES:
+            probs.append(f"{path}: feature names disagree with the "
+                         f"current featurizer ({len(names)} vs "
+                         f"{len(FEATURE_NAMES)})")
+        for k in ("n_samples", "n_groups", "targets", "env_fps"):
+            if k not in meta:
+                probs.append(f"{path}: meta missing {k!r}")
+        if isinstance(meta.get("n_samples"), int) \
+                and meta["n_samples"] <= 0:
+            probs.append(f"{path}: trained on zero samples")
+        for k in ("weights", "mean", "std", "lo", "hi"):
+            v = blob.get(k)
+            if v is None or not np.all(np.isfinite(
+                    np.asarray(v, dtype=np.float64))):
+                probs.append(f"{path}: non-finite or missing {k!r}")
+    else:
+        # macro_policy.pkl-style blobs: every numeric leaf of the
+        # (possibly nested) params tree must be finite
+        def walk(node, where):
+            if isinstance(node, dict):
+                for k, v in sorted(node.items()):
+                    walk(v, f"{where}[{k!r}]")
+                return
+            try:
+                arr = np.asarray(node, dtype=np.float64)
+            except (TypeError, ValueError):
+                return
+            if not np.all(np.isfinite(arr)):
+                probs.append(f"{path}: non-finite {where}")
+
+        params = blob.get("params")
+        if isinstance(params, dict):
+            walk(params, "params")
+    return probs
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.analysis.lint",
@@ -119,6 +193,8 @@ def main(argv=None) -> int:
                     help="MeasureDB directory (repeatable)")
     ap.add_argument("--transcripts", action="append", default=[],
                     help="LLM-coder transcript directory (repeatable)")
+    ap.add_argument("--artifact", action="append", default=[],
+                    help="pickled model artifact to sweep (repeatable)")
     ap.add_argument("--target", default=None,
                     help="HardwareTarget name (default: portability "
                          "envelope)")
@@ -171,6 +247,14 @@ def main(argv=None) -> int:
                     report(path, analyze_program(prog, args.target))
             else:
                 structural.extend(_check_sample(rec, path))
+                if isinstance(rec.get("program"), dict):
+                    prog, err = _load_program(rec["program"], path)
+                    if prog is None:
+                        structural.append(err)
+                    else:
+                        n_programs += 1
+                        report(path,
+                               analyze_program(prog, args.target))
 
     for tdir in args.transcripts:
         if not os.path.isdir(tdir):
@@ -233,6 +317,12 @@ def main(argv=None) -> int:
         print(f"{tdir}: {n_tprogs} transcript programs over "
               f"{len(chains)} chains, {n_repair_rejects} repaired "
               f"first-attempt rejects (expected)")
+
+    for path in args.artifact:
+        probs = _check_artifact(path)
+        structural.extend(probs)
+        if not probs and not args.quiet:
+            print(f"{path}: artifact OK")
 
     for path in args.paths:
         try:

@@ -514,6 +514,15 @@ class EvalEngine:
         # store's edge memo stays coder-consistent (a store must never be
         # shared between coders with different rewrite behavior)
         self.coder = get_coder(oc.coder)
+        # cost_model spec strings ("learned:PATH", "calibrated:PATH",
+        # "analytic") resolve here, ONCE, and the resolved instance is
+        # stored back into the config — every pipeline then shares the
+        # identical model object with the store, satisfying the
+        # store↔config consistency check (a spec resolved twice would
+        # be two distinct instances pricing one shared cost memo)
+        if isinstance(oc.cost_model, str):
+            from repro.measure.learned import resolve_cost_model
+            oc = oc.replace(cost_model=resolve_cost_model(oc.cost_model))
         # the resolved optimizer config every pipeline is built from
         self.config = oc.replace(coder=self.coder)
         if store is None:

@@ -85,6 +85,25 @@ class CalibratedRewardSource(RewardSource):
         return self.model.total_s(prog, hardware.resolve(target))
 
 
+class LearnedRewardSource(RewardSource):
+    """Prices via a ``LearnedCostModel`` (measure/learned.py): ridge on
+    log-time over program/schedule/target features, analytic fallback
+    for untrained / out-of-distribution programs — so an absent
+    artifact makes this behave exactly like ``analytic``."""
+
+    name = "learned"
+
+    def __init__(self, model):
+        # a LearnedCostModel instance, or an artifact path to load
+        if isinstance(model, str):
+            from repro.measure.learned import LearnedCostModel
+            model = LearnedCostModel.load(model)
+        self.model = model
+
+    def cost(self, task, prog, target=None) -> float:
+        return self.model.total_s(prog, hardware.resolve(target))
+
+
 class MeasuredRewardSource(RewardSource):
     """Wall-clock rewards replayed from a persistent ``MeasureDB``.
 
@@ -135,12 +154,29 @@ def get_reward_source(spec, *, db=None,
 
     ``"analytic"`` | ``None`` -> the roofline; ``"calibrated"`` -> fit
     from ``db``'s samples; ``"measured"`` -> DB replay with a
-    calibrated fallback (both require ``db``).  Instances pass through.
+    calibrated fallback (both require ``db``); ``"learned"`` -> fit a
+    ``LearnedCostModel`` from ``db``'s program-embedding samples
+    (requires ``db``); ``"learned:PATH"`` -> load a fitted artifact
+    (missing file = analytic identity).  Instances pass through.
     """
     if spec is None or spec == "analytic":
         return AnalyticRewardSource()
     if isinstance(spec, RewardSource):
         return spec
+    if isinstance(spec, str) and spec.startswith("learned"):
+        from repro.measure.learned import (LearnedCostModel,
+                                           fit_learned_model)
+        if spec.startswith("learned:"):
+            return LearnedRewardSource(
+                LearnedCostModel.load(spec.split(":", 1)[1]))
+        if spec != "learned":
+            raise ValueError(f"unknown reward source {spec!r}")
+        if db is None:
+            raise ValueError("reward source 'learned' needs a "
+                             "MeasureDB (db=...)")
+        model = fit_learned_model(db.iter_samples(env_fp=env_fp),
+                                  allow_mixed_envs=env_fp is None)
+        return LearnedRewardSource(LearnedCostModel(model))
     if spec in ("calibrated", "measured"):
         if db is None:
             raise ValueError(f"reward source {spec!r} needs a "

@@ -75,6 +75,14 @@ class MTMCPipeline:
             "seed": seed, "validate": validate, "target": target,
             "strategy": strategy, "cost_model": cost_model_override,
             "measurer": measurer, "rerank_top_k": rerank_top_k})
+        # a cost_model spec string resolves to a model instance up
+        # front ("learned:PATH" / "calibrated:PATH" / "analytic") so
+        # everything downstream — including the store-consistency check
+        # below — sees the real object
+        if isinstance(cfg.cost_model, str):
+            from repro.measure.learned import resolve_cost_model
+            cfg = cfg.replace(
+                cost_model=resolve_cost_model(cfg.cost_model))
         self.config = cfg
         self.policy = policy
         self.mode = cfg.mode

@@ -21,6 +21,12 @@ _LAZY = {
     "CalibratedCostModel": "repro.measure.calibrate",
     "fit_calibration": "repro.measure.calibrate",
     "spearman": "repro.measure.calibrate",
+    "FEATURE_NAMES": "repro.measure.learned",
+    "LearnedCostModel": "repro.measure.learned",
+    "LearnedModel": "repro.measure.learned",
+    "featurize": "repro.measure.learned",
+    "fit_learned_model": "repro.measure.learned",
+    "resolve_cost_model": "repro.measure.learned",
 }
 
 

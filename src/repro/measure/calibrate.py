@@ -48,10 +48,15 @@ class Calibration:
     factors: tuple[tuple[tuple[str, str], float], ...]
     n_samples: tuple[tuple[tuple[str, str], int], ...]
     residual_rms: float = 0.0      # log-space RMS after correction
+    min_samples: int = 2           # the fit's evidence threshold
 
     @property
     def factor_map(self) -> dict[tuple[str, str], float]:
         return dict(self.factors)
+
+    @property
+    def count_map(self) -> dict[tuple[str, str], int]:
+        return dict(self.n_samples)
 
     def factor(self, target: str, bottleneck: str) -> float:
         # identity for unseen buckets: the compute-vs-memory balance is
@@ -60,11 +65,34 @@ class Calibration:
         # than borrow the OTHER class's correction on no evidence
         return self.factor_map.get((target, bottleneck), 1.0)
 
+    def fitted(self, target: str, bottleneck: str) -> bool:
+        """True when this bucket's factor came from a real fit; False
+        when it is the identity fallback (unseen bucket, or seen with
+        fewer than ``min_samples`` samples).  A degenerate calibration
+        — every bucket of a target a fallback — is a silent no-op the
+        benchmarks must surface, not a fit."""
+        return self.count_map.get((target, bottleneck), 0) \
+            >= self.min_samples
+
+    def bucket_report(self, target: str | None = None) -> list[str]:
+        """One ``target/bottleneck: factor (n=.., fitted|fallback)``
+        line per known bucket — what measure_bench prints so a no-op
+        fit (the PR-4 gpu_a100 0.183->0.184 case) is visible."""
+        lines = []
+        for (tgt, bott), n in sorted(self.n_samples):
+            if target is not None and tgt != target:
+                continue
+            c = self.factor(tgt, bott)
+            tag = "fitted" if self.fitted(tgt, bott) else "fallback"
+            lines.append(f"{tgt}/{bott}: x{c:.3f} (n={n}, {tag})")
+        return lines
+
     # -- persistence (lives next to the MeasureDB it was fit from) ----------
     def to_json(self) -> dict:
         return {"factors": [[list(k), v] for k, v in self.factors],
                 "n_samples": [[list(k), n] for k, n in self.n_samples],
-                "residual_rms": self.residual_rms}
+                "residual_rms": self.residual_rms,
+                "min_samples": self.min_samples}
 
     @classmethod
     def from_json(cls, d: dict) -> Calibration:
@@ -73,7 +101,8 @@ class Calibration:
                           for k, v in d["factors"]),
             n_samples=tuple((tuple(k), int(n))
                             for k, n in d["n_samples"]),
-            residual_rms=float(d.get("residual_rms", 0.0)))
+            residual_rms=float(d.get("residual_rms", 0.0)),
+            min_samples=int(d.get("min_samples", 2)))
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -128,7 +157,8 @@ def fit_calibration(samples: Iterable[MeasureSample], *,
         factors.append((key, math.exp(mean)))
         sq.extend((r - mean) ** 2 for r in resid)
     rms = math.sqrt(sum(sq) / len(sq)) if sq else 0.0
-    return Calibration(tuple(factors), tuple(counts), rms)
+    return Calibration(tuple(factors), tuple(counts), rms,
+                       min_samples=int(min_samples))
 
 
 class CalibratedCostModel:

@@ -82,11 +82,20 @@ class MeasureSample:
     analytic_s: float         # cost_model.program_cost(...).total_s
     bottleneck: str           # dominant group bottleneck: compute|memory
     env: tuple[tuple[str, str], ...] = ()   # the fingerprinted env, readable
+    # the measured program itself (kernel_ir.program_to_json), embedded
+    # so a sample is self-contained training data for the learned cost
+    # model (DESIGN.md §17).  Optional: pre-§17 records lack it and
+    # read back as None; to_json omits it when None so old fixture
+    # files stay byte-stable.  Not part of the content address —
+    # prog_fp already pins the program identity.
+    program: dict | None = None
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["samples"] = list(self.samples)
         d["env"] = [list(kv) for kv in self.env]
+        if self.program is None:
+            del d["program"]
         return d
 
     @classmethod
@@ -98,7 +107,8 @@ class MeasureSample:
                    n_rejected=int(d["n_rejected"]), mode=d["mode"],
                    analytic_s=float(d["analytic_s"]),
                    bottleneck=d["bottleneck"],
-                   env=tuple((k, v) for k, v in d.get("env", [])))
+                   env=tuple((k, v) for k, v in d.get("env", [])),
+                   program=d.get("program"))
 
 
 # bump whenever kernel or lowering semantics change in a way that moves
@@ -233,18 +243,35 @@ class MeasureDB:
 
     def iter_samples(self, *, target: str | None = None,
                      env_fp: str | None = None) -> Iterator[MeasureSample]:
+        """Every stored sample, optionally filtered, in deterministic
+        (sorted-key) order — the canonical training-data export for
+        calibration and the learned cost model.  Corrupt records —
+        torn/non-JSON files AND structurally valid JSON missing sample
+        fields — are skipped and counted in ``stats["corrupt_records"]``
+        rather than aborting the sweep."""
         for fn in sorted(os.listdir(self._samples_dir)):
             if not fn.endswith(".json"):
                 continue
             d = self._read(os.path.join(self._samples_dir, fn))
             if d is None:
                 continue
-            s = MeasureSample.from_json(d)
+            try:
+                s = MeasureSample.from_json(d)
+            except (KeyError, TypeError, ValueError):
+                with self._lock:
+                    self.stats["corrupt_records"] += 1
+                continue
             if target is not None and s.target != target:
                 continue
             if env_fp is not None and s.env_fp != env_fp:
                 continue
             yield s
+
+    def env_fps(self, *, target: str | None = None) -> list[str]:
+        """Distinct sample env fingerprints (sorted) — what a trainer
+        enumerates before filtering ``iter_samples(env_fp=...)``."""
+        return sorted({s.env_fp
+                       for s in self.iter_samples(target=target)})
 
     # -- winners (KernelService warm-start records) --------------------------
     def winner_key(self, task_fp: str, target: str, env_fp: str) -> str:

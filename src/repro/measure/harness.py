@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import cost_model, hardware
 from repro.core.kernel_ir import (KernelProgram, _eval_op, evaluate,
-                                  make_inputs_np)
+                                  make_inputs_np, program_to_json)
 from repro.measure.db import MeasureDB, MeasureSample, env_fingerprint
 from repro.measure.timing import robust_time_s, time_thunk
 
@@ -450,12 +450,19 @@ class ExecutionHarness:
                         f"measuring {prog.name!r} failed: "
                         f"{type(e).__name__}: {e}") from e
             self.stats["measured"] += 1
+        try:
+            # embed the measured program so the sample is self-contained
+            # training data for the learned cost model (DESIGN.md §17);
+            # a program with non-JSON attrs just ships without one
+            prog_json = program_to_json(prog)
+        except (TypeError, ValueError):
+            prog_json = None
         sample = MeasureSample(
             task_fp=key[0], prog_fp=key[1], target=tgt.name,
             env_fp=env_fp, time_s=t, samples=tuple(samples),
             n_rejected=n_rej, mode=used, analytic_s=pc.total_s,
             bottleneck=pc.bottleneck.split(":")[-1],
-            env=self._env(tgt))
+            env=self._env(tgt), program=prog_json)
         if self.db is not None:
             self.db.put(sample)
         return sample

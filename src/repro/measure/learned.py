@@ -1,0 +1,590 @@
+"""Learned cost model over the measurement DB (DESIGN.md §17).
+
+The analytic roofline ranks *tasks* well but ranks *candidates* badly
+(Spearman ~0.18 at candidate level, ~0.32 after per-bottleneck
+calibration — ``results/measure_bench.txt``): candidates sit on
+analytic-cost plateaus that real execution splits.  Scalar calibration
+cannot separate a plateau; a model with access to the *schedule* can.
+
+This module closes that gap with the standard autotuner recipe:
+
+* ``featurize(prog, target)`` — a deterministic feature vector from the
+  ``KernelProgram`` + its schedules + the ``HardwareTarget`` constants:
+  op mix, fused-group shapes, **effective** tiles after the lowerer's
+  ``min(tile, dim)`` clamp (grid cells — the term interpret-mode
+  execution actually pays), VMEM tile footprint, arithmetic intensity,
+  pipeline/loop-order/split-k/dtype markers, and the target's
+  bandwidth/FLOP/geometry constants (so one model can transfer across
+  targets).  Pure function of ``(program, target)``; never raises on
+  any well-formed program (defensive per-group fallbacks are
+  property-tested).
+* ``fit_learned_model(samples)`` — ridge regression on ``log(time_s)``
+  over MeasureDB samples that embed their program
+  (``MeasureSample.program``), **group-normalized per
+  (task, target, env)**: features and targets are centered within each
+  candidate group before the fit, so the model learns candidate
+  *ranking*, not task identity or environment scale.
+* ``LearnedCostModel`` — a drop-in for ``CalibratedCostModel`` behind
+  the existing pricing seams (``TranspositionStore(cost_model=...)``,
+  ``OptimizeConfig.cost_model``, ``get_reward_source``).  With no
+  artifact it is **bit-identical to the analytic model** (the absent /
+  missing-file case), and any prediction failure — featurization
+  error, feature-schema drift, out-of-training-distribution features —
+  falls back to the analytic price and is counted in ``stats``.
+
+Artifacts are pickled dicts carrying provenance ``meta`` (sample/group
+counts, targets, env fingerprints, fit quality) exactly like
+``results/macro_policy.pkl``; ``python -m repro.measure.train_cost_model``
+fits one from any MeasureDB directory, and ``repro.analysis.lint
+--artifact`` sweeps the meta in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import pickle
+from collections.abc import Iterable
+
+import numpy as np
+
+from repro.core import cost_model, hardware
+from repro.core.cost_model import ProgramCost
+from repro.core.kernel_ir import (KernelProgram, program_from_json,
+                                  sched_kind, sched_kind_of_group)
+
+# bump when the feature vector changes shape or meaning: an artifact
+# fit under another version must fall back to analytic pricing instead
+# of silently dotting mismatched coordinates
+FEATURE_VERSION = 1
+
+# the op vocabulary contributing op-mix counts (kernel_ir's op set)
+_OPS = ("matmul", "grouped_matmul", "attention", "qk_scores", "av",
+        "softmax", "rmsnorm", "row_max", "row_sum", "rwkv_chunk",
+        "ssm_chunk", "bias", "add", "mul", "relu", "gelu", "silu",
+        "square")
+
+# |predicted - analytic| log-time is clamped to this many nats: even an
+# in-distribution prediction must not move a price by more than ~e^12
+# (~1.6e5x) from the roofline — interpret-mode vs analytic gaps are
+# ~1e3x, so this never binds on sane predictions but caps the damage of
+# a pathological extrapolation
+LOG_ANCHOR_CLIP = 12.0
+
+
+def _log1p(v: float) -> float:
+    return math.log1p(max(0.0, float(v)))
+
+
+def feature_names() -> tuple[str, ...]:
+    names = ["n_nodes", "n_groups", "n_inputs", "n_outputs"]
+    names += [f"op_{op}" for op in _OPS]
+    names += [
+        "log_analytic_s", "log_mxu_flops", "log_vpu_flops",
+        "log_hbm_bytes", "arith_intensity", "log_compute_s",
+        "log_memory_s", "compute_memory_ratio", "frac_compute_bound",
+        "log_grid_cells", "log_max_grid_cells", "log_vmem_bytes",
+        "log_max_vmem_bytes", "mean_mxu_efficiency",
+        "mean_pipeline_depth", "frac_pipelined", "frac_reordered",
+        "n_epilogues", "split_k_total", "n_dtype_marked",
+        "min_eff_tile", "mean_log_eff_tile",
+        "frac_divisible", "log_kernel_grid_cells", "frac_lowerable",
+    ]
+    names += [
+        "tgt_log_matmul_flops", "tgt_log_vector_flops", "tgt_log_hbm_bw",
+        "tgt_log_vmem_bw", "tgt_log_vmem_bytes", "tgt_lane",
+        "tgt_sublane", "tgt_log_launch_s", "tgt_is_gpu",
+    ]
+    return tuple(names)
+
+
+FEATURE_NAMES = feature_names()
+
+
+# kernel-library schedule kinds with a real Pallas lowering
+# (harness._GROUP_LOWERERS) — groups of these kinds pay grid-shaped
+# execution cost; everything else runs through the eager reference path
+_KERNEL_KINDS = ("matmul", "flash_attention", "rmsnorm",
+                 "grouped_matmul")
+
+
+def _group_features(prog: KernelProgram, group, shapes, tgt):
+    """(grid_cells, vmem_bytes, mxu_eff, depth, pipelined, reordered,
+    epilogue, split_k, eff_tiles, kernel_kind, divisible) for one
+    fusion group — every value defensively defaulted so an exotic
+    group cannot raise."""
+    from repro.core import rules
+    sched = prog.schedule_for(group)
+    tiles = sched.blocks_dict
+    kind = sched_kind_of_group(prog, group)
+    nm = prog.node_map
+    main = next((nm[n] for n in group if sched_kind(nm[n].op) == kind),
+                nm[group[0]])
+    try:
+        dims = rules.tileable_dims(main, shapes, prog.inputs)
+    except Exception:
+        dims = {}
+    grid = 1.0
+    eff_tiles = []
+    divisible = True
+    for tname in sorted(dims):
+        dim = max(1, int(dims[tname]))
+        eff = min(max(1, int(tiles.get(tname, 128))), dim)
+        eff_tiles.append(float(eff))
+        grid *= max(1.0, dim // eff)
+        divisible = divisible and dim % eff == 0
+    try:
+        vmem = float(rules.vmem_tile_bytes(kind, tiles, dims))
+    except Exception:
+        vmem = 0.0
+    try:
+        eff = float(tgt.mxu_efficiency(tiles)) if tiles else 0.45
+    except Exception:
+        eff = 0.45
+    depth = max(1, int(sched.pipeline_depth))
+    order = sched.loop_order
+    reordered = bool(order) and order[-1] != "k" and "k" in order
+    epilogue = sched.epilogue not in (None, "", "none")
+    split_k = 0
+    for f in sched.flags:
+        if isinstance(f, str) and f.startswith("split_k="):
+            try:
+                split_k += int(f.split("=", 1)[1])
+            except ValueError:
+                pass
+    return (grid, vmem, eff, depth, depth >= 2, reordered, epilogue,
+            split_k, eff_tiles, kind in _KERNEL_KINDS, divisible)
+
+
+def featurize(prog: KernelProgram, target=None) -> np.ndarray:
+    """Deterministic feature vector for ``(program, target)``.
+
+    Aggregations are order-invariant (sums / means / maxes over nodes
+    and groups), so permuting the ``fusion_groups`` tuple — a
+    fingerprint change the IR treats as the same partition — leaves the
+    vector bit-identical.  Never raises on a well-formed program: any
+    per-group extraction failure contributes neutral values instead.
+    """
+    tgt = hardware.resolve(target)
+    feats: list[float] = [
+        _log1p(len(prog.nodes)), _log1p(len(prog.fusion_groups)),
+        _log1p(len(prog.inputs)), _log1p(len(prog.outputs)),
+    ]
+    counts = {op: 0 for op in _OPS}
+    n_marked = 0
+    for n in prog.nodes:
+        if n.op in counts:
+            counts[n.op] += 1
+        if n.attr("compute_dtype") or n.attr("out_dtype"):
+            n_marked += 1
+    feats += [_log1p(counts[op]) for op in _OPS]
+
+    pc = cost_model.program_cost(prog, tgt)
+    mxu = sum(g.mxu_flops for g in pc.groups)
+    vpu = sum(g.vpu_flops for g in pc.groups)
+    hbm = sum(g.hbm_bytes for g in pc.groups)
+    comp = sum(g.compute_s for g in pc.groups)
+    mem = sum(g.memory_s for g in pc.groups)
+    n_compute = sum(g.bottleneck == "compute" for g in pc.groups)
+    feats += [
+        math.log(max(pc.total_s, 1e-12)), _log1p(mxu), _log1p(vpu),
+        _log1p(hbm), _log1p((mxu + vpu) / max(hbm, 1.0)),
+        math.log(max(comp, 1e-12)), math.log(max(mem, 1e-12)),
+        math.log(max(comp, 1e-12) / max(mem, 1e-12)),
+        n_compute / max(1, len(pc.groups)),
+    ]
+
+    shapes = prog.shapes()
+    grid_total = 0.0
+    grid_max = 0.0
+    vmem_total = 0.0
+    vmem_max = 0.0
+    effs: list[float] = []
+    depths: list[float] = []
+    n_pipe = n_reord = n_epi = 0
+    n_div = n_lowerable = 0
+    kernel_grid = 0.0
+    split_total = 0
+    eff_tiles_all: list[float] = []
+    for g in prog.fusion_groups:
+        try:
+            (grid, vmem, eff, depth, pipelined, reordered, epilogue,
+             split_k, eff_tiles, is_kernel, divisible) = \
+                _group_features(prog, g, shapes, tgt)
+        except Exception:
+            grid, vmem, eff, depth = 1.0, 0.0, 0.45, 1
+            pipelined = reordered = epilogue = False
+            split_k, eff_tiles = 0, []
+            is_kernel, divisible = False, True
+        grid_total += grid
+        grid_max = max(grid_max, grid)
+        vmem_total += vmem
+        vmem_max = max(vmem_max, vmem)
+        effs.append(eff)
+        depths.append(float(depth))
+        n_pipe += pipelined
+        n_reord += reordered
+        n_epi += epilogue
+        n_div += divisible
+        if is_kernel and divisible:
+            # what a kernel-library lowering would actually execute:
+            # the grid-shaped cost regime (an indivisible tiling falls
+            # back to the eager reference path instead)
+            kernel_grid += grid
+            n_lowerable += 1
+        split_total += split_k
+        eff_tiles_all.extend(eff_tiles)
+    ng = max(1, len(prog.fusion_groups))
+    feats += [
+        _log1p(grid_total), _log1p(grid_max), _log1p(vmem_total),
+        _log1p(vmem_max),
+        (sum(effs) / len(effs)) if effs else 0.45,
+        (sum(depths) / len(depths)) if depths else 1.0,
+        n_pipe / ng, n_reord / ng, float(n_epi), float(split_total),
+        float(n_marked),
+        min(eff_tiles_all) if eff_tiles_all else 0.0,
+        (sum(math.log(t) for t in eff_tiles_all)
+         / len(eff_tiles_all)) if eff_tiles_all else 0.0,
+        n_div / ng, _log1p(kernel_grid), n_lowerable / ng,
+    ]
+
+    feats += [
+        math.log(tgt.matmul_flops("bf16")), math.log(tgt.vector_flops),
+        math.log(tgt.hbm_bw), math.log(tgt.vmem_bw),
+        math.log(max(tgt.vmem_bytes, 1.0)), tgt.lane / 128.0,
+        tgt.sublane / 8.0, math.log(max(tgt.launch_s, 1e-12)),
+        1.0 if tgt.kind == "gpu" else 0.0,
+    ]
+    vec = np.asarray(feats, dtype=np.float64)
+    assert vec.shape == (len(FEATURE_NAMES),)
+    return vec
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LearnedModel:
+    """Fitted ridge model + the normalization/provenance it needs."""
+
+    weights: np.ndarray          # (d,) on standardized features
+    intercept: float             # anchors absolute log-seconds
+    mean: np.ndarray             # per-feature standardization
+    std: np.ndarray
+    lo: np.ndarray               # training bounds (standardized space)
+    hi: np.ndarray
+    feature_names: tuple[str, ...]
+    ridge_lambda: float
+    meta: dict
+    # mean(log measured - log analytic) over training: puts analytic
+    # fallbacks on the measured-seconds scale so an OOD candidate stays
+    # comparable with its predicted siblings instead of looking ~e^8
+    # cheaper and hijacking every rerank it appears in
+    fallback_log_scale: float = 0.0
+
+    def predict_log_s(self, x: np.ndarray) -> float | None:
+        """Predicted ``log(time_s)`` — or ``None`` when the feature
+        vector falls outside the training distribution or the feature
+        schema drifted; callers fall back to analytic.
+
+        Out-of-distribution is judged on the vector, not any single
+        coordinate: a handful of features beyond the per-feature
+        training range (plus margin) is ordinary extrapolation — an
+        unseen op regime under leave-one-task-out, a sibling chip's
+        constants under cross-target transfer — and the ridge weights
+        are small enough to survive it.  Only when many coordinates
+        leave the training envelope at once (a genuinely alien
+        program) does prediction decline."""
+        if tuple(self.feature_names) != FEATURE_NAMES:
+            return None
+        xs = (np.asarray(x, dtype=np.float64) - self.mean) / self.std
+        margin = 2.0 * (self.hi - self.lo) + 2.5
+        out = (xs < self.lo - margin) | (xs > self.hi + margin)
+        if int(out.sum()) > max(2, len(xs) // 8):
+            return None
+        v = float(xs @ self.weights + self.intercept)
+        return v if math.isfinite(v) else None
+
+    # -- persistence (plain-dict pickle, macro_policy.pkl idiom) ------------
+    def to_blob(self) -> dict:
+        return {
+            "kind": "learned_cost_model",
+            "weights": np.asarray(self.weights, dtype=np.float64),
+            "intercept": float(self.intercept),
+            "mean": np.asarray(self.mean, dtype=np.float64),
+            "std": np.asarray(self.std, dtype=np.float64),
+            "lo": np.asarray(self.lo, dtype=np.float64),
+            "hi": np.asarray(self.hi, dtype=np.float64),
+            "feature_names": list(self.feature_names),
+            "ridge_lambda": float(self.ridge_lambda),
+            "meta": dict(self.meta),
+            "fallback_log_scale": float(self.fallback_log_scale),
+        }
+
+    @classmethod
+    def from_blob(cls, blob: dict) -> LearnedModel:
+        return cls(
+            weights=np.asarray(blob["weights"], dtype=np.float64),
+            intercept=float(blob["intercept"]),
+            mean=np.asarray(blob["mean"], dtype=np.float64),
+            std=np.asarray(blob["std"], dtype=np.float64),
+            lo=np.asarray(blob["lo"], dtype=np.float64),
+            hi=np.asarray(blob["hi"], dtype=np.float64),
+            feature_names=tuple(blob["feature_names"]),
+            ridge_lambda=float(blob["ridge_lambda"]),
+            meta=dict(blob.get("meta", {})),
+            fallback_log_scale=float(blob.get("fallback_log_scale",
+                                              0.0)))
+
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump(self.to_blob(), f)
+
+    @classmethod
+    def load(cls, path: str) -> LearnedModel:
+        with open(path, "rb") as f:
+            return cls.from_blob(pickle.load(f))
+
+
+def fit_learned_model(samples: Iterable, *,
+                      ridge_lambda: float = 1.0,
+                      min_group: int = 2,
+                      env_fp: str | None = None,
+                      target: str | None = None,
+                      allow_mixed_envs: bool = False,
+                      extra_meta: dict | None = None
+                      ) -> LearnedModel | None:
+    """Group-normalized ridge fit on ``log(time_s)``.
+
+    Usable samples must embed their program (``MeasureSample.program``
+    — written by every post-§17 harness) and carry a positive measured
+    time; others are skipped and counted in ``meta``.  Samples are
+    grouped by ``(task_fp, target, env_fp)`` and each group's features
+    and log-times are centered before the least-squares solve, so the
+    fit explains only *within-candidate-set* time differences — the
+    ranking signal — never task scale or environment regime.  Groups
+    smaller than ``min_group`` carry no ranking signal and are dropped.
+
+    Environment discipline matches ``fit_calibration``: samples
+    spanning several env fingerprints are refused unless filtered
+    (``env_fp=``) or explicitly allowed — group centering makes mixed
+    envs *rankable*, but the intercept (absolute scale) would still
+    average incomparable regimes, so the caller must opt in.
+
+    Returns ``None`` when no trainable group survives (the caller
+    keeps analytic pricing).
+    """
+    rows: list[np.ndarray] = []
+    ys: list[float] = []
+    gids: list[tuple[str, str, str]] = []
+    envs: set[str] = set()
+    n_no_prog = n_bad = 0
+    modes: set[str] = set()
+    for s in samples:
+        if target is not None and s.target != target:
+            continue
+        if env_fp is not None and s.env_fp != env_fp:
+            continue
+        if s.program is None:
+            n_no_prog += 1
+            continue
+        if s.time_s <= 0.0:
+            n_bad += 1
+            continue
+        envs.add(s.env_fp)
+        if len(envs) > 1 and not allow_mixed_envs:
+            raise ValueError(
+                f"samples span {len(envs)} environment fingerprints "
+                f"({sorted(envs)}); filter with env_fp= or pass "
+                f"allow_mixed_envs=True")
+        try:
+            prog = program_from_json(s.program)
+            x = featurize(prog, s.target)
+        except Exception:
+            n_bad += 1
+            continue
+        rows.append(x)
+        ys.append(math.log(s.time_s))
+        gids.append((s.task_fp, s.target, s.env_fp))
+        modes.add(s.mode)
+
+    # drop groups without ranking signal (fewer than min_group rows)
+    by_gid: dict[tuple, list[int]] = {}
+    for i, gid in enumerate(gids):
+        by_gid.setdefault(gid, []).append(i)
+    keep = sorted(i for idxs in by_gid.values()
+                  if len(idxs) >= max(2, min_group) for i in idxs)
+    if not keep:
+        return None
+    X = np.stack([rows[i] for i in keep])
+    y = np.asarray([ys[i] for i in keep])
+    groups = [gids[i] for i in keep]
+
+    mean = X.mean(axis=0)
+    std = X.std(axis=0)
+    std[std < 1e-12] = 1.0
+    Xs = (X - mean) / std
+
+    # group centering: subtract each candidate set's own mean so the
+    # solve sees only within-set contrasts
+    Xc = Xs.copy()
+    yc = y.copy()
+    for gid in sorted(set(groups)):
+        idx = [i for i, g in enumerate(groups) if g == gid]
+        Xc[idx] -= Xs[idx].mean(axis=0)
+        yc[idx] -= y[idx].mean()
+    d = Xc.shape[1]
+    w = np.linalg.solve(Xc.T @ Xc + ridge_lambda * np.eye(d),
+                        Xc.T @ yc)
+    intercept = float((y - Xs @ w).mean())
+    ia = FEATURE_NAMES.index("log_analytic_s")
+    fallback_log_scale = float((y - X[:, ia]).mean())
+
+    preds = Xs @ w
+    fit_rho = grouped_spearman(preds.tolist(), y.tolist(), groups)
+    meta = {
+        "kind": "learned_cost_model",
+        "feature_version": FEATURE_VERSION,
+        "n_features": d,
+        "n_samples": int(len(keep)),
+        "n_groups": len(set(groups)),
+        "n_skipped_no_program": n_no_prog,
+        "n_skipped_bad": n_bad,
+        "targets": sorted({g[1] for g in groups}),
+        "env_fps": sorted(envs),
+        "modes": sorted(modes),
+        "ridge_lambda": float(ridge_lambda),
+        "min_group": int(min_group),
+        "spearman_fit": float(fit_rho),
+    }
+    if extra_meta:
+        meta.update(extra_meta)
+    return LearnedModel(
+        weights=w, intercept=intercept, mean=mean, std=std,
+        lo=Xs.min(axis=0), hi=Xs.max(axis=0),
+        feature_names=FEATURE_NAMES, ridge_lambda=float(ridge_lambda),
+        meta=meta, fallback_log_scale=fallback_log_scale)
+
+
+def grouped_spearman(preds: list[float], ys: list[float],
+                     groups: list) -> float:
+    """Mean per-group Spearman over groups with >= 2 rows (0.0 when no
+    group qualifies) — the fit-quality number the artifact meta and the
+    trainer CLI report."""
+    from repro.measure.calibrate import spearman
+    by: dict = {}
+    for p, t, g in zip(preds, ys, groups):
+        by.setdefault(g, []).append((p, t))
+    rhos = [spearman([p for p, _ in rows], [t for _, t in rows])
+            for rows in by.values() if len(rows) >= 2]
+    return float(sum(rhos) / len(rhos)) if rhos else 0.0
+
+
+# ---------------------------------------------------------------------------
+# the drop-in cost model
+# ---------------------------------------------------------------------------
+
+class LearnedCostModel:
+    """Drop-in pricing model backed by a fitted ``LearnedModel``.
+
+    Same duck type as ``CalibratedCostModel`` (``program_cost`` /
+    ``total_s``), so it slots behind ``TranspositionStore(cost_model=)``
+    and ``OptimizeConfig.cost_model`` unchanged.  Pricing:
+
+    * **no model attached** (``LearnedCostModel()``, or ``load`` on a
+      missing artifact) — bit-identical to the analytic roofline;
+    * **prediction declined** (featurization error, feature-schema
+      drift, out-of-distribution vector) — analytic scaled by the
+      model's ``fallback_log_scale`` (the training-set mean measured/
+      analytic offset) so the program stays on the measured-seconds
+      scale and rankable against its predicted siblings; counted in
+      ``stats["fallbacks"]``;
+    * otherwise the program's groups are scaled uniformly so the total
+      equals ``exp(predicted log-time)``, clamped to within
+      ``LOG_ANCHOR_CLIP`` nats of the analytic total.
+    """
+
+    def __init__(self, model: LearnedModel | None = None):
+        self.model = model
+        self.stats = {"predicted": 0, "fallbacks": 0}
+
+    @property
+    def meta(self) -> dict:
+        return dict(self.model.meta) if self.model is not None else {}
+
+    def program_cost(self, prog: KernelProgram, target=None
+                     ) -> ProgramCost:
+        tgt = hardware.resolve(target)
+        base = cost_model.program_cost(prog, tgt)
+        if self.model is None:
+            return base
+        try:
+            pred = self.model.predict_log_s(featurize(prog, tgt))
+        except Exception:
+            pred = None
+        anchor = math.log(max(base.total_s, 1e-12))
+        if pred is None:
+            self.stats["fallbacks"] += 1
+            pred = anchor + self.model.fallback_log_scale
+        else:
+            self.stats["predicted"] += 1
+        pred = min(max(pred, anchor - LOG_ANCHOR_CLIP),
+                   anchor + LOG_ANCHOR_CLIP)
+        scale = math.exp(pred) / max(base.total_s, 1e-12)
+        groups = tuple(
+            dataclasses.replace(g, time_s=g.time_s * scale,
+                                compute_s=g.compute_s * scale,
+                                memory_s=g.memory_s * scale)
+            for g in base.groups)
+        return ProgramCost(sum(g.time_s for g in groups), groups,
+                           tgt.name)
+
+    def total_s(self, prog: KernelProgram, target=None) -> float:
+        return self.program_cost(prog, target).total_s
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        if self.model is None:
+            raise ValueError("no fitted model to save")
+        self.model.save(path)
+
+    @classmethod
+    def load(cls, path: str, *, missing_ok: bool = True
+             ) -> LearnedCostModel:
+        """Load an artifact; a missing file yields the identity
+        (analytic) model when ``missing_ok`` — the contract that lets
+        every entry point name an artifact path unconditionally."""
+        if not os.path.exists(path):
+            if missing_ok:
+                return cls(None)
+            raise FileNotFoundError(path)
+        return cls(LearnedModel.load(path))
+
+
+def resolve_cost_model(spec):
+    """``OptimizeConfig.cost_model`` resolution: instances (anything
+    with ``program_cost``) and ``None`` pass through; spec strings make
+    the model addressable from configs that cross pickle/process
+    boundaries (service + fleet):
+
+      ``"analytic"``           -> None (the default pricing)
+      ``"learned:PATH"``       -> ``LearnedCostModel.load(PATH)``
+                                  (missing artifact = analytic identity)
+      ``"calibrated:PATH"``    -> ``CalibratedCostModel`` over the
+                                  ``Calibration`` JSON at PATH
+    """
+    if spec is None or not isinstance(spec, str):
+        return spec
+    if spec == "analytic":
+        return None
+    if spec.startswith("learned:"):
+        return LearnedCostModel.load(spec.split(":", 1)[1])
+    if spec.startswith("calibrated:"):
+        from repro.measure.calibrate import (CalibratedCostModel,
+                                             Calibration)
+        return CalibratedCostModel(
+            Calibration.load(spec.split(":", 1)[1]))
+    raise ValueError(
+        f"unknown cost_model spec {spec!r}; expected 'analytic', "
+        f"'learned:PATH', 'calibrated:PATH', or a model instance")

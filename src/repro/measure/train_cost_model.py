@@ -1,0 +1,77 @@
+"""Fit a ``LearnedCostModel`` artifact from MeasureDB directories.
+
+    PYTHONPATH=src python -m repro.measure.train_cost_model \
+        results/measure_db --out results/learned_cost_model.pkl
+
+Samples are exported through ``MeasureDB.iter_samples`` (deterministic
+order, corrupt records skipped+counted), filtered by ``--target`` /
+``--env-fp`` when given, and fit with the group-normalized ridge of
+``measure/learned.py``.  Exits non-zero when nothing trainable survives
+(no program-embedding samples, or no candidate group with >= 2 of
+them), so CI catches an accidentally empty DB instead of committing an
+identity artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.measure.train_cost_model",
+        description="fit a learned cost model from MeasureDB samples")
+    ap.add_argument("dbs", nargs="+", metavar="DB",
+                    help="MeasureDB directory (repeatable)")
+    ap.add_argument("--out", required=True,
+                    help="artifact path (.pkl)")
+    ap.add_argument("--target", default=None,
+                    help="only samples priced for this hardware target")
+    ap.add_argument("--env-fp", default=None,
+                    help="only samples from this env fingerprint")
+    ap.add_argument("--ridge", type=float, default=1.0,
+                    help="ridge regularization lambda (default 1.0)")
+    ap.add_argument("--min-group", type=int, default=2,
+                    help="min samples per (task,target,env) group")
+    ap.add_argument("--allow-mixed-envs", action="store_true",
+                    help="permit samples spanning env fingerprints "
+                         "(group normalization makes them rankable; "
+                         "absolute scale averages regimes)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.measure.db import MeasureDB
+    from repro.measure.learned import fit_learned_model
+
+    def samples():
+        for root in args.dbs:
+            yield from MeasureDB(root).iter_samples(
+                target=args.target, env_fp=args.env_fp)
+
+    try:
+        model = fit_learned_model(
+            samples(), ridge_lambda=args.ridge,
+            min_group=args.min_group,
+            allow_mixed_envs=args.allow_mixed_envs,
+            extra_meta={"dbs": sorted(args.dbs)})
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if model is None:
+        print("error: no trainable samples (need program-embedding "
+              "samples in groups of >= 2 per (task, target, env))",
+              file=sys.stderr)
+        return 1
+    model.save(args.out)
+    if not args.quiet:
+        m = model.meta
+        print(f"wrote {args.out}: {m['n_samples']} samples / "
+              f"{m['n_groups']} groups, targets={m['targets']}, "
+              f"fit rho={m['spearman_fit']:.3f} "
+              f"(skipped: {m['n_skipped_no_program']} without program, "
+              f"{m['n_skipped_bad']} bad)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,517 @@
+"""Learned cost model (measure/learned.py, DESIGN.md §17).
+
+Covers: the featurizer contract (golden vectors, permutation
+invariance, never-raises over the committed suites x the legal action
+space), the ridge fit + artifact round trip, fallback semantics (no
+model = analytic identity; out-of-distribution = scaled analytic),
+spec resolution into every entry point (``OptimizeConfig.cost_model``,
+``get_reward_source``), the trainer CLI, and the committed
+``tests/fixtures/learned_db`` training fixture.
+
+Golden/fixture regeneration: ``REPRO_BLESS=1 pytest tests/test_learned.py``.
+The fixture DB's wall times are a fixed log-linear function of the
+feature vector — no clock is involved, so regeneration is deterministic
+and the ridge can recover the function (fit rho ~ 1), which is exactly
+what makes the fixture a meaningful CI training corpus.
+"""
+import json
+import math
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import actions as A, cost_model, hardware, tasks as T
+from repro.core.engine import TranspositionStore
+from repro.core.env import LearnedRewardSource, get_reward_source
+from repro.core.kernel_ir import chain_program, program_from_json, \
+    program_to_json
+from repro.core.micro_coding import StructuredMicroCoder
+from repro.core.search import BeamSearch
+from repro.measure.db import MeasureDB, MeasureSample
+from repro.measure.learned import (FEATURE_NAMES, FEATURE_VERSION,
+                                   LearnedCostModel, LearnedModel,
+                                   featurize, fit_learned_model,
+                                   grouped_spearman, resolve_cost_model)
+
+HERE = os.path.dirname(__file__)
+FIXTURE_DB = os.path.join(HERE, "fixtures", "learned_db")
+GOLDEN = os.path.join(HERE, "golden", "learned", "features.json")
+
+_FIXTURE_TASKS = ("L1_matmul_0", "L1_rmsnorm", "L2_gemm_bias_relu")
+_FIXTURE_TARGETS = ("tpu_v5e", "gpu_a100")
+# frozen fingerprints: the fixture must train on any machine/jax, so it
+# never goes through env_fingerprint() (which hashes the live backend)
+_FIXTURE_ENV_FP = {"tpu_v5e": "learnedfx-tpu0",
+                   "gpu_a100": "learnedfx-gpu0"}
+_FIXTURE_TOP_K = 4
+
+
+def _round12(vec):
+    return [float(f"{float(v):.12g}") for v in vec]
+
+
+def _by_name():
+    return {t.name: t for t in T.kb_level1() + T.kb_level2()}
+
+
+def _synthetic_time_s(prog, target) -> float:
+    """Deterministic stand-in wall clock: a fixed log-linear function
+    of the feature vector (learnable by the ridge, stable across
+    machines up to libm ulps, absorbed by the 9-sig-digit round)."""
+    x = featurize(prog, target)
+    i = {n: j for j, n in enumerate(FEATURE_NAMES)}
+    # terms chosen to vary WITHIN a task's beam candidates (pipeline
+    # depth, loop order, grid shape), so every fixture group carries
+    # ranking signal instead of ties
+    log_t = (float(x[i["log_analytic_s"]]) + 7.5
+             + 0.35 * float(x[i["log_grid_cells"]])
+             - 0.015 * float(x[i["min_eff_tile"]])
+             + 0.4 * float(x[i["frac_divisible"]])
+             + 0.15 * float(x[i["mean_pipeline_depth"]])
+             + 0.3 * float(x[i["frac_reordered"]]))
+    return float(f"{math.exp(log_t):.9g}")
+
+
+def _fixture_samples(target: str) -> list[MeasureSample]:
+    tgt = hardware.resolve(target)
+    by_name = _by_name()
+    store = TranspositionStore()
+    coder = StructuredMicroCoder()
+    out = []
+    for name in _FIXTURE_TASKS:
+        task = by_name[name]
+        res = BeamSearch().search(task, coder=coder, store=store,
+                                  target=target, max_steps=3)
+        progs = [p for _, p in res.candidates[:_FIXTURE_TOP_K]]
+        assert len(progs) >= 2, f"{name}: not enough candidates"
+        for p in progs:
+            t = _synthetic_time_s(p, tgt)
+            pc = cost_model.program_cost(p, tgt)
+            out.append(MeasureSample(
+                task_fp=task.fingerprint(), prog_fp=p.fingerprint(),
+                target=tgt.name, env_fp=_FIXTURE_ENV_FP[target],
+                time_s=t, samples=(t,), n_rejected=0, mode="fixture",
+                analytic_s=pc.total_s,
+                bottleneck=pc.bottleneck.split(":")[-1],
+                env=(("backend", "fixture"), ("mode", "fixture"),
+                     ("target", tgt.name)),
+                program=program_to_json(p)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# featurizer contract
+# ---------------------------------------------------------------------------
+
+def test_feature_names_schema():
+    assert len(FEATURE_NAMES) == len(set(FEATURE_NAMES))
+    for t in T.kb_level1()[:2]:
+        x = featurize(t, "tpu_v5e")
+        assert x.shape == (len(FEATURE_NAMES),)
+        assert np.all(np.isfinite(x))
+
+
+def test_golden_feature_vectors():
+    """Feature extraction is part of the artifact contract: a committed
+    model's weights only mean something against the exact vectors they
+    were fit on.  12 significant digits on both sides absorbs libm
+    1-ulp drift while catching any real featurizer change."""
+    by_name = _by_name()
+    cases = {}
+    for name, target in [("L1_matmul_0", "tpu_v5e"),
+                         ("L1_rmsnorm", "tpu_v5e"),
+                         ("L1_attention", "gpu_a100"),
+                         ("L2_gemm_bias_relu", "gpu_a100")]:
+        cases[f"{name}__{target}"] = _round12(
+            featurize(by_name[name], target))
+    if os.environ.get("REPRO_BLESS"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump({"feature_version": FEATURE_VERSION,
+                       "feature_names": list(FEATURE_NAMES),
+                       "vectors": cases}, f, indent=1, sort_keys=True)
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert golden["feature_version"] == FEATURE_VERSION
+    assert golden["feature_names"] == list(FEATURE_NAMES)
+    for key, vec in cases.items():
+        assert golden["vectors"][key] == vec, \
+            f"{key}: featurizer drifted (REPRO_BLESS=1 to re-bless " \
+            f"AND retrain committed artifacts)"
+
+
+def test_featurize_input_order_invariant():
+    p1 = chain_program("perm", {"a": (128, 64), "b": (64, 32)},
+                       [("y", "matmul", ("a", "b"))])
+    p2 = chain_program("perm", {"b": (64, 32), "a": (128, 64)},
+                       [("y", "matmul", ("a", "b"))])
+    for target in _FIXTURE_TARGETS:
+        assert np.array_equal(featurize(p1, target),
+                              featurize(p2, target))
+
+
+def test_featurize_parallel_chain_order_invariant():
+    """Two independent fused chains contribute order-invariant
+    aggregates: listing them in either order gives the same vector."""
+    ops1 = [("u", "relu", ("a",)), ("v", "gelu", ("b",))]
+    ops2 = [("v", "gelu", ("b",)), ("u", "relu", ("a",))]
+    inputs = {"a": (256, 128), "b": (256, 128)}
+    p1 = chain_program("par", inputs, ops1, outputs=("u", "v"))
+    p2 = chain_program("par", inputs, ops2, outputs=("u", "v"))
+    assert np.array_equal(featurize(p1, "tpu_v5e"),
+                          featurize(p2, "tpu_v5e"))
+
+
+_SUITE = None
+
+
+def _suite():
+    global _SUITE
+    if _SUITE is None:
+        _SUITE = T.kb_level1() + T.kb_level2()
+    return _SUITE
+
+
+def test_featurize_never_raises_over_action_space():
+    """Featurization must accept anything the legal action space can
+    produce on the committed suites — the cost model sits inside the
+    search loop, where a throw would kill the whole optimization."""
+    coder = StructuredMicroCoder()
+    for task in _suite():
+        acts = A.candidate_actions(task, target="tpu_v5e",
+                                   extended=True)
+        for act in acts[:6]:
+            res = coder.apply(task, act)
+            prog = res.program if res.status == "ok" else task
+            for target in _FIXTURE_TARGETS:
+                x = featurize(prog, target)
+                assert x.shape == (len(FEATURE_NAMES),)
+                assert np.all(np.isfinite(x))
+
+
+# ---------------------------------------------------------------------------
+# fixture DB + fit
+# ---------------------------------------------------------------------------
+
+def test_fixture_db_blessed_and_trainable():
+    if os.environ.get("REPRO_BLESS"):
+        db = MeasureDB(FIXTURE_DB)
+        db.clear()
+        for target in _FIXTURE_TARGETS:
+            for s in _fixture_samples(target):
+                db.put(s)
+    db = MeasureDB(FIXTURE_DB)
+    samples = list(db.iter_samples())
+    assert len(samples) == (len(_FIXTURE_TASKS) * _FIXTURE_TOP_K
+                            * len(_FIXTURE_TARGETS))
+    assert all(s.program is not None for s in samples)
+    # embedded programs round-trip to their recorded fingerprints
+    for s in samples[:4]:
+        assert program_from_json(s.program).fingerprint() == s.prog_fp
+    model = fit_learned_model(samples, allow_mixed_envs=True)
+    assert model is not None
+    m = model.meta
+    assert m["n_samples"] == len(samples)
+    assert m["targets"] == sorted(_FIXTURE_TARGETS)
+    assert sorted(m["env_fps"]) == sorted(_FIXTURE_ENV_FP.values())
+    # the synthetic times are a log-linear feature function: the ridge
+    # must essentially recover it (exact rho 1.0 is unreachable — some
+    # beam candidates are feature-identical, so their synthetic times
+    # tie and the untied spearman pays for it)
+    assert m["spearman_fit"] > 0.8
+
+
+def test_fixture_db_regeneration_matches_committed():
+    """The generator in this file reproduces the committed fixture
+    byte-for-byte (modulo nothing): candidates, synthetic times and
+    serialization are all deterministic."""
+    db = MeasureDB(FIXTURE_DB)
+    committed = {(s.task_fp, s.prog_fp, s.target): s
+                 for s in db.iter_samples()}
+    for target in _FIXTURE_TARGETS:
+        for s in _fixture_samples(target):
+            got = committed.pop((s.task_fp, s.prog_fp, s.target))
+            assert got.to_json() == s.to_json()
+    assert not committed
+
+
+def test_fixture_fit_single_env_needs_no_flag():
+    db = MeasureDB(FIXTURE_DB)
+    model = fit_learned_model(db.iter_samples(target="tpu_v5e"))
+    assert model is not None
+    assert model.meta["targets"] == ["tpu_v5e"]
+
+
+def test_fit_refuses_mixed_envs_by_default():
+    db = MeasureDB(FIXTURE_DB)
+    with pytest.raises(ValueError, match="env"):
+        fit_learned_model(db.iter_samples())
+
+
+def test_fit_skips_program_less_and_returns_none_when_empty():
+    db = MeasureDB(FIXTURE_DB)
+    bare = [MeasureSample(
+        task_fp=s.task_fp, prog_fp=s.prog_fp, target=s.target,
+        env_fp=s.env_fp, time_s=s.time_s, samples=s.samples,
+        n_rejected=0, mode=s.mode, analytic_s=s.analytic_s,
+        bottleneck=s.bottleneck) for s in db.iter_samples()]
+    assert fit_learned_model(bare, allow_mixed_envs=True) is None
+
+
+def test_grouped_spearman_is_per_group():
+    # two groups with opposite global trends but perfect internal rank
+    preds = [1.0, 2.0, 3.0, 11.0, 12.0, 13.0]
+    ys = [10.0, 20.0, 30.0, 1.0, 2.0, 3.0]
+    groups = ["a", "a", "a", "b", "b", "b"]
+    assert grouped_spearman(preds, ys, groups) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# model semantics: identity, prediction, fallback
+# ---------------------------------------------------------------------------
+
+def _fixture_model() -> LearnedModel:
+    return fit_learned_model(MeasureDB(FIXTURE_DB).iter_samples(),
+                             allow_mixed_envs=True)
+
+
+def test_no_model_is_analytic_identity():
+    lcm = LearnedCostModel()
+    for task in _suite()[:3]:
+        base = cost_model.program_cost(task, "tpu_v5e")
+        got = lcm.program_cost(task, "tpu_v5e")
+        assert got.total_s == base.total_s
+        assert [g.time_s for g in got.groups] == \
+            [g.time_s for g in base.groups]
+    assert lcm.stats == {"predicted": 0, "fallbacks": 0}
+
+
+def test_missing_artifact_loads_as_identity(tmp_path):
+    lcm = LearnedCostModel.load(str(tmp_path / "nope.pkl"))
+    assert lcm.model is None and lcm.meta == {}
+    with pytest.raises(FileNotFoundError):
+        LearnedCostModel.load(str(tmp_path / "nope.pkl"),
+                              missing_ok=False)
+
+
+def test_model_predicts_in_distribution_and_scales_groups():
+    model = _fixture_model()
+    lcm = LearnedCostModel(model)
+    task = _by_name()["L1_matmul_0"]
+    pc = lcm.program_cost(task, "tpu_v5e")
+    assert lcm.stats["predicted"] == 1 and lcm.stats["fallbacks"] == 0
+    pred = model.predict_log_s(featurize(task, "tpu_v5e"))
+    assert pc.total_s == pytest.approx(math.exp(pred), rel=1e-9)
+    # groups scale uniformly: their sum is the prediction
+    assert sum(g.time_s for g in pc.groups) == pytest.approx(
+        pc.total_s, rel=1e-9)
+
+
+def test_ood_fallback_is_scaled_analytic():
+    """A model whose training envelope excludes everything must fall
+    back — to analytic LIFTED by fallback_log_scale, so an OOD program
+    stays on the measured-seconds scale and rankable against predicted
+    siblings (not ~e^8 cheaper)."""
+    d = len(FEATURE_NAMES)
+    model = LearnedModel(
+        weights=np.zeros(d), intercept=0.0, mean=np.full(d, 1e9),
+        std=np.ones(d), lo=np.zeros(d), hi=np.zeros(d),
+        feature_names=FEATURE_NAMES, ridge_lambda=1.0,
+        meta={"kind": "learned_cost_model"}, fallback_log_scale=2.0)
+    lcm = LearnedCostModel(model)
+    task = _by_name()["L1_matmul_0"]
+    base = cost_model.program_cost(task, "tpu_v5e")
+    got = lcm.program_cost(task, "tpu_v5e")
+    assert lcm.stats["fallbacks"] == 1
+    assert got.total_s == pytest.approx(base.total_s * math.exp(2.0),
+                                        rel=1e-9)
+
+
+def test_schema_drift_declines_prediction():
+    model = _fixture_model()
+    stale = LearnedModel(
+        weights=model.weights, intercept=model.intercept,
+        mean=model.mean, std=model.std, lo=model.lo, hi=model.hi,
+        feature_names=("bogus",) + model.feature_names[1:],
+        ridge_lambda=model.ridge_lambda, meta=model.meta)
+    assert stale.predict_log_s(
+        featurize(_by_name()["L1_matmul_0"], "tpu_v5e")) is None
+
+
+def test_ood_tolerates_few_but_not_many_outliers():
+    model = _fixture_model()
+    x = featurize(_by_name()["L1_matmul_0"], "tpu_v5e").copy()
+    assert model.predict_log_s(x) is not None
+    # a couple of coordinates far out of range: still extrapolates
+    x2 = x.copy()
+    x2[:2] = 1e9
+    assert model.predict_log_s(x2) is not None
+    # an alien vector: declines
+    assert model.predict_log_s(np.full(len(x), 1e9)) is None
+
+
+# ---------------------------------------------------------------------------
+# artifact persistence
+# ---------------------------------------------------------------------------
+
+def test_artifact_round_trip_is_deterministic(tmp_path):
+    """Two independent fits of the same data serialize byte-identically
+    (retraining in CI is reproducible), and load -> save is idempotent.
+    The two halves are checked separately because a FIRST save may
+    legally differ in pickle memo refs from a re-save: a freshly fit
+    blob shares interned string objects the unpickled one does not."""
+    p = [str(tmp_path / f"{i}.pkl") for i in range(4)]
+    model = _fixture_model()
+    model.save(p[0])
+    _fixture_model().save(p[1])
+    with open(p[0], "rb") as f0, open(p[1], "rb") as f1:
+        assert f0.read() == f1.read()
+    LearnedModel.load(p[0]).save(p[2])
+    LearnedModel.load(p[2]).save(p[3])
+    with open(p[2], "rb") as f2, open(p[3], "rb") as f3:
+        assert f2.read() == f3.read()
+    loaded = LearnedModel.load(p[2])
+    x = featurize(_by_name()["L1_rmsnorm"], "tpu_v5e")
+    assert loaded.predict_log_s(x) == model.predict_log_s(x)
+    with open(p[0], "rb") as f:
+        blob = pickle.load(f)
+    assert blob["kind"] == "learned_cost_model"
+    assert blob["meta"]["feature_version"] == FEATURE_VERSION
+
+
+def test_resolve_cost_model_specs(tmp_path):
+    from repro.measure.calibrate import (CalibratedCostModel,
+                                         Calibration)
+    assert resolve_cost_model(None) is None
+    assert resolve_cost_model("analytic") is None
+    lcm = LearnedCostModel()
+    assert resolve_cost_model(lcm) is lcm
+    path = str(tmp_path / "m.pkl")
+    _fixture_model().save(path)
+    got = resolve_cost_model(f"learned:{path}")
+    assert isinstance(got, LearnedCostModel)
+    assert got.meta["kind"] == "learned_cost_model"
+    # missing artifact = analytic identity, never an error
+    absent = resolve_cost_model(f"learned:{tmp_path}/absent.pkl")
+    assert isinstance(absent, LearnedCostModel) and absent.model is None
+    cal = Calibration(((("tpu_v5e", "memory"), 2.0),),
+                      ((("tpu_v5e", "memory"), 4),))
+    cal_path = str(tmp_path / "cal.json")
+    cal.save(cal_path)
+    got = resolve_cost_model(f"calibrated:{cal_path}")
+    assert isinstance(got, CalibratedCostModel)
+    with pytest.raises(ValueError, match="cost_model spec"):
+        resolve_cost_model("bogus")
+
+
+# ---------------------------------------------------------------------------
+# entry points: OptimizeConfig / engine / pipeline / reward source
+# ---------------------------------------------------------------------------
+
+def test_engine_resolves_spec_once_store_and_config_share(tmp_path):
+    from repro.core import EvalEngine, OptimizeConfig
+    path = str(tmp_path / "m.pkl")
+    _fixture_model().save(path)
+    eng = EvalEngine(config=OptimizeConfig(
+        mode="greedy_cost", max_steps=2, validate=False,
+        cost_model=f"learned:{path}"))
+    cm = eng.config.cost_model
+    assert isinstance(cm, LearnedCostModel)
+    assert eng.store.cost_model is cm
+    task = _by_name()["L1_matmul_0"]
+    r = eng.optimize(task)
+    assert r.speedup > 0
+
+
+def test_pipeline_resolves_spec(tmp_path):
+    from repro.core import MTMCPipeline, OptimizeConfig
+    path = str(tmp_path / "m.pkl")
+    _fixture_model().save(path)
+    pipe = MTMCPipeline(config=OptimizeConfig(
+        mode="greedy_cost", max_steps=2, validate=False,
+        cost_model=f"learned:{path}"))
+    assert isinstance(pipe.config.cost_model, LearnedCostModel)
+
+
+def test_reward_source_learned_specs(tmp_path):
+    path = str(tmp_path / "m.pkl")
+    _fixture_model().save(path)
+    rs = get_reward_source(f"learned:{path}")
+    assert isinstance(rs, LearnedRewardSource)
+    task = _by_name()["L1_matmul_0"]
+    assert rs.cost(task, task, "tpu_v5e") > 0
+    # bare "learned": fit live from a DB
+    rs2 = get_reward_source("learned", db=MeasureDB(FIXTURE_DB))
+    assert isinstance(rs2, LearnedRewardSource)
+    assert rs2.model.model is not None
+    with pytest.raises(ValueError, match="db"):
+        get_reward_source("learned")
+
+
+# ---------------------------------------------------------------------------
+# trainer CLI
+# ---------------------------------------------------------------------------
+
+def test_train_cli_fits_from_fixture(tmp_path, capsys):
+    from repro.measure.train_cost_model import main
+    out = str(tmp_path / "model.pkl")
+    rc = main([FIXTURE_DB, "--out", out, "--allow-mixed-envs"])
+    assert rc == 0
+    lcm = LearnedCostModel.load(out, missing_ok=False)
+    assert lcm.meta["dbs"] == [FIXTURE_DB]
+    assert "samples" in capsys.readouterr().out
+
+
+def test_train_cli_mixed_envs_refused_without_flag(tmp_path):
+    from repro.measure.train_cost_model import main
+    rc = main([FIXTURE_DB, "--out", str(tmp_path / "m.pkl")])
+    assert rc == 2
+
+
+def test_train_cli_target_filter_single_env(tmp_path):
+    from repro.measure.train_cost_model import main
+    out = str(tmp_path / "m.pkl")
+    rc = main([FIXTURE_DB, "--out", out, "--target", "gpu_a100"])
+    assert rc == 0
+    assert LearnedCostModel.load(out).meta["targets"] == ["gpu_a100"]
+
+
+def test_train_cli_empty_db_fails(tmp_path):
+    from repro.measure.train_cost_model import main
+    empty = str(tmp_path / "empty_db")
+    MeasureDB(empty)
+    rc = main([empty, "--out", str(tmp_path / "m.pkl")])
+    assert rc == 1
+    assert not os.path.exists(str(tmp_path / "m.pkl"))
+
+
+# ---------------------------------------------------------------------------
+# analysis lint --artifact sweep
+# ---------------------------------------------------------------------------
+
+def test_lint_accepts_good_artifact_and_rejects_stale(tmp_path):
+    from repro.analysis.lint import main as lint_main
+    path = str(tmp_path / "m.pkl")
+    _fixture_model().save(path)
+    assert lint_main(["--artifact", path, "-q"]) == 0
+    # stale feature schema: must fail, loudly
+    blob = pickle.load(open(path, "rb"))
+    blob["meta"]["feature_version"] = FEATURE_VERSION + 1
+    stale = str(tmp_path / "stale.pkl")
+    with open(stale, "wb") as f:
+        pickle.dump(blob, f)
+    assert lint_main(["--artifact", stale, "-q"]) != 0
+    # non-finite weights: must fail
+    blob = pickle.load(open(path, "rb"))
+    blob["weights"] = np.full_like(np.asarray(blob["weights"]), np.nan)
+    bad = str(tmp_path / "bad.pkl")
+    with open(bad, "wb") as f:
+        pickle.dump(blob, f)
+    assert lint_main(["--artifact", bad, "-q"]) != 0
+    # unreadable: must fail
+    trunc = str(tmp_path / "trunc.pkl")
+    with open(trunc, "wb") as f:
+        f.write(b"\x80")
+    assert lint_main(["--artifact", trunc, "-q"]) != 0

@@ -486,6 +486,98 @@ def test_service_stats_expose_measure_counters_without_measurer():
         and st["db_misses"] == 0 and st["warm_starts"] == 0
 
 
+def test_calibration_bucket_report_and_fitted_flags():
+    """Per-bucket sample counts make a degenerate fit VISIBLE: a bucket
+    under min_samples reports 'fallback' and fitted() is False, so a
+    whole-target no-op calibration (the gpu_a100 case) cannot pass for
+    a real fit in measure_bench output."""
+    samples = [_sample(task_fp=f"t{i}", prog_fp=f"p{i}",
+                       time_s=2e-3 * (i + 1), analytic_s=1e-3 * (i + 1),
+                       bottleneck="memory") for i in range(3)]
+    samples.append(_sample(task_fp="tc", prog_fp="pc", time_s=1e-3,
+                           analytic_s=1e-3, bottleneck="compute"))
+    fit = fit_calibration(samples)
+    assert fit.fitted("tpu_v5e", "memory")
+    assert not fit.fitted("tpu_v5e", "compute")      # n=1 < min_samples
+    assert not fit.fitted("gpu_a100", "memory")      # unseen bucket
+    assert fit.count_map[("tpu_v5e", "memory")] == 3
+    report = fit.bucket_report("tpu_v5e")
+    assert any("memory" in ln and "(n=3, fitted)" in ln
+               for ln in report)
+    assert any("compute" in ln and "(n=1, fallback)" in ln
+               for ln in report)
+    # a single-sample bucket keeps the identity factor, not a 1-point fit
+    assert fit.factor("tpu_v5e", "compute") == 1.0
+
+
+def test_calibration_from_json_backward_compat():
+    """Pre-min_samples JSON (older committed calibrations) loads with
+    the default threshold instead of KeyError."""
+    fit = Calibration(factors=((("tpu_v5e", "memory"), 2.0),),
+                      n_samples=((("tpu_v5e", "memory"), 4),))
+    d = fit.to_json()
+    del d["min_samples"]
+    loaded = Calibration.from_json(d)
+    assert loaded.min_samples == 2
+    assert loaded.fitted("tpu_v5e", "memory")
+
+
+def test_iter_samples_deterministic_and_counts_corrupt(tmp_path):
+    db = MeasureDB(str(tmp_path / "db"))
+    for i in range(4):
+        db.put(_sample(task_fp=f"t{i}", prog_fp=f"p{i}",
+                       env_fp="e0" if i < 2 else "e1"))
+    # one torn file and one well-formed JSON missing sample fields
+    sdir = os.path.join(db.path, "samples")
+    with open(os.path.join(sdir, "aaaa.json"), "w") as f:
+        f.write("{not json")
+    with open(os.path.join(sdir, "bbbb.json"), "w") as f:
+        f.write('{"task_fp": "orphan"}')
+    got = [s.task_fp for s in db.iter_samples()]
+    assert sorted(got) == ["t0", "t1", "t2", "t3"]
+    assert db.stats_dict()["corrupt_records"] == 2
+    assert got == [s.task_fp for s in db.iter_samples()]   # stable order
+    assert [s.task_fp for s in db.iter_samples(env_fp="e1")] \
+        == sorted(["t2", "t3"])
+    assert db.env_fps() == ["e0", "e1"]
+    assert db.env_fps(target="gpu_a100") == []
+
+
+def test_sample_json_omits_absent_program():
+    """Byte-stability for pre-§17 fixtures: a program-less sample's JSON
+    has no 'program' key at all (old committed files round-trip
+    unchanged), while an embedded program survives the round trip."""
+    bare = _sample()
+    assert "program" not in bare.to_json()
+    assert MeasureSample.from_json(bare.to_json()).program is None
+    prog = _tiny_matmul()
+    rich = MeasureSample(
+        task_fp="t", prog_fp=prog.fingerprint(), target="tpu_v5e",
+        env_fp="e", time_s=1e-3, samples=(1e-3,), n_rejected=0,
+        mode="xla", analytic_s=1e-3, bottleneck="compute",
+        program=program_to_json(prog))
+    back = MeasureSample.from_json(rich.to_json())
+    assert program_from_json(back.program).fingerprint() == \
+        prog.fingerprint()
+
+
+def test_harness_embeds_program_in_samples(tmp_path):
+    """measure() writes self-contained training data: the sample's
+    embedded program round-trips to the measured program's
+    fingerprint (DESIGN.md §17)."""
+    db = MeasureDB(str(tmp_path / "db"))
+    h = ExecutionHarness(db=db, runner=lambda task, prog, tgt: 1e-3)
+    task = _tiny_matmul()
+    s = h.measure(task, task, target="tpu_v5e")
+    assert s.program is not None
+    assert program_from_json(s.program).fingerprint() == \
+        task.fingerprint()
+    # and it persists through the DB round trip
+    (stored,) = list(db.iter_samples())
+    assert program_from_json(stored.program).fingerprint() == \
+        task.fingerprint()
+
+
 def test_fixture_db_winner_loads():
     """The committed fixture's winner record round-trips into a program
     with the live task's fingerprint (serialization stability)."""
